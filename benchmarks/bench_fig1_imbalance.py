@@ -1,0 +1,46 @@
+"""Fig. 1 analogue: baseline SpMM throughput vs. matrix aspect ratio.
+
+The paper's microbenchmark: fixed ~16.7M nnz, matrices from (2 rows ×
+8.3M nnz/row) to (8.3M rows × 2 nnz/row), multiplied by a 64-column dense
+B with the *vendor* SpMM.  Our vendor stand-in is the unblocked XLA
+gather/segment-sum SpMM (``ref.spmm_gather_ref``), and we scale nnz to CPU
+budgets.  Type 1 imbalance appears on the right (few long rows), Type 2 on
+the left (many short rows) — for the vendor baseline; the merge kernel's
+flat profile across the sweep is the paper's headline effect.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.core import spmm
+from repro.kernels import ref
+from .common import geomean, make_b, make_matrix, timeit
+
+TOTAL_NNZ = 1 << 18
+N = 64
+
+
+def run(csv=print):
+    csv("name,us_per_call,derived")
+    rows = []
+    for log_m in range(4, 15, 2):
+        m = 1 << log_m
+        npr = max(1, TOTAL_NNZ // m)
+        k = max(m, 2 * npr)
+        a = make_matrix(0, m, k, nnz_per_row=npr)
+        b = make_b(1, k, N)
+        t_vendor = timeit(jax.jit(ref.spmm_gather_ref), a, b)
+        t_merge = timeit(functools.partial(
+            spmm, method="merge", impl="xla"), a, b)
+        gflops = 2 * TOTAL_NNZ * N / t_vendor / 1e3
+        csv(f"fig1_vendor_m{m},{t_vendor:.1f},{gflops:.2f}GF")
+        gflops_m = 2 * TOTAL_NNZ * N / t_merge / 1e3
+        csv(f"fig1_merge_m{m},{t_merge:.1f},{gflops_m:.2f}GF")
+        rows.append(t_vendor / t_merge)
+    csv(f"fig1_merge_vs_vendor_geomean,0,{geomean(rows):.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Fig. 4 analogue: row-split SpMM vs. the vendor baseline as a function of
+aspect ratio (fixed nnz budget, row length grows left→right).
+
+The paper: row-split loses on short rows (L ≪ 32 wastes lanes — here: ELL
+padding to the TL tile) and wins on long rows (ILP amortizes).  The
+derived column is speedup-vs-vendor; > 1 on the right, < 1 on the far
+left reproduces the paper's crossover shape.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.core import spmm
+from repro.kernels import ref
+from .common import make_b, make_matrix, timeit
+
+TOTAL_NNZ = 1 << 18
+N = 64
+
+
+def run(csv=print):
+    csv("name,us_per_call,derived")
+    for log_m in range(6, 15, 2):
+        m = 1 << log_m
+        npr = max(1, TOTAL_NNZ // m)
+        k = max(m, 2 * npr)
+        a = make_matrix(0, m, k, nnz_per_row=npr)
+        b = make_b(1, k, N)
+        t_vendor = timeit(jax.jit(ref.spmm_gather_ref), a, b)
+        t_rs = timeit(functools.partial(
+            spmm, method="rowsplit", impl="xla", l_pad=npr), a, b)
+        csv(f"fig4_rowsplit_len{npr},{t_rs:.1f},{t_vendor / t_rs:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Fig. 7 analogue: SpMM vs. dense GEMM as a function of density.
+
+The paper: on a 100k×100k random matrix × (100k×64) dense B, merge-based
+SpMM beats cuBLAS sgemm below ~9% density.  We sweep density on a
+CPU-budget matrix and report the crossover for this backend.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import spmm
+from .common import make_b, make_matrix, timeit
+
+M = K = 2048
+N = 64
+
+
+def run(csv=print):
+    csv("name,us_per_call,derived")
+    b = make_b(3, K, N)
+    dense_a = jax.random.normal(jax.random.PRNGKey(4), (M, K))
+    t_gemm = timeit(jax.jit(lambda a, bb: a @ bb), dense_a, b)
+    csv(f"fig7_dense_gemm,{t_gemm:.1f},1.00x")
+    crossover = None
+    for pct in (0.5, 1, 2, 4, 6, 9, 12, 16, 25):
+        a = make_matrix(5, M, K, density=pct / 100)
+        t_sp = timeit(functools.partial(spmm, method="merge", impl="xla"),
+                      a, b)
+        csv(f"fig7_spmm_d{pct}%,{t_sp:.1f},{t_gemm / t_sp:.2f}x")
+        if crossover is None and t_sp > t_gemm:
+            crossover = pct
+    csv(f"fig7_crossover_density,0,{crossover if crossover else '>25'}%")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Benchmark utilities: timing + synthetic matrix builders.
+
+Timing methodology: everything timed is jit-compiled XLA (``impl="xla"`` —
+the same dataflow the Pallas kernels implement, emulated on this CPU-only
+container; the Pallas bodies themselves are validated in interpret mode in
+tests/).  Relative behaviour — ELL padding waste for row-split, equal-work
+chunks + fix-up overhead for merge — is preserved, so crossovers and the
+heuristic calibration are meaningful on this backend.  Absolute numbers are
+CPU numbers; see EXPERIMENTS.md for the TPU roofline story.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CSR, random_csr
+
+
+def timeit(fn, *args, warmup: int = 2, repeat: int = 5) -> float:
+    """Median wall-time in µs of a jitted callable."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def make_matrix(seed: int, m: int, k: int, *, nnz_per_row=None,
+                density=None, irregular=False):
+    key = jax.random.PRNGKey(seed)
+    if irregular and nnz_per_row is not None and not isinstance(
+            nnz_per_row, tuple):
+        nnz_per_row = (0, 2 * nnz_per_row)
+    return random_csr(key, m, k, nnz_per_row=nnz_per_row, density=density)
+
+
+def make_b(seed: int, k: int, n: int, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(seed), (k, n), dtype)
+
+
+def geomean(x) -> float:
+    x = np.asarray(x, dtype=np.float64)
+    return float(np.exp(np.mean(np.log(x))))

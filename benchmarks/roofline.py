@@ -1,0 +1,126 @@
+"""Roofline analysis (deliverable g): three terms per (arch × shape × mesh)
+from the dry-run's compiled artifacts.
+
+    compute    = HLO_FLOPs_per_device            / peak_FLOPs      [197e12]
+    memory     = HLO_HBM_bytes_per_device        / HBM_bw          [819e9]
+    collective = collective_wire_bytes_per_device / link_bw        [50e9]
+
+FLOPs/bytes come from the trip-count-scaled HLO parse (launch/hlo_stats —
+``cost_analysis`` counts while bodies once and is useless for scanned
+graphs; the parse is validated against unrolled modules in
+tests/test_hlo_stats.py).  The dominant term is the bottleneck; the
+"useful" ratio MODEL_FLOPS / (HLO_FLOPs × chips) catches remat/padding/
+overcompute waste.
+
+    python -m benchmarks.roofline [--dir results/dryrun] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12      # bf16 / chip (TPU v5e)
+HBM_BW = 819e9           # B/s / chip
+LINK_BW = 50e9           # B/s / link (ICI)
+
+TOKENS = {"train_4k": 4096 * 256, "prefill_32k": 32768 * 32,
+          "decode_32k": 128, "long_500k": 1}
+
+
+def model_flops(rec) -> float:
+    """MODEL_FLOPS = 6·N·D (training) / 2·N·D (inference), N_active for
+    MoE — *global*, all chips."""
+    n = rec["model_params_active"]
+    d = TOKENS[rec["shape"]]
+    mult = 6 if rec["shape"].startswith("train") else 2
+    return mult * n * d
+
+
+def analyze(rec) -> dict:
+    chips = 512 if rec["mesh"] == "2x16x16" else 256
+    p = rec["hlo_parsed"]
+    terms = {
+        "compute_s": p["flops"] / PEAK_FLOPS,
+        "memory_s": p["hbm_bytes"] / HBM_BW,
+        "collective_s": p["collective_wire_bytes"] / LINK_BW,
+    }
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = model_flops(rec)
+    useful = mf / (p["flops"] * chips) if p["flops"] else 0.0
+    # roofline fraction: useful model compute per step over what the
+    # bottleneck term allows at peak
+    frac = (mf / chips / PEAK_FLOPS) / bound if bound else 0.0
+    return dict(rec=rec, terms=terms, dominant=dom.replace("_s", ""),
+                useful=useful, roofline_fraction=frac, chips=chips,
+                model_flops=mf)
+
+
+def suggestion(a) -> str:
+    dom = a["dominant"]
+    rec = a["rec"]
+    if dom == "collective":
+        if rec["shape"].startswith("train"):
+            return ("cut FSDP re-gathers: ZeRO-1 (replicate bf16 params "
+                    "over data, shard master/optimizer) or fewer "
+                    "microbatches")
+        return "shard params over fewer axes; batch decode requests"
+    if dom == "memory":
+        return ("fuse/remat less, larger microbatch, chunked-scan "
+                "recurrences to cut log-depth traffic")
+    return "already compute-bound: raise useful ratio (less remat/padding)"
+
+
+def load(dirname):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        r = json.load(open(f))
+        if r.get("ok") and "hlo_parsed" in r:
+            recs.append(r)
+    return recs
+
+
+def table(recs, md=False):
+    rows = []
+    for rec in recs:
+        a = analyze(rec)
+        rows.append((rec["arch"], rec["shape"], rec["mesh"],
+                     a["terms"]["compute_s"], a["terms"]["memory_s"],
+                     a["terms"]["collective_s"], a["dominant"],
+                     a["useful"], a["roofline_fraction"], suggestion(a)))
+    hdr = ("arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+           "bound", "useful", "roofline", "next-move")
+    if md:
+        print("| " + " | ".join(hdr) + " |")
+        print("|" + "---|" * len(hdr))
+        for r in rows:
+            print(f"| {r[0]} | {r[1]} | {r[2]} | {r[3]:.3g} | {r[4]:.3g} "
+                  f"| {r[5]:.3g} | {r[6]} | {r[7]:.2f} | {r[8]:.3f} "
+                  f"| {r[9]} |")
+    else:
+        print(f"{'arch':18s} {'shape':12s} {'mesh':8s} {'comp_s':>8s} "
+              f"{'mem_s':>8s} {'coll_s':>8s} {'bound':>10s} {'useful':>7s} "
+              f"{'roofline':>8s}")
+        for r in rows:
+            print(f"{r[0]:18s} {r[1]:12s} {r[2]:8s} {r[3]:8.3g} {r[4]:8.3g} "
+                  f"{r[5]:8.3g} {r[6]:>10s} {r[7]:7.2f} {r[8]:8.3f}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    if not recs:
+        print("no dry-run records found; run python -m repro.launch.dryrun")
+        return 1
+    table(recs, md=args.md)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

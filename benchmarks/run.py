@@ -1,0 +1,44 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  See benchmarks/common.py for the
+timing methodology note (XLA impls timed on CPU; Pallas bodies validated in
+interpret mode by tests/).
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from . import (bench_fig1_imbalance, bench_fig4_aspect, bench_fig5_rows,
+                   bench_fig6_heuristic, bench_fig7_density,
+                   bench_table1_analysis, bench_moe_balance)
+    mods = [
+        ("fig1", bench_fig1_imbalance),
+        ("fig4", bench_fig4_aspect),
+        ("fig5", bench_fig5_rows),
+        ("fig6", bench_fig6_heuristic),
+        ("fig7", bench_fig7_density),
+        ("table1", bench_table1_analysis),
+        ("moe", bench_moe_balance),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    printed_header = False
+    for name, mod in mods:
+        if only and only != name:
+            continue
+        print(f"# --- {name}: {mod.__doc__.splitlines()[0]}", flush=True)
+
+        def csv(line, _ph=printed_header):
+            nonlocal printed_header
+            if line.startswith("name,") and printed_header:
+                return
+            if line.startswith("name,"):
+                printed_header = True
+            print(line, flush=True)
+
+        mod.run(csv=csv)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""MoE dispatch as merge-based SpMM (DESIGN.md §3.3).
+
+Routes a batch through a 16-expert MoE with deliberately skewed routing and
+shows that the sort-based (merge) dispatch produces the same result as the
+dense einsum baseline while doing equal-tokens-per-block work — the
+paper's equal-nonzeros-per-chunk principle applied to experts.
+
+    PYTHONPATH=src python examples/moe_spmm_demo.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import moe as MOE
+
+cfg = dataclasses.replace(get_smoke_config("olmoe-1b-7b"),
+                          d_model=128, d_ff=256, num_experts=16, top_k=2,
+                          compute_dtype="float32")
+p = MOE.init_moe(jax.random.PRNGKey(0), cfg)
+# skew the router: experts 0/1 are "hot" (the paper's long rows)
+p["router"] = p["router"].at[:, 0].add(3.0).at[:, 1].add(2.0)
+
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 64, cfg.d_model))
+xt = x.reshape(-1, cfg.d_model)
+gates, experts, probs = MOE.route(p, xt, cfg)
+counts = np.bincount(np.asarray(experts).ravel(), minlength=cfg.num_experts)
+print("tokens per expert (skewed routing):", counts)
+print(f"hottest/coldest = {counts.max()}/{max(counts.min(), 1)} — "
+      f"Type 1 imbalance for an expert-parallel baseline")
+
+buf, meta = MOE._sorted_dispatch(xt, experts, cfg, MOE.TT,
+                                 capacity_factor=float(cfg.num_experts))
+print(f"merge dispatch: sorted buffer {buf.shape}, every block of "
+      f"{MOE.TT} tokens does identical work regardless of skew")
+
+y_sort, aux = MOE.moe_apply(p, x, cfg, use_kernel=False,
+                            capacity_factor=float(cfg.num_experts))
+cfg_d = dataclasses.replace(cfg, moe_impl="dense")
+y_dense, _ = MOE.moe_apply(p, x, cfg_d)
+np.testing.assert_allclose(np.asarray(y_sort), np.asarray(y_dense),
+                           rtol=2e-4, atol=2e-4)
+print("sort (merge-based) dispatch == dense baseline ✓  "
+      f"(aux load-balance loss {float(aux):.3f})")

@@ -1,0 +1,45 @@
+"""Quickstart: the paper's SpMM in five minutes.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CSR, Heuristic, from_dense, random_csr, spmm
+from repro.kernels import ref
+
+# 1. Build a sparse matrix in CSR (the paper's input format — no
+#    conversion step, Algorithm 1 consumes row_ptr/col_ind/vals directly).
+rng = np.random.default_rng(0)
+dense = rng.standard_normal((64, 96)) * (rng.random((64, 96)) < 0.1)
+a = from_dense(dense.astype(np.float32))
+print(f"A: {a.shape}, nnz={int(a.nnz())}, "
+      f"mean row length d={float(a.mean_row_length()):.2f}")
+
+# 2. A tall-skinny dense B (n ≪ m — the paper's SpMM regime).
+b = jax.random.normal(jax.random.PRNGKey(1), (96, 64))
+
+# 3. Multiply three ways — row-split (§4.1), merge-based (§4.2), and
+#    'auto' (the §5.4 heuristic: d < 9.35 → merge).
+c_rowsplit = spmm(a, b, method="rowsplit")
+c_merge = spmm(a, b, method="merge")
+c_auto = spmm(a, b)  # picks merge here (d ≈ 9.6? check below)
+print("heuristic picked:", Heuristic().choose(a))
+
+# 4. All agree with the dense oracle.
+want = np.asarray(ref.spmm_dense_ref(a, b))
+for name, got in [("rowsplit", c_rowsplit), ("merge", c_merge),
+                  ("auto", c_auto)]:
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5, atol=2e-5)
+    print(f"{name:9s} matches dense oracle ✓")
+
+# 5. Irregular matrices are where the merge kernel shines (Type 1/2 load
+#    imbalance, Fig. 1): every chunk gets exactly T nonzeroes.
+irregular = random_csr(jax.random.PRNGKey(2), 256, 128, nnz_per_row=(0, 24))
+b2 = jax.random.normal(jax.random.PRNGKey(3), (128, 32))
+c2 = spmm(irregular, b2, method="merge")
+np.testing.assert_allclose(np.asarray(c2),
+                           np.asarray(ref.spmm_dense_ref(irregular, b2)),
+                           rtol=2e-5, atol=2e-5)
+print("irregular merge-based SpMM ✓")

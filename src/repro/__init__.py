@@ -1,0 +1,2 @@
+"""repro: merge-spmm (Yang, Buluç, Owens, Euro-Par 2018) on TPU in JAX."""
+__version__ = "1.0.0"

@@ -1,0 +1,115 @@
+"""Checkpointing: atomic, content-hashed, retention-managed, resumable.
+
+Layout (one directory per step)::
+
+    <dir>/step_000042/
+        index.msgpack.zst    # pytree structure + shapes/dtypes + hashes
+        arr_00000.npy ...    # one file per leaf (process-local shards on
+                             # multi-host: each process writes its own
+                             # addressable shards, suffix _pNN)
+    <dir>/LATEST             # atomically-updated pointer
+
+Fault model (1000+ nodes): any writer can die mid-checkpoint — we write to
+``step_X.tmp`` then ``rename()`` (atomic on POSIX), and ``restore_latest``
+verifies the content hash of every array, falling back to older steps on
+corruption.  SIGTERM-triggered save is wired in distributed/fault.py.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+
+def _leaf_hash(arr: np.ndarray) -> str:
+    return hashlib.blake2b(arr.tobytes(), digest_size=16).hexdigest()
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, process_index: int = 0):
+        self.dir = directory
+        self.keep = keep
+        self.process_index = process_index
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------- save ----
+    def save(self, step: int, tree, extra: dict | None = None) -> str:
+        leaves, treedef = jax.tree.flatten(tree)
+        name = f"step_{step:08d}"
+        final = os.path.join(self.dir, name)
+        tmp = final + f".tmp{self.process_index}"
+        os.makedirs(tmp, exist_ok=True)
+        index = {"treedef": str(treedef), "n": len(leaves), "step": step,
+                 "extra": extra or {}, "leaves": []}
+        for i, leaf in enumerate(leaves):
+            arr = np.asarray(jax.device_get(leaf))
+            fn = f"arr_{i:05d}_p{self.process_index:02d}.npy"
+            np.save(os.path.join(tmp, fn), arr)
+            index["leaves"].append({
+                "file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype),
+                "hash": _leaf_hash(arr)})
+        blob = zstandard.compress(msgpack.packb(index))
+        with open(os.path.join(tmp, "index.msgpack.zst"), "wb") as f:
+            f.write(blob)
+        os.replace(tmp, final)  # atomic publish
+        self._write_latest(name)
+        self._retain()
+        return final
+
+    def _write_latest(self, name: str):
+        tmp = os.path.join(self.dir, f".LATEST.tmp{self.process_index}")
+        with open(tmp, "w") as f:
+            f.write(name)
+        os.replace(tmp, os.path.join(self.dir, "LATEST"))
+
+    def _retain(self):
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ---------------------------------------------------------- restore ----
+    def all_steps(self):
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(
+                    tuple(f".tmp{i}" for i in range(100))):
+                try:
+                    out.append(int(d[5:]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def _load(self, step: int, like):
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(path, "index.msgpack.zst"), "rb") as f:
+            index = msgpack.unpackb(zstandard.decompress(f.read()))
+        leaves = []
+        for meta in index["leaves"]:
+            arr = np.load(os.path.join(path, meta["file"]))
+            if _leaf_hash(arr) != meta["hash"]:
+                raise IOError(f"corrupt leaf {meta['file']} at step {step}")
+            leaves.append(arr)
+        _, treedef = jax.tree.flatten(like)
+        tree = jax.tree.unflatten(treedef, leaves)
+        return tree, index["step"], index["extra"]
+
+    def restore(self, step: int, like):
+        return self._load(step, like)
+
+    def restore_latest(self, like):
+        """Newest → oldest with corruption fallback.  Returns
+        (tree, step, extra) or (None, -1, {})."""
+        for step in reversed(self.all_steps()):
+            try:
+                return self._load(step, like)
+            except (IOError, OSError, ValueError) as e:
+                print(f"[checkpoint] step {step} unreadable ({e}); "
+                      f"falling back")
+        return None, -1, {}

@@ -1,0 +1,55 @@
+"""Architecture registry: ``get_config(name)`` / ``get_smoke_config(name)``.
+
+The 10 assigned architectures, selectable via ``--arch <id>`` in the
+launchers, plus the paper's own SpMM benchmark config.
+"""
+from __future__ import annotations
+
+import importlib
+
+from .base import SHAPES, ModelConfig, ShapeConfig, TrainConfig
+
+_MODULES = {
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "command-r-35b": "command_r_35b",
+    "granite-3-2b": "granite_3_2b",
+    "qwen2-72b": "qwen2_72b",
+    "llama3.2-1b": "llama3_2_1b",
+    "musicgen-large": "musicgen_large",
+    "internvl2-76b": "internvl2_76b",
+    "mamba2-1.3b": "mamba2_1_3b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+}
+
+ARCHS = tuple(_MODULES)
+
+# long_500k needs sub-quadratic sequence mixing (see DESIGN.md §5):
+SUBQUADRATIC = ("mixtral-8x22b", "mamba2-1.3b", "recurrentgemma-2b")
+
+
+def _module(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {list(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[name]}")
+
+
+def get_config(name: str) -> ModelConfig:
+    return _module(name).CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    return _module(name).smoke_config()
+
+
+def shape_cells(arch: str):
+    """The (arch × shape) cells that run for this arch (skips documented
+    in DESIGN.md §5: long_500k for pure full-attention archs)."""
+    cells = ["train_4k", "prefill_32k", "decode_32k"]
+    if arch in SUBQUADRATIC:
+        cells.append("long_500k")
+    return cells
+
+
+__all__ = ["ARCHS", "SHAPES", "SUBQUADRATIC", "ModelConfig", "ShapeConfig",
+           "TrainConfig", "get_config", "get_smoke_config", "shape_cells"]

@@ -1,0 +1,10 @@
+from .csr import CSR, from_dense, prune_to_csr, random_csr
+from .heuristic import Heuristic, PAPER_THRESHOLD, calibrate
+from .partition import chunk_segments, partition_spmm
+from .spmm import spmm
+
+__all__ = [
+    "CSR", "from_dense", "prune_to_csr", "random_csr",
+    "Heuristic", "PAPER_THRESHOLD", "calibrate",
+    "chunk_segments", "partition_spmm", "spmm",
+]

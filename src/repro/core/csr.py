@@ -1,0 +1,152 @@
+"""CSR sparse matrix as a JAX pytree.
+
+The paper's input format: compressed sparse row.  ``row_ptr`` has ``m+1``
+entries, ``col_ind``/``vals`` have ``nnz`` entries (``nnz`` is a *static*
+trailing pad — padded entries carry ``col_ind = 0`` and ``vals = 0`` so every
+kernel can consume them harmlessly).  Shape ``(m, k)`` is static metadata.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CSR:
+    """Sparse m×k matrix in CSR format (paper §2.2)."""
+
+    row_ptr: jax.Array  # (m + 1,) int32, row_ptr[m] == nnz_true
+    col_ind: jax.Array  # (nnz_pad,) int32, padded with 0
+    vals: jax.Array     # (nnz_pad,) dtype, padded with 0
+    shape: Tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def m(self) -> int:
+        return self.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.shape[1]
+
+    @property
+    def nnz_pad(self) -> int:
+        """Static (padded) nonzero capacity."""
+        return self.col_ind.shape[0]
+
+    @property
+    def dtype(self):
+        return self.vals.dtype
+
+    def nnz(self) -> jax.Array:
+        """True (traced) number of nonzeroes."""
+        return self.row_ptr[-1]
+
+    def mean_row_length(self) -> jax.Array:
+        """The paper's heuristic quantity d = nnz / m (§5.4)."""
+        return self.nnz().astype(jnp.float32) / self.m
+
+    def row_lengths(self) -> jax.Array:
+        return jnp.diff(self.row_ptr)
+
+    def to_dense(self) -> jax.Array:
+        """Densify (oracle / small matrices only)."""
+        m, k = self.shape
+        rows = rows_from_row_ptr(self.row_ptr, self.nnz_pad)
+        valid = jnp.arange(self.nnz_pad) < self.nnz()
+        dense = jnp.zeros((m, k), self.vals.dtype)
+        # Padded entries scatter 0 into [0, 0]; harmless because vals are 0.
+        return dense.at[jnp.where(valid, rows, 0),
+                        jnp.where(valid, self.col_ind, 0)].add(
+                            jnp.where(valid, self.vals, 0))
+
+
+def rows_from_row_ptr(row_ptr: jax.Array, nnz_pad: int) -> jax.Array:
+    """Expand row_ptr to a per-nonzero row-id vector.
+
+    This is the CSR→COO flattening the paper calls ``PrepareSpmm``
+    (Algorithm 1 line 21), done with a vectorized binary search.
+    Padded tail entries receive row id ``m`` (one past the last row).
+    """
+    return jnp.searchsorted(
+        row_ptr, jnp.arange(nnz_pad, dtype=row_ptr.dtype), side="right"
+    ).astype(jnp.int32) - 1
+
+
+def from_dense(dense, nnz_pad: int | None = None) -> CSR:
+    """Build CSR from a dense matrix (host-side; numpy semantics)."""
+    dense = np.asarray(dense)
+    m, k = dense.shape
+    mask = dense != 0
+    counts = mask.sum(axis=1).astype(np.int32)
+    row_ptr = np.zeros(m + 1, np.int32)
+    np.cumsum(counts, out=row_ptr[1:])
+    nnz = int(row_ptr[-1])
+    if nnz_pad is None:
+        nnz_pad = max(nnz, 1)
+    assert nnz_pad >= nnz, f"nnz_pad {nnz_pad} < nnz {nnz}"
+    rows, cols = np.nonzero(mask)
+    col_ind = np.zeros(nnz_pad, np.int32)
+    vals = np.zeros(nnz_pad, dense.dtype)
+    col_ind[:nnz] = cols
+    vals[:nnz] = dense[rows, cols]
+    return CSR(jnp.asarray(row_ptr), jnp.asarray(col_ind), jnp.asarray(vals),
+               (m, k))
+
+
+def random_csr(key, m: int, k: int, *, nnz_per_row=None, density=None,
+               dtype=jnp.float32, pad_to: int | None = None) -> CSR:
+    """Random CSR with controllable irregularity.
+
+    ``nnz_per_row`` may be an int (regular rows), a (lo, hi) tuple (uniform
+    irregular rows — the paper's Type 1/2 imbalance driver), or None with
+    ``density`` given.  Built host-side with numpy for test/bench setup.
+    """
+    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
+    if nnz_per_row is None:
+        assert density is not None
+        nnz_per_row = max(int(round(density * k)), 0)
+    if isinstance(nnz_per_row, tuple):
+        lo, hi = nnz_per_row
+        lengths = rng.integers(lo, hi + 1, size=m)
+    else:
+        lengths = np.full(m, int(nnz_per_row))
+    lengths = np.minimum(lengths, k).astype(np.int64)
+    row_ptr = np.zeros(m + 1, np.int32)
+    np.cumsum(lengths, out=row_ptr[1:])
+    nnz = int(row_ptr[-1])
+    nnz_pad = max(nnz if pad_to is None else pad_to, 1)
+    assert nnz_pad >= nnz
+    col_ind = np.zeros(nnz_pad, np.int32)
+    vals = np.zeros(nnz_pad, np.float64)
+    for r in range(m):
+        s, e = row_ptr[r], row_ptr[r + 1]
+        if e > s:
+            col_ind[s:e] = np.sort(rng.choice(k, size=e - s, replace=False))
+    vals[:nnz] = rng.standard_normal(nnz)
+    return CSR(jnp.asarray(row_ptr), jnp.asarray(col_ind),
+               jnp.asarray(vals, dtype=dtype), (m, k))
+
+
+def prune_to_csr(w: jax.Array, keep_fraction: float) -> CSR:
+    """Magnitude-prune a dense weight to CSR (the paper's use case §1 [1]).
+
+    Keeps the top ``keep_fraction`` of entries *per row* so every row has the
+    same nonzero count — and then the interesting irregularity comes from the
+    matrix the user hands us, not the pruner.
+    """
+    w = np.asarray(w)
+    m, k = w.shape
+    keep = max(1, int(round(keep_fraction * k)))
+    idx = np.argsort(-np.abs(w), axis=1)[:, :keep]
+    idx.sort(axis=1)
+    vals = np.take_along_axis(w, idx, axis=1)
+    row_ptr = np.arange(m + 1, dtype=np.int32) * keep
+    return CSR(jnp.asarray(row_ptr),
+               jnp.asarray(idx.reshape(-1).astype(np.int32)),
+               jnp.asarray(vals.reshape(-1)), (m, k))

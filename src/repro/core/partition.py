@@ -1,0 +1,67 @@
+"""Nonzero-split (merge-based) work partitioning — paper §4, Fig. 2(b).
+
+Phase 1 of the paper's two-phase decomposition (``PartitionSpmm``,
+Algorithm 1 line 2): assign an *equal number of nonzeroes* to each
+processor/chunk, then binary-search ``row_ptr`` to find which row each chunk
+starts in.  On TPU the "processor" is a Pallas grid step; the search is a
+vectorized ``jnp.searchsorted`` fused into the surrounding jit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .csr import CSR, rows_from_row_ptr
+
+
+def num_chunks(nnz_pad: int, t: int) -> int:
+    return max(1, -(-nnz_pad // t))
+
+
+def partition_spmm(a: CSR, t: int):
+    """Nonzero-split partition with T nonzeroes per chunk.
+
+    Returns ``(chunk_start_rows, nnz_rows)`` where ``chunk_start_rows[c]`` is
+    the row containing nonzero ``c*t`` (the paper's ``limits[]``) and
+    ``nnz_rows`` is the per-nonzero row id (CSR→COO flattening, the paper's
+    ``PrepareSpmm``).  Both are O(nnz log m) binary searches on the VPU — the
+    TPU analogue of the MGPU 1-D merge-path search.
+    """
+    n_chunks = num_chunks(a.nnz_pad, t)
+    starts = jnp.arange(n_chunks, dtype=a.row_ptr.dtype) * t
+    # side='right' − 1 gives the row r with row_ptr[r] <= start < row_ptr[r+1].
+    chunk_start_rows = (
+        jnp.searchsorted(a.row_ptr, starts, side="right").astype(jnp.int32) - 1
+    )
+    nnz_rows = rows_from_row_ptr(a.row_ptr, a.nnz_pad)
+    return chunk_start_rows, nnz_rows
+
+
+def chunk_segments(nnz_rows: jax.Array, t: int, m: int):
+    """Per-chunk local segment structure for the carry-out scratch.
+
+    For chunk ``c`` covering nonzeroes ``[c*t, (c+1)*t)``:
+
+    * ``local``    (n_chunks, t): rank of each nonzero's row *within* the
+      chunk (0-based count of row changes) — robust to runs of empty rows,
+      which the paper singles out as the pathological case merge handles.
+    * ``seg_rows`` (n_chunks, t): global row id owning each local segment,
+      or ``m`` (dropped by the epilogue ``segment_sum``) for unused slots.
+
+    A chunk of T nonzeroes touches ≤ T distinct rows, so the scratch segment
+    axis is T wide.  The scatter of per-(chunk, segment) partial sums into C
+    is the paper's ``FixCarryout`` generalized to every row a chunk touches.
+    """
+    n_chunks = num_chunks(nnz_rows.shape[0], t)
+    pad = n_chunks * t - nnz_rows.shape[0]
+    rows = jnp.pad(nnz_rows, (0, pad), constant_values=m)
+    rows = rows.reshape(n_chunks, t)
+    change = jnp.concatenate(
+        [jnp.zeros((n_chunks, 1), jnp.int32),
+         (rows[:, 1:] != rows[:, :-1]).astype(jnp.int32)], axis=1)
+    local = jnp.cumsum(change, axis=1)  # (n_chunks, t), values in [0, t-1]
+    seg_rows = jnp.full((n_chunks, t), m, jnp.int32)
+    chunk_ids = jnp.broadcast_to(
+        jnp.arange(n_chunks, dtype=jnp.int32)[:, None], (n_chunks, t))
+    seg_rows = seg_rows.at[chunk_ids, local].set(rows)
+    return rows, local, seg_rows

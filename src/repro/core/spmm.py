@@ -1,0 +1,36 @@
+"""Public SpMM API: the paper's multi-algorithm with heuristic dispatch.
+
+    C = spmm(A, B)                  # auto: paper §5.4 heuristic
+    C = spmm(A, B, method="merge")  # force merge-based  (paper §4.2)
+    C = spmm(A, B, method="rowsplit", l_pad=64)  # force row-split (§4.1)
+"""
+from __future__ import annotations
+
+import jax
+
+from .csr import CSR
+from .heuristic import Heuristic
+
+_DEFAULT_HEURISTIC = Heuristic()
+
+
+def _ops():
+    # deferred: repro.kernels imports repro.core.csr at module scope, so an
+    # eager import here would be circular
+    from repro.kernels import ops
+    return ops
+
+
+def spmm(a: CSR, b: jax.Array, *, method: str = "auto",
+         l_pad: int | None = None, t: int = 16,
+         heuristic: Heuristic = _DEFAULT_HEURISTIC,
+         interpret: bool | None = None, impl: str = "pallas") -> jax.Array:
+    """Sparse(CSR) × dense = dense.  ``b`` is (k, n); returns (m, n)."""
+    if method == "auto":
+        method = heuristic.choose(a)
+    if method == "merge":
+        return _ops().merge_spmm(a, b, t=t, interpret=interpret, impl=impl)
+    if method == "rowsplit":
+        return _ops().rowsplit_spmm(a, b, l_pad=l_pad, interpret=interpret,
+                                    impl=impl)
+    raise ValueError(f"unknown SpMM method: {method!r}")

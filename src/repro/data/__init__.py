@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, PackedFileSource, SyntheticLM, make_source
+
+__all__ = ["DataConfig", "PackedFileSource", "SyntheticLM", "make_source"]

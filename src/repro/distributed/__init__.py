@@ -1,0 +1,3 @@
+from . import elastic, fault, sharding
+
+__all__ = ["elastic", "fault", "sharding"]

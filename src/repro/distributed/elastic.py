@@ -1,0 +1,45 @@
+"""Elastic scaling: re-shard a training state onto a different mesh.
+
+Grow/shrink the data-parallel width (node failures, capacity changes)
+without conversion tooling: checkpoints store logical arrays; placing them
+on a new mesh is ``device_put`` with the new sharding rules.  The data
+pipeline is index-based, so changing ``num_shards`` re-partitions batches
+deterministically — combined, a job can restart on K-n pods and continue
+bit-exact (modulo batch layout) from the last step.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+from . import sharding as sh
+
+
+def reshard_params(params, new_mesh: Mesh):
+    return jax.device_put(params, sh.params_shardings(params, new_mesh))
+
+
+def reshard_state(state, new_mesh: Mesh):
+    """Optimizer state follows parameter sharding (m/v mirror params)."""
+    out = dict(state)
+    out["m"] = reshard_params(state["m"], new_mesh)
+    out["v"] = reshard_params(state["v"], new_mesh)
+    out["step"] = jax.device_put(state["step"], sh.replicated(new_mesh))
+    return out
+
+
+def validate_elastic_resize(old_mesh: Mesh, new_mesh: Mesh,
+                            global_batch: int) -> list[str]:
+    """Static checks before attempting a live resize."""
+    problems = []
+    if new_mesh.shape.get("model", 1) != old_mesh.shape.get("model", 1):
+        problems.append(
+            "model-axis resize changes TP layout; requires full re-shard "
+            "(supported, but flagging for operator confirmation)")
+    dp = 1
+    for a in sh.dp_axes(new_mesh):
+        dp *= new_mesh.shape[a]
+    if global_batch % dp:
+        problems.append(
+            f"global_batch {global_batch} not divisible by new DP width {dp}")
+    return problems

@@ -1,0 +1,86 @@
+"""Fault tolerance hooks: preemption-safe checkpointing and straggler
+watermarking.
+
+At 1000+ nodes, failures are routine.  The strategy (see DESIGN.md §7):
+
+* **Preemption** (SIGTERM from the scheduler): set a flag; the training
+  loop checkpoints at the next step boundary and exits 0 so the scheduler
+  restarts it; ``--resume auto`` picks up the latest step.
+* **Hard node failure**: the persistent checkpoint cadence bounds lost
+  work; the deterministic data pipeline replays the exact remaining
+  batches.
+* **Stragglers**: in SPMD, one slow chip slows the step — per-step wall
+  times are watermarked against a running median and offenders logged with
+  their step index so the operator (or an outer controller) can cordon the
+  pod and trigger an elastic resize.  The hot-spare-pod pattern: keep the
+  ``pod`` axis outermost, shadow a spare pod on the same data shards, and
+  swap at the collective boundary.
+"""
+from __future__ import annotations
+
+import signal
+import time
+
+
+class PreemptionGuard:
+    def __init__(self):
+        self.requested = False
+        self._installed = False
+
+    def install(self):
+        if self._installed:
+            return self
+        self._prev = signal.signal(signal.SIGTERM, self._handler)
+        self._installed = True
+        return self
+
+    def _handler(self, signum, frame):
+        self.requested = True
+
+    def should_checkpoint(self) -> bool:
+        return self.requested
+
+
+class StragglerWatermark:
+    """EMA-median step-time monitor; flags steps > factor × median."""
+
+    def __init__(self, factor: float = 2.0, warmup: int = 5):
+        self.factor = factor
+        self.warmup = warmup
+        self.median = None
+        self.count = 0
+        self.flagged: list[tuple[int, float]] = []
+
+    def observe(self, step: int, seconds: float) -> bool:
+        self.count += 1
+        if self.median is None:
+            self.median = seconds
+        is_straggler = (self.count > self.warmup
+                        and seconds > self.factor * self.median)
+        # robust-ish streaming median: bounded multiplicative update
+        self.median += 0.1 * self.median * (
+            1.0 if seconds > self.median else -1.0)
+        if is_straggler:
+            self.flagged.append((step, seconds))
+        return is_straggler
+
+
+class StepTimer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.seconds = time.perf_counter() - self.t0
+
+
+def retry(fn, attempts: int = 3, backoff: float = 1.0,
+          exceptions=(IOError, OSError)):
+    """Retry transient failures (checkpoint I/O to network filesystems)."""
+    for i in range(attempts):
+        try:
+            return fn()
+        except exceptions:
+            if i == attempts - 1:
+                raise
+            time.sleep(backoff * (2 ** i))

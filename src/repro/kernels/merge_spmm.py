@@ -1,0 +1,159 @@
+"""Merge-based (nonzero-split) SpMM — Pallas TPU kernel.  Paper §4.2.
+
+TPU adaptation of the paper's two-phase decomposition:
+
+* **Phase 1** (``plan_merge``, plain XLA): assign an equal number ``T`` of
+  nonzeroes per chunk, *breaking chunks at output row-tile boundaries* so
+  every chunk's rows live in exactly one ``TM``-row tile of C.  This is the
+  paper's ``PartitionSpmm`` binary search; the tile-boundary break replaces
+  the GPU carry-out machinery (CTAs that cannot synchronize must ship
+  boundary rows through global memory — Pallas grid steps execute in order
+  on a core, so a revisited output block simply stays resident in VMEM and
+  accumulates, and the fix-up kernel disappears).
+
+* **Phase 2** (``_merge_kernel``): grid ``(n_tiles, chunks)``.  Each step
+  gathers the ``T`` B rows named by the chunk's column indices from a
+  VMEM-resident ``(k, TN)`` panel of B — the TPU analogue of the paper's
+  row-major coalesced loads (lane-contiguous row slices) — multiplies by the
+  chunk's values, and scatter-adds into the ``(TM, TN)`` C tile through a
+  one-hot ``(T, TM)`` matmul on the MXU.  The chunk stream is ordered by row
+  tile, so C tiles are revisited consecutively and flushed exactly once.
+
+Latency hiding: the paper's ILP (32 independent loads per thread) becomes
+Mosaic's double-buffered DMA pipeline across grid steps plus ``T``
+independent VMEM gathers inside a step.  Occupancy (TLP) becomes grid size.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.core.csr import CSR, rows_from_row_ptr
+
+# Default tile sizes: TN = 128 lanes (the "warp width" / coalescing unit),
+# TM = 8 sublanes, T = nonzeroes per chunk (the paper's blockDim.x work unit).
+TN = 128
+TM = 8
+DEFAULT_T = 16
+
+
+def plan_merge(a: CSR, *, t: int = DEFAULT_T, tm: int = TM):
+    """Phase 1: equal-nonzero chunks, broken at TM-row output tiles.
+
+    Returns a dict of device arrays (all static-shaped):
+      cols   (C, t) int32   column index of each nonzero in each chunk
+      vals   (C, t) f       value of each nonzero
+      lrow   (C, t) int32   row offset within the TM-row tile, in [0, tm)
+      tile   (C,)   int32   output row-tile of the chunk (non-decreasing)
+      first  (C,)   int32   1 iff chunk is the first of its row tile
+    where C = nnz_pad//t + ceil(m/tm) (static worst case).
+    """
+    m = a.m
+    nnz_pad = a.nnz_pad
+    n_tiles_m = -(-m // tm)
+    n_chunks = -(-nnz_pad // t) + n_tiles_m
+
+    rows = rows_from_row_ptr(a.row_ptr, nnz_pad)          # (nnz,) row ids, pad→m
+    tile_of_nz = jnp.minimum(rows // tm, n_tiles_m - 1)    # pad entries clamp
+    # nonzero count per row tile, and each nonzero's rank within its tile
+    # (tile_of_nz is non-decreasing: CSR order, pads at the end).
+    tile_starts = jnp.searchsorted(
+        tile_of_nz, jnp.arange(n_tiles_m, dtype=jnp.int32), side="left"
+    ).astype(jnp.int32)
+    tile_counts = jnp.diff(jnp.append(tile_starts, nnz_pad))
+    pos_in_tile = jnp.arange(nnz_pad, dtype=jnp.int32) - tile_starts[tile_of_nz]
+    # chunks allocated per tile: ceil(count/t), min 1 so that every C row
+    # tile is visited (and zeroed) at least once; exclusive prefix sum.
+    chunks_per_tile = jnp.maximum(1, -(-tile_counts // t))
+    chunks_before = jnp.cumsum(chunks_per_tile) - chunks_per_tile
+    dest_chunk = chunks_before[tile_of_nz] + pos_in_tile // t
+    dest_slot = pos_in_tile % t
+
+    # Padded nonzeroes keep their formula slots (reserved via tile_counts of
+    # the last tile) but contribute value 0 / column 0.
+    valid = jnp.arange(nnz_pad) < a.nnz()
+    zeros_i = jnp.zeros((n_chunks, t), jnp.int32)
+    cols = zeros_i.at[dest_chunk, dest_slot].set(
+        jnp.where(valid, a.col_ind, 0), mode="drop")
+    vals = jnp.zeros((n_chunks, t), a.vals.dtype).at[dest_chunk, dest_slot].set(
+        jnp.where(valid, a.vals, 0), mode="drop")
+    lrow = zeros_i.at[dest_chunk, dest_slot].set(
+        jnp.where(valid, rows % tm, 0), mode="drop")
+
+    # chunk -> row tile (non-decreasing); unused tail chunks point at the
+    # last used tile so the revisit stream stays monotone.
+    chunk_ids = jnp.arange(n_chunks, dtype=jnp.int32)
+    cum = chunks_before + chunks_per_tile  # inclusive prefix
+    tile_of_chunk = jnp.searchsorted(cum, chunk_ids, side="right")
+    used = chunk_ids < cum[-1]
+    tile_of_chunk = jnp.minimum(tile_of_chunk, n_tiles_m - 1)
+    tile = jnp.where(used, tile_of_chunk, n_tiles_m - 1).astype(jnp.int32)
+    first = jnp.concatenate(
+        [jnp.ones((1,), jnp.int32),
+         (tile[1:] != tile[:-1]).astype(jnp.int32)])
+    last = jnp.concatenate(
+        [(tile[1:] != tile[:-1]).astype(jnp.int32),
+         jnp.ones((1,), jnp.int32)])
+    return dict(cols=cols, vals=vals, lrow=lrow, tile=tile, first=first,
+                last=last)
+
+
+def _merge_kernel(tile_ref, first_ref, last_ref, cols_ref, vals_ref, lrow_ref,
+                  b_ref, o_ref, acc_ref, *, tm: int, acc_dtype):
+    c = pl.program_id(1)
+
+    @pl.when(first_ref[c] == 1)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cols = cols_ref[0]                                   # (t,)
+    vals = vals_ref[0].astype(acc_dtype)                 # (t,)
+    lrow = lrow_ref[0]                                   # (t,)
+    # Row-major coalesced gather of B rows (lane-contiguous slices).
+    bgat = jnp.take(b_ref[...], cols, axis=0).astype(acc_dtype)   # (t, TN)
+    prod = vals[:, None] * bgat                           # (t, TN)
+    # Scatter-add into the TM-row tile via a one-hot matmul (MXU).
+    t = lrow.shape[0]
+    onehot = (lrow[:, None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (t, tm), 1))
+    acc_ref[...] += jnp.dot(onehot.astype(acc_dtype).T, prod,
+                            preferred_element_type=acc_dtype)
+
+    @pl.when(last_ref[c] == 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def merge_spmm_pallas(plan: dict, b: jax.Array, m_pad: int, *,
+                      tm: int = TM, tn: int = TN,
+                      interpret: bool = False) -> jax.Array:
+    """Phase 2. ``b`` must be (k, n) with n % tn == 0, m_pad % tm == 0."""
+    k, n = b.shape
+    n_chunks, t = plan["cols"].shape
+    acc_dtype = jnp.float32
+    grid = (n // tn, n_chunks)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, t), lambda j, c, tile, first, last: (c, 0)),
+            pl.BlockSpec((1, t), lambda j, c, tile, first, last: (c, 0)),
+            pl.BlockSpec((1, t), lambda j, c, tile, first, last: (c, 0)),
+            pl.BlockSpec((k, tn), lambda j, c, tile, first, last: (0, j)),
+        ],
+        out_specs=pl.BlockSpec(
+            (tm, tn), lambda j, c, tile, first, last: (tile[c], j)),
+        scratch_shapes=[pltpu.VMEM((tm, tn), acc_dtype)],
+    )
+    kernel = functools.partial(_merge_kernel, tm=tm, acc_dtype=acc_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m_pad, n), b.dtype),
+        interpret=interpret,
+    )(plan["tile"], plan["first"], plan["last"],
+      plan["cols"], plan["vals"], plan["lrow"], b)

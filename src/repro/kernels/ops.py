@@ -1,0 +1,140 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+Every op handles padding to tile multiples, backend selection (interpret
+mode on CPU — the kernel body runs in Python for bit-level validation
+against ref.py; compiled Mosaic on real TPUs), and exposes an XLA fallback
+(``impl="xla"``) built from the same dataflow for A/B benchmarking.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.csr import CSR
+from . import flash_attention as _flash
+from . import merge_spmm as _merge
+from . import moe_gemm as _moe
+from . import ref as _ref
+from . import rowsplit_spmm as _rowsplit
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_axis(x, mult, axis):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("t", "interpret", "impl"))
+def merge_spmm(a: CSR, b: jax.Array, *, t: int = _merge.DEFAULT_T,
+               interpret: bool | None = None, impl: str = "pallas"):
+    """Merge-based SpMM: C = A @ B with equal-nonzero load balancing."""
+    if impl == "xla":
+        return _ref.spmm_merge_ref(a, b, t=t)
+    if interpret is None:
+        interpret = _interpret_default()
+    m = a.m
+    b2 = _pad_axis(b, _merge.TN, 1)
+    plan = _merge.plan_merge(a, t=t)
+    m_pad = _merge.TM * (-(-m // _merge.TM))
+    out = _merge.merge_spmm_pallas(plan, b2, m_pad, interpret=interpret)
+    return out[:m, : b.shape[1]]
+
+
+def rowsplit_spmm(a: CSR, b: jax.Array, *, l_pad: int | None = None,
+                  tl: int = _rowsplit.DEFAULT_TL,
+                  interpret: bool | None = None, impl: str = "pallas"):
+    """Row-split SpMM: C = A @ B, one row tile per grid step (ELL-padded).
+
+    ``l_pad``: static max row length.  Outside jit it is derived from the
+    concrete row_ptr; under tracing it must be supplied.
+    """
+    if l_pad is None:
+        if isinstance(a.row_ptr, jax.core.Tracer):
+            raise ValueError("rowsplit_spmm under trace requires l_pad")
+        l_pad = int(np.max(np.diff(np.asarray(a.row_ptr)))) if a.m else 1
+        l_pad = max(l_pad, 1)
+    return _rowsplit_spmm_jit(a, b, l_pad=l_pad, tl=tl, interpret=interpret,
+                              impl=impl)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("l_pad", "tl", "interpret", "impl"))
+def _rowsplit_spmm_jit(a: CSR, b: jax.Array, *, l_pad: int,
+                       tl: int = _rowsplit.DEFAULT_TL,
+                       interpret: bool | None = None, impl: str = "pallas"):
+    if impl == "xla":
+        return _ref.spmm_rowsplit_ref(a, b, tl=tl, l_pad=l_pad)
+    if interpret is None:
+        interpret = _interpret_default()
+    b2 = _pad_axis(b, _rowsplit.TN, 1)
+    plan = _rowsplit.plan_rowsplit(a, l_pad=l_pad, tl=tl)
+    out = _rowsplit.rowsplit_spmm_pallas(plan, b2, tl=tl, interpret=interpret)
+    return out[: a.m, : b.shape[1]]
+
+
+def moe_group_gemm(x: jax.Array, w: jax.Array, group_sizes: jax.Array, *,
+                   tt: int = _moe.TT, interpret: bool | None = None,
+                   impl: str = "pallas"):
+    """Grouped GEMM over expert-sorted tokens (merge-based balancing).
+
+    x (tokens_pad, d_in) sorted by expert; w (E, d_in, d_out);
+    group_sizes (E,) padded sizes, multiples of ``tt``, summing to
+    tokens_pad.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    tokens, d_in = x.shape
+    e, _, d_out = w.shape
+    if impl == "xla":
+        block_expert = _moe.plan_groups(group_sizes, tokens, tt)
+        token_expert = jnp.repeat(block_expert, tt, total_repeat_length=tokens)
+        return _ref.moe_group_gemm_ref(x, w, token_expert)
+    assert tokens % tt == 0
+    x2 = _pad_axis(x, _moe.TDK, 1)
+    w2 = _pad_axis(_pad_axis(w, _moe.TDK, 1), _moe.TDN, 2)
+    block_expert = _moe.plan_groups(group_sizes, tokens, tt)
+    out = _moe.moe_group_gemm_pallas(x2, w2, block_expert, tt=tt,
+                                     interpret=interpret)
+    return out[:, :d_out]
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, bq: int = _flash.DEFAULT_BQ,
+                    bk: int = _flash.DEFAULT_BK,
+                    interpret: bool | None = None):
+    """Causal flash attention via the Pallas kernel.
+
+    q (b, s, h, dh); k/v (b, s, kv, dh) with h % kv == 0 — KV heads are
+    broadcast to the query heads (GQA), then (b, h) folds into the grid's
+    batch dimension.  Sequence is padded to the block size (padded queries
+    are discarded; padded keys sit in the causal future and are masked).
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    b, s, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    kb = jnp.repeat(k, g, axis=2) if g > 1 else k
+    vb = jnp.repeat(v, g, axis=2) if g > 1 else v
+    fold = lambda x: x.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+    qf, kf, vf = fold(q), fold(kb), fold(vb)
+    pad = (-s) % max(bq, bk)
+    if pad:
+        qf = jnp.pad(qf, ((0, 0), (0, pad), (0, 0)))
+        kf = jnp.pad(kf, ((0, 0), (0, pad), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad), (0, 0)))
+    out = _flash.flash_attention_pallas(qf, kf, vf, bq=bq, bk=bk,
+                                        interpret=interpret)
+    out = out[:, :s]
+    return out.reshape(b, h, s, dh).transpose(0, 2, 1, 3)

@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth for the allclose sweeps in tests/ and the
+"paper-faithful dataflow in plain XLA" baselines for the benchmarks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.csr import CSR
+from repro.core.partition import chunk_segments, partition_spmm
+
+
+def spmm_dense_ref(a: CSR, b: jax.Array) -> jax.Array:
+    """Densify-and-matmul oracle (small matrices only)."""
+    return a.to_dense() @ b
+
+
+def spmm_gather_ref(a: CSR, b: jax.Array) -> jax.Array:
+    """Gather/segment-sum oracle: the CSR dataflow with no blocking at all."""
+    _, nnz_rows = partition_spmm(a, t=max(a.nnz_pad, 1))
+    prods = a.vals[:, None] * b[a.col_ind]          # (nnz_pad, n)
+    return jax.ops.segment_sum(prods, nnz_rows, num_segments=a.m)
+
+
+def spmm_rowsplit_ref(a: CSR, b: jax.Array, tl: int = 8,
+                      l_pad: int | None = None) -> jax.Array:
+    """Row-split dataflow reference (paper §4.1), ELL-style padded rows.
+
+    Every row is processed in batches of ``tl`` nonzeroes — the paper's
+    "effective number of independent instructions is sensitive to row
+    lengths that do not divide 32" (here: that do not divide ``tl``).
+    ``l_pad`` is a static upper bound on the row length (defaults to the
+    worst case, the whole nnz capacity — callers with host knowledge of the
+    max row length should pass it).
+    """
+    lengths = a.row_lengths()
+    if l_pad is None:
+        l_pad = int(a.nnz_pad)
+    l_pad = max(tl, tl * (-(-l_pad // tl)))
+    idx = jnp.arange(l_pad)
+    take = a.row_ptr[:-1, None] + idx[None, :]                # (m, l_pad)
+    valid = idx[None, :] < lengths[:, None]
+    take = jnp.where(valid, take, 0)
+    cols = jnp.where(valid, a.col_ind[take], 0)
+    vals = jnp.where(valid, a.vals[take], 0)
+    return jnp.einsum("ml,mln->mn", vals, b[cols])
+
+
+def spmm_merge_ref(a: CSR, b: jax.Array, t: int = 8) -> jax.Array:
+    """Merge-based (nonzero-split) dataflow reference (paper §4.2).
+
+    Phase 1: equal-nonzero partition.  Phase 2: per-chunk gather + multiply +
+    intra-chunk segmented sum.  Epilogue: scatter-add partials into C (the
+    carry-out fix-up).
+    """
+    _, nnz_rows = partition_spmm(a, t)
+    rows, local, seg_rows = chunk_segments(nnz_rows, t, a.m)
+    n_chunks = rows.shape[0]
+    pad = n_chunks * t - a.nnz_pad
+    cols = jnp.pad(a.col_ind, (0, pad)).reshape(n_chunks, t)
+    vals = jnp.pad(a.vals, (0, pad)).reshape(n_chunks, t)
+    prods = vals[..., None] * b[cols]                        # (chunks, t, n)
+    # Intra-chunk segmented reduction over the local segment axis.
+    onehot = (local[..., None] == jnp.arange(t)[None, None, :])
+    partials = jnp.einsum("cts,ctn->csn", onehot.astype(prods.dtype), prods)
+    return jax.ops.segment_sum(
+        partials.reshape(n_chunks * t, -1), seg_rows.reshape(-1),
+        num_segments=a.m)
+
+
+def moe_group_gemm_ref(x_sorted: jax.Array, w: jax.Array,
+                       group_ids: jax.Array) -> jax.Array:
+    """Grouped GEMM oracle: y[i] = x_sorted[i] @ w[group_ids[i]].
+
+    ``x_sorted`` (tokens, d_in) is sorted by expert, ``group_ids`` (tokens,)
+    gives each token's expert, ``w`` (experts, d_in, d_out).
+    """
+    return jnp.einsum("td,tdo->to", x_sorted, w[group_ids])

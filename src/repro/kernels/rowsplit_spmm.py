@@ -1,0 +1,102 @@
+"""Row-splitting SpMM — Pallas TPU kernel.  Paper §4.1.
+
+TPU adaptation of the paper's warp-per-row kernel:
+
+* The GPU warp's 32 lanes reading 32 consecutive floats of a row-major B row
+  become a ``TN=128``-lane slice of B fetched from a VMEM-resident
+  ``(k, TN)`` panel.
+* "Equal rows per processor" becomes a grid over ``TM``-row tiles of C; each
+  row is processed in batches of ``TL`` nonzeroes, ELL-padded to the tile's
+  static bound ``L`` — the TPU manifestation of the paper's Type 2 load
+  imbalance: rows shorter than the pad waste *lanes as padding FLOPs*
+  instead of diverged threads, and the waste grows with row irregularity
+  exactly as in Fig. 4.
+* The warp ``__shfl`` broadcast of ``(col_ind, val)`` becomes a VPU
+  broadcast of the (TM, TL) index/value tiles across lanes.
+
+Phase 0 (``plan_rowsplit``, plain XLA): scatter CSR into ELL-padded
+``(m, L)`` index/value arrays.  This is *runtime scratch within the same
+jit*, not a stored format conversion — the input stays CSR (the paper's
+headline constraint).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.core.csr import CSR
+
+TN = 128
+TM = 8
+DEFAULT_TL = 16
+
+
+def plan_rowsplit(a: CSR, *, l_pad: int, tl: int = DEFAULT_TL,
+                  tm: int = TM):
+    """ELL-pad CSR to (m_pad, L) with L = l_pad rounded up to tl.
+
+    ``l_pad`` must be a static upper bound on the longest row.
+    """
+    m = a.m
+    m_pad = tm * (-(-m // tm))
+    l = max(tl, tl * (-(-l_pad // tl)))
+    lengths = jnp.diff(a.row_ptr)
+    idx = jnp.arange(l, dtype=jnp.int32)
+    take = a.row_ptr[:-1, None] + idx[None, :]             # (m, l)
+    valid = idx[None, :] < lengths[:, None]
+    take = jnp.where(valid, take, 0)
+    cols = jnp.where(valid, a.col_ind[take], 0)
+    vals = jnp.where(valid, a.vals[take], 0)
+    pad_rows = m_pad - m
+    cols = jnp.pad(cols, ((0, pad_rows), (0, 0)))
+    vals = jnp.pad(vals, ((0, pad_rows), (0, 0)))
+    return dict(cols=cols, vals=vals)
+
+
+def _rowsplit_kernel(cols_ref, vals_ref, b_ref, o_ref, acc_ref, *,
+                     acc_dtype, n_l: int):
+    ll = pl.program_id(2)
+
+    @pl.when(ll == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    tm, tl = cols_ref.shape
+    cols = cols_ref[...].reshape(-1)                       # (tm*tl,)
+    vals = vals_ref[...].reshape(-1).astype(acc_dtype)
+    bgat = jnp.take(b_ref[...], cols, axis=0).astype(acc_dtype)  # (tm*tl, TN)
+    prod = vals[:, None] * bgat
+    acc_ref[...] += prod.reshape(tm, tl, -1).sum(axis=1)
+
+    @pl.when(ll == n_l - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def rowsplit_spmm_pallas(plan: dict, b: jax.Array, *, tm: int = TM,
+                         tn: int = TN, tl: int = DEFAULT_TL,
+                         interpret: bool = False) -> jax.Array:
+    """``b`` must be (k, n) with n % tn == 0; plan arrays (m_pad, L)."""
+    k, n = b.shape
+    m_pad, l = plan["cols"].shape
+    acc_dtype = jnp.float32
+    grid = (m_pad // tm, n // tn, l // tl)
+    kernel = functools.partial(_rowsplit_kernel, acc_dtype=acc_dtype,
+                               n_l=l // tl)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tl), lambda i, j, ll: (i, ll)),
+            pl.BlockSpec((tm, tl), lambda i, j, ll: (i, ll)),
+            pl.BlockSpec((k, tn), lambda i, j, ll: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, ll: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n), b.dtype),
+        scratch_shapes=[pltpu.VMEM((tm, tn), acc_dtype)],
+        interpret=interpret,
+    )(plan["cols"], plan["vals"], b)

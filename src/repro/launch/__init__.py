@@ -1,0 +1,4 @@
+# NOTE: do not import dryrun here — it sets XLA_FLAGS at import time.
+from . import mesh, specs
+
+__all__ = ["mesh", "specs"]

@@ -1,0 +1,246 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax-importing import: jax locks the device count on
+# first backend init.  512 placeholder host devices let jax.make_mesh build
+# the production meshes; the dry-run never allocates real buffers.
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture × input shape × mesh) cell::
+
+    with mesh:
+        lowered = jax.jit(step, in_shardings=…, out_shardings=…).lower(**specs)
+        compiled = lowered.compile()
+        print(compiled.memory_analysis())   # proves it fits
+        print(compiled.cost_analysis())     # FLOPs/bytes for §Roofline
+
+Failures (sharding mismatch, OOM at compile, unsupported collective) are
+bugs in the system.  Results land in results/dryrun/*.json for
+benchmarks/roofline.py.
+
+Usage:
+    python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, get_config, shape_cells
+from repro.distributed import sharding as sh
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs
+from repro.launch import hlo_stats
+from repro.optim import adamw
+from repro.runtime import steps as R
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def default_microbatches(cfg, global_batch: int = 256,
+                         dp: int = 16) -> int:
+    # keep live activations per device bounded; hillclimbed in §Perf.
+    # Constraint: the per-microbatch batch must stay divisible by the DP
+    # width or GSPMD pads every activation (half-empty devices — found in
+    # §Perf iteration 2 on the 2×16×16 mesh).
+    want = 16 if cfg.d_model >= 6144 else 4
+    return max(1, min(want, global_batch // dp))
+
+
+def build_step_and_shardings(arch: str, shape_name: str, mesh, *,
+                             microbatches: int | None = None,
+                             grad_compression: str = "none",
+                             remat: bool = True,
+                             param_mode: str = "fsdp",
+                             seq_shard: bool = False):
+    import dataclasses
+    cfg = get_config(arch)
+    if seq_shard:  # sequence parallelism for the residual stream
+        cfg = dataclasses.replace(cfg,
+                                  residual_spec=("dp", "model", None))
+    if param_mode == "fsdp2":  # pure ZeRO-3: no TP, batch over every chip
+        cfg = dataclasses.replace(cfg, tp=False,
+                                  residual_spec=("dpm", None, None))
+    shape = SHAPES[shape_name]
+    dp = 1
+    for a in sh.dp_axes(mesh):
+        dp *= mesh.shape[a]
+    if param_mode == "fsdp2":
+        dp *= mesh.shape["model"]
+    mb = microbatches or (
+        default_microbatches(cfg, shape.global_batch, dp)
+        if shape.kind == "train" else 1)
+    specs = input_specs(arch, shape_name, grad_compression, mb, param_mode)
+    rep = sh.replicated(mesh)
+
+    def pshard(tree, mode=None):
+        m = mode or ("fsdp2" if param_mode == "fsdp2" else "fsdp")
+        return sh.params_shardings(tree, mesh, m)
+
+    batch_model = param_mode == "fsdp2"
+    if shape.kind == "train":
+        step = R.make_train_step(
+            cfg, adamw.AdamWConfig(), microbatches=mb, remat=remat,
+            grad_compression=grad_compression, param_mode=param_mode)
+        opt = specs["state"]["opt"]
+        state_sh = {"params": pshard(specs["state"]["params"],
+                                     mode="zero1" if param_mode == "zero1"
+                                     else None),
+                    "opt": {"step": rep,
+                            "m": pshard(opt["m"]),
+                            "v": pshard(opt["v"])}}
+        if "master" in opt:
+            state_sh["opt"]["master"] = pshard(opt["master"])
+        if "residual" in specs["state"]:
+            state_sh["residual"] = pshard(specs["state"]["residual"])
+        in_sh = {"state": state_sh,
+                 "batch": sh.batch_shardings(specs["batch"], mesh,
+                                             batch_axis=1 if mb > 1 else 0,
+                                             include_model=batch_model)}
+        metrics_sh = jax.tree.map(
+            lambda _: rep,
+            jax.eval_shape(step, specs["state"], specs["batch"])[1])
+        out_sh = (state_sh, metrics_sh)
+        return step, specs, in_sh, out_sh, cfg
+
+    if shape.kind == "prefill":
+        step = R.make_prefill_step(cfg)
+        out_eval = jax.eval_shape(step, specs["params"], specs["batch"])
+        in_sh = {"params": pshard(specs["params"]),
+                 "batch": sh.batch_shardings(specs["batch"], mesh)}
+        out_sh = {"caches": sh.cache_shardings(out_eval["caches"], mesh),
+                  "logits": sh.batch_shardings(out_eval["logits"], mesh),
+                  "pos": sh.batch_shardings(out_eval["pos"], mesh)}
+        return step, specs, in_sh, out_sh, cfg
+
+    # decode
+    step = R.make_decode_step(cfg)
+    out_eval = jax.eval_shape(step, specs["params"], specs["caches"],
+                              specs["batch"], specs["pos"])
+    in_sh = {"params": pshard(specs["params"]),
+             "caches": sh.cache_shardings(specs["caches"], mesh),
+             "batch": sh.batch_shardings(specs["batch"], mesh),
+             "pos": sh.batch_shardings(specs["pos"], mesh)}
+    out_sh = (sh.batch_shardings(out_eval[0], mesh),
+              sh.cache_shardings(out_eval[1], mesh))
+    return step, specs, in_sh, out_sh, cfg
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             microbatches: int | None = None,
+             grad_compression: str = "none", remat: bool = True,
+             param_mode: str = "fsdp", seq_shard: bool = False,
+             verbose: bool = True) -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "ok": False,
+           "param_mode": param_mode, "seq_shard": seq_shard}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        step, specs, in_sh, out_sh, cfg = build_step_and_shardings(
+            arch, shape_name, mesh, microbatches=microbatches,
+            grad_compression=grad_compression, remat=remat,
+            param_mode=param_mode, seq_shard=seq_shard)
+        with sh.use_mesh(mesh):
+            # specs dicts are built in the step functions' positional order
+            jitted = jax.jit(step,
+                             in_shardings=tuple(in_sh[k] for k in specs),
+                             out_shardings=out_sh)
+            lowered = jitted.lower(*specs.values())
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        parsed = hlo_stats.parse_module(hlo)  # trip-count-scaled
+        fus = hlo_stats.fusion_stats(hlo)
+        rec.update(
+            ok=True, lower_s=round(t1 - t0, 2), compile_s=round(t2 - t1, 2),
+            memory_analysis=_mem_dict(mem),
+            cost_analysis={k: float(v) for k, v in (cost or {}).items()
+                           if isinstance(v, (int, float))},
+            hlo_parsed=parsed, hlo_ops=fus,
+            model_params=cfg.param_count(),
+            model_params_active=cfg.active_param_count(),
+        )
+        if verbose:
+            print(f"[{arch} × {shape_name} × {mesh_name}] "
+                  f"compile {rec['compile_s']}s")
+            print("  memory_analysis:", rec["memory_analysis"])
+            print(f"  per-device (trip-scaled): "
+                  f"flops={parsed['flops']:.3e} "
+                  f"hbm={parsed['hbm_bytes']:.3e}B "
+                  f"wire={parsed['collective_wire_bytes']:.3e}B "
+                  f"({parsed['collective_count']} colls)")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc(limit=20)
+        if verbose:
+            print(f"[{arch} × {shape_name} × {mesh_name}] FAILED: "
+                  f"{rec['error']}")
+    return rec
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--grad-compression", default="none",
+                    choices=["none", "int8_ef"])
+    ap.add_argument("--param-mode", default="fsdp",
+                    choices=["fsdp", "zero1", "fsdp2"])
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shp in shape_cells(arch):
+                cells.append((arch, shp))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    n_ok = 0
+    for arch, shp in cells:
+        for mp in meshes:
+            rec = run_cell(arch, shp, multi_pod=mp,
+                           microbatches=args.microbatches,
+                           grad_compression=args.grad_compression,
+                           remat=not args.no_remat,
+                           param_mode=args.param_mode)
+            n_ok += rec["ok"]
+            name = f"{arch}__{shp}__{rec['mesh']}.json"
+            with open(os.path.join(args.out, name), "w") as f:
+                json.dump(rec, f, indent=1)
+    total = len(cells) * len(meshes)
+    print(f"\ndry-run: {n_ok}/{total} cells compiled")
+    raise SystemExit(0 if n_ok == total else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run never
+allocates; weak-type-correct, shardable specs only."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config
+from repro.models import model as M
+from repro.optim import adamw
+from repro.runtime import steps as R
+
+
+def _sds(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def batch_specs(cfg, shape, microbatches: int = 1) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        if cfg.input_mode == "tokens":
+            return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+        return {"embeds": jax.ShapeDtypeStruct((b, 1, cfg.d_model),
+                                               cfg.cdtype)}
+    # train batches are pre-shaped (microbatches, local, ...) and scanned
+    lead = (microbatches, b // microbatches) if microbatches > 1 else (b,)
+    out = {"labels": jax.ShapeDtypeStruct((*lead, s), jnp.int32)}
+    if cfg.input_mode == "tokens":
+        out["tokens"] = jax.ShapeDtypeStruct((*lead, s), jnp.int32)
+    else:
+        out["embeds"] = jax.ShapeDtypeStruct((*lead, s, cfg.d_model),
+                                             cfg.cdtype)
+    if shape.kind == "prefill":
+        out.pop("labels")
+    return out
+
+
+def params_specs(cfg, dtype=None):
+    specs = jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    if dtype is None:
+        return specs
+    # serving checkpoints are compute-dtype (bf16): halves weight traffic
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, dtype if jnp.issubdtype(s.dtype, jnp.floating)
+            else s.dtype),
+        specs)
+
+
+def state_specs(cfg, grad_compression: str = "none",
+                param_mode: str = "fsdp"):
+    return jax.eval_shape(
+        lambda: R.init_train_state(cfg, jax.random.PRNGKey(0),
+                                   grad_compression=grad_compression,
+                                   param_mode=param_mode))
+
+
+def cache_specs(cfg, batch: int, cache_len: int):
+    return jax.eval_shape(
+        lambda: M.init_caches(cfg, batch, cache_len))
+
+
+def input_specs(arch: str, shape_name: str = "train_4k",
+                grad_compression: str = "none",
+                microbatches: int = 1, param_mode: str = "fsdp") -> dict:
+    """Kwargs for the step function of this (arch, shape) cell."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return {"state": state_specs(cfg, grad_compression, param_mode),
+                "batch": batch_specs(cfg, shape, microbatches)}
+    if shape.kind == "prefill":
+        return {"params": params_specs(cfg, cfg.cdtype),
+                "batch": batch_specs(cfg, shape)}
+    # decode: one new token against a cache of seq_len
+    return {"params": params_specs(cfg, cfg.cdtype),
+            "caches": cache_specs(cfg, shape.global_batch, shape.seq_len),
+            "batch": batch_specs(cfg, shape),
+            "pos": jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)}

@@ -1,0 +1,7 @@
+from . import layers, losses, model, moe, rglru, sparse, ssm
+from .model import (decode_step, forward, init_caches, init_params,
+                    loss_and_aux, prefill)
+
+__all__ = ["layers", "losses", "model", "moe", "rglru", "sparse", "ssm",
+           "decode_step", "forward", "init_caches", "init_params",
+           "loss_and_aux", "prefill"]

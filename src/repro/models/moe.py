@@ -1,0 +1,166 @@
+"""Mixture-of-Experts with merge-based (paper §4.2) load balancing.
+
+The token→expert routing matrix is sparse and irregular — hot experts are
+the paper's long rows (Type 1 imbalance), cold experts its short rows
+(Type 2).  The ``sort`` implementation is the nonzero-split idea applied to
+experts:
+
+  1. top-k routing,
+  2. sort token-replicas by expert (CSR ordering),
+  3. pad each expert group to the token-tile ``TT`` (chunk breaks at group
+     boundaries — the carry-out analogue),
+  4. grouped GEMM over equal-token blocks (``kernels/moe_gemm.py`` on TPU;
+     a block-gather einsum with identical dataflow under XLA/dry-run),
+  5. weighted scatter back to token order (the fix-up epilogue).
+
+Load balance is perfect by construction regardless of routing skew.
+``dense`` is the GShard-style einsum baseline (the paper-comparison
+baseline; see benchmarks/bench_moe_balance.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.kernels import moe_gemm as _moe_kernel
+from repro.kernels import ops as _ops
+
+TT = 64  # tokens per block (the merge chunk size for experts)
+
+
+def init_moe(key, cfg) -> dict:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    return {
+        "router": jax.random.normal(ks[0], (d, e), jnp.float32) * s,
+        "w1": jax.random.normal(ks[1], (e, d, ff), cfg.pdtype) * s,
+        "w3": jax.random.normal(ks[2], (e, d, ff), cfg.pdtype) * s,
+        "w2": jax.random.normal(ks[3], (e, ff, d), cfg.pdtype) * ff ** -0.5,
+    }
+
+
+def route(p, x, cfg):
+    """Top-k routing.  x (t, d) → gates (t, k) f32, experts (t, k) i32."""
+    logits = x.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, cfg.top_k)
+    gates = gates / jnp.sum(gates, -1, keepdims=True)
+    return gates, experts.astype(jnp.int32), probs
+
+
+def aux_load_balance_loss(probs, experts, cfg):
+    """Switch-style auxiliary loss: E · Σ_e f_e · P_e.
+
+    probs (t, E) router probabilities; experts (t, k) selected ids."""
+    e = cfg.num_experts
+    onehot = jax.nn.one_hot(experts, e, dtype=jnp.float32)   # (t, k, E)
+    counts = onehot.sum((0, 1))                              # (E,)
+    f = counts / jnp.maximum(counts.sum(), 1.0)
+    p_mean = probs.mean(0)                                   # (E,)
+    return e * jnp.sum(f * p_mean)
+
+
+def _sorted_dispatch(x, experts, cfg, tt, capacity_factor: float = 1.25):
+    """Sort token-replicas by expert into a fixed-capacity buffer.
+
+    Expert ``e`` owns rows ``[e·cap, (e+1)·cap)`` of ``buf`` (cap static =
+    ⌈t·k/E · capacity_factor⌉ rounded to ``tt``).  The sort is the CSR
+    ordering; the per-expert capacity is the static bound that keeps every
+    grid/einsum block equal-sized (the group-boundary analogue of the
+    paper's chunk breaks).  Token-replicas beyond an expert's capacity are
+    dropped (standard capacity-based MoE; the aux loss keeps routing
+    balanced so drops are rare at cf = 1.25).
+    """
+    t, d = x.shape
+    k, e = cfg.top_k, cfg.num_experts
+    cap = tt * max(1, -(-int(t * k * capacity_factor) // (e * tt)))
+    flat_e = experts.reshape(-1)                     # (t*k,)
+    order = jnp.argsort(flat_e, stable=True)         # CSR ordering
+    sorted_e = flat_e[order]
+    sizes = jnp.bincount(flat_e, length=e)           # true group sizes
+    group_start = jnp.cumsum(sizes) - sizes
+    rank = jnp.arange(t * k) - group_start[sorted_e]
+    keep = rank < cap
+    slot = jnp.where(keep, sorted_e * cap + rank, e * cap)
+    buf = jnp.zeros((e * cap, d), x.dtype).at[slot].set(
+        x[order // k], mode="drop")
+    return buf, dict(order=order, slot=slot, keep=keep, cap=cap)
+
+
+def _group_mlp(buf, p, cfg, tt, use_kernel):
+    """SwiGLU through grouped GEMMs (equal tokens per block)."""
+    dt = cfg.cdtype
+    e = cfg.num_experts
+    cap = buf.shape[0] // e
+    if use_kernel:
+        sizes = jnp.full((e,), cap, jnp.int32)
+        gg = functools.partial(_ops.moe_group_gemm, tt=tt)
+        h = jax.nn.silu(gg(buf, p["w1"].astype(dt), sizes)) * \
+            gg(buf, p["w3"].astype(dt), sizes)
+        return gg(h, p["w2"].astype(dt), sizes)
+    # XLA path: one batched matmul over the (E, cap, d) layout — exact
+    # capacity FLOPs, each expert's weights touched once.  (Constraining
+    # the buf layout over *capacity* was A/B-tested and REFUTED — §Perf
+    # iteration 1; constraining the *expert* dim to match expert-parallel
+    # weights is iteration 10.)
+    xb = buf.reshape(e, cap, -1)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xb, p["w1"].astype(dt))) * \
+        jnp.einsum("ecd,edf->ecf", xb, p["w3"].astype(dt))
+    out = jnp.einsum("ecf,efd->ecd", h, p["w2"].astype(dt))
+    return out.reshape(e * cap, -1)
+
+
+def _sort_moe(p, xt, gates, experts, cfg, tt, use_kernel, capacity_factor):
+    buf, meta = _sorted_dispatch(xt, experts, cfg, tt, capacity_factor)
+    out = _group_mlp(buf, p, cfg, tt, use_kernel)
+    # fix-up epilogue: weighted scatter back to token order
+    safe_slot = jnp.minimum(meta["slot"], out.shape[0] - 1)
+    contrib = jnp.where(meta["keep"][:, None], out[safe_slot], 0.0)
+    tok = meta["order"] // cfg.top_k
+    w = gates.reshape(-1)[meta["order"]].astype(contrib.dtype)
+    return jax.ops.segment_sum(contrib * w[:, None], tok,
+                               num_segments=xt.shape[0])
+
+
+def moe_apply(p, x, cfg, *, tt: int = TT, use_kernel: bool | None = None,
+              capacity_factor: float = 1.25):
+    """x (b, s, d) → (y, aux_loss)."""
+    if use_kernel is None:
+        use_kernel = cfg.moe_impl == "sort" and jax.default_backend() == "tpu"
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    gates, experts, probs = route(p, xt, cfg)
+    aux = aux_load_balance_loss(probs, experts, cfg)
+    if cfg.moe_impl == "dense":
+        y = _dense_moe(p, xt, gates, experts, cfg)
+    elif cfg.moe_groups > 1 and (b * s) % cfg.moe_groups == 0:
+        # hierarchical dispatch: per-group local sort/scatter (groups track
+        # the data shards, so the merge ordering never crosses devices —
+        # §Perf iteration 8).  Per-group capacity keeps total work equal.
+        g = cfg.moe_groups
+        xg = constrain(xt.reshape(g, (b * s) // g, d), "dp", None, None)
+        gg = gates.reshape(g, -1, cfg.top_k)
+        eg = experts.reshape(g, -1, cfg.top_k)
+        y = jax.vmap(lambda x_, g_, e_: _sort_moe(
+            p, x_, g_, e_, cfg, tt, use_kernel, capacity_factor))(xg, gg, eg)
+        y = y.reshape(b * s, d)
+    else:
+        y = _sort_moe(p, xt, gates, experts, cfg, tt, use_kernel,
+                      capacity_factor)
+    return y.reshape(b, s, d).astype(x.dtype), aux
+
+
+def _dense_moe(p, xt, gates, experts, cfg):
+    """GShard-style einsum baseline: every token × every expert mask."""
+    e = cfg.num_experts
+    dt = cfg.cdtype
+    comb = jnp.zeros((xt.shape[0], e), jnp.float32)
+    comb = comb.at[jnp.arange(xt.shape[0])[:, None], experts].add(gates)
+    h = jnp.einsum("td,edf->tef", xt, p["w1"].astype(dt))
+    h3 = jnp.einsum("td,edf->tef", xt, p["w3"].astype(dt))
+    o = jnp.einsum("tef,efd->ted", jax.nn.silu(h) * h3, p["w2"].astype(dt))
+    return jnp.einsum("ted,te->td", o, comb.astype(dt))

@@ -1,0 +1,90 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+    r_t = σ(w_a ⊙ x_t)                 recurrence gate
+    i_t = σ(w_x ⊙ x_t)                 input gate
+    a_t = exp(-c · softplus(Λ) · r_t)   c = 8
+    h_t = a_t ⊙ h_{t-1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Training/prefill uses an associative scan (parallel in O(log s) depth);
+decode is the O(1) recurrence step.  The block follows Griffin: two input
+branches (recurrent path with causal conv width 4, gating path with GELU),
+multiplied and projected out.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_C = 8.0
+
+
+def init_rglru(key, cfg) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    # Λ init so a ∈ (0.9, 0.999) at r = 1 (Griffin §2.4)
+    lam = jnp.log(jnp.expm1(-jnp.log(
+        jnp.linspace(0.9, 0.999, w)) / _C)).astype(jnp.float32)
+    return {
+        "wx_in": jax.random.normal(ks[0], (d, w), cfg.pdtype) * s,
+        "wg_in": jax.random.normal(ks[1], (d, w), cfg.pdtype) * s,
+        "conv": jax.random.normal(ks[2], (cfg.conv_width, w), cfg.pdtype) * 0.1,
+        "gate_a": jnp.zeros((w,), jnp.float32),
+        "gate_x": jnp.zeros((w,), jnp.float32),
+        "lam": lam,
+        "out": jax.random.normal(ks[3], (w, d), cfg.pdtype) * w ** -0.5,
+    }
+
+
+def _gates(p, x):
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf * p["gate_a"])
+    i = jax.nn.sigmoid(xf * p["gate_x"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r        # (..., w), ≤ 0
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+    return a, b
+
+
+def _conv(x, conv, state=None):
+    w = conv.shape[0]
+    if state is None:
+        pad = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+        new_state = pad[:, -(w - 1):] if w > 1 else None
+    else:
+        pad = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+        new_state = pad[:, -(w - 1):] if w > 1 else None
+    out = sum(pad[:, i:i + x.shape[1]] * conv[i] for i in range(w))
+    return out, new_state
+
+
+def rglru_apply(p, x, cfg, *, state=None):
+    """x (b, s, d) → (out, new_state); state = {"conv", "h"}."""
+    dt = x.dtype
+    xr = x @ p["wx_in"].astype(dt)                     # recurrent branch
+    xg = jax.nn.gelu(x @ p["wg_in"].astype(dt))        # gating branch
+    if state is None:
+        xr, conv_state = _conv(xr, p["conv"].astype(dt))
+        a, b = _gates(p, xr)
+
+        def combine(l, r):
+            return (r[0] * l[0], r[0] * l[1] + r[1])
+
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+        h_last = h[:, -1]
+    else:
+        xr, conv_state = _conv(xr, p["conv"].astype(dt), state["conv"])
+        a, b = _gates(p, xr)
+        h = a * state["h"][:, None] + b                 # (b, 1, w)
+        h_last = h[:, -1]
+    y = (h.astype(dt) * xg) @ p["out"].astype(dt)
+    return y, {"conv": conv_state, "h": h_last}
+
+
+def init_rglru_state(cfg, batch, dtype=jnp.float32):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }

@@ -1,0 +1,61 @@
+"""Pruned-FFN serving via SpMM — the paper's motivating use case (§1, [1]).
+
+``SparseLinear`` stores a magnitude-pruned weight matrix in CSR and runs the
+forward matmul through the paper's SpMM: ``y = (W_csr @ x.T).T`` where the
+activation matrix ``x.T (d_in, tokens)`` is the tall-skinny dense B — during
+decode ``tokens`` is the batch size (1–128), exactly the paper's
+n ∈ [32, 128] regime.  Kernel selection uses the paper's §5.4 heuristic.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CSR, Heuristic, prune_to_csr, spmm
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseLinear:
+    weight: CSR            # (d_out, d_in)
+    l_pad: int             # static max row nnz (for row-split)
+    method: str            # rowsplit | merge (resolved once at build)
+
+    @classmethod
+    def from_dense(cls, w: jax.Array, keep_fraction: float,
+                   heuristic: Heuristic = Heuristic()) -> "SparseLinear":
+        """Prune w (d_in, d_out) — stored transposed as (d_out, d_in)."""
+        csr = prune_to_csr(np.asarray(w).T, keep_fraction)
+        l_pad = int(np.max(np.diff(np.asarray(csr.row_ptr))))
+        return cls(csr, max(l_pad, 1), heuristic.choose(csr))
+
+    def __call__(self, x: jax.Array, **kw) -> jax.Array:
+        """x (..., d_in) → (..., d_out)."""
+        lead = x.shape[:-1]
+        xt = x.reshape(-1, x.shape[-1]).T          # (d_in, tokens) = B
+        y = spmm(self.weight, xt.astype(self.weight.dtype),
+                 method=self.method, l_pad=self.l_pad, **kw)
+        return y.T.reshape(*lead, self.weight.m).astype(x.dtype)
+
+
+jax.tree_util.register_pytree_node(
+    SparseLinear,
+    lambda sl: ((sl.weight,), (sl.l_pad, sl.method)),
+    lambda aux, ch: SparseLinear(ch[0], *aux),
+)
+
+
+def prune_mlp(mlp_params: dict, keep_fraction: float) -> dict:
+    """Convert a dense MLP param dict (w1/w2[/w3]) to SparseLinear layers."""
+    return {name: SparseLinear.from_dense(w, keep_fraction)
+            for name, w in mlp_params.items()}
+
+
+def sparse_mlp_apply(sparse_p: dict, x: jax.Array, cfg) -> jax.Array:
+    if "w3" in sparse_p:
+        h = jax.nn.silu(sparse_p["w1"](x)) * sparse_p["w3"](x)
+    else:
+        h = jax.nn.gelu(sparse_p["w1"](x))
+    return sparse_p["w2"](h)

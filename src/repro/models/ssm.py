@@ -1,0 +1,180 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Chunked SSD algorithm: within a chunk the recurrence is computed in its
+"attention" (quadratic) dual form; states are passed between chunks with a
+linear recurrence — O(s·q) compute, O(1)-state decode.
+
+Recurrence (per head, diagonal A):
+    h_t = exp(Δ_t A) · h_{t-1} + Δ_t · B_t ⊗ x_t
+    y_t = C_t · h_t + D · x_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_ssd(key, cfg) -> dict:
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    heads = din // cfg.ssm_head_dim
+    n = cfg.ssm_state
+    ks = jax.random.split(key, 5)
+    s = d ** -0.5
+    return {
+        # fused input projection: [z (din), x (din), B (n), C (n), dt (heads)]
+        "in_proj": jax.random.normal(
+            ks[0], (d, 2 * din + 2 * n + heads), cfg.pdtype) * s,
+        "conv": jax.random.normal(
+            ks[1], (cfg.conv_width, din + 2 * n), cfg.pdtype) * 0.1,
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, heads)).astype(jnp.float32),
+        "d_skip": jnp.ones((heads,), jnp.float32),
+        "dt_bias": jnp.zeros((heads,), jnp.float32),
+        "out_proj": jax.random.normal(ks[2], (din, d), cfg.pdtype) * din ** -0.5,
+    }
+
+
+def _split_proj(p, u, cfg):
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    heads = din // cfg.ssm_head_dim
+    zxbcdt = u @ p["in_proj"].astype(u.dtype)
+    z, xbc, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * n], axis=-1)
+    return z, xbc, dt, din, n, heads
+
+
+def _causal_conv(xbc, conv, state=None):
+    """Depthwise causal conv along seq.  xbc (b,s,c), conv (w,c).
+
+    state (b, w-1, c) holds the trailing inputs for decode; returns
+    (out, new_state)."""
+    w = conv.shape[0]
+    if state is None:
+        pad = jnp.pad(xbc, ((0, 0), (w - 1, 0), (0, 0)))
+        new_state = pad[:, -(w - 1):] if w > 1 else None
+    else:
+        pad = jnp.concatenate([state.astype(xbc.dtype), xbc], axis=1)
+        new_state = pad[:, -(w - 1):] if w > 1 else None
+    out = sum(pad[:, i:i + xbc.shape[1]] * conv[i] for i in range(w))
+    return jax.nn.silu(out), new_state
+
+
+def ssd_scan_chunked(x, dt, a, b, c, *, chunk: int,
+                     mac_dtype=None):
+    """Chunked SSD.  x (B,S,H,P), dt (B,S,H) (post-softplus), a (H,) < 0,
+    b/c (B,S,N).  Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    bs, s, h, p = x.shape
+    n = b.shape[-1]
+    nc = s // chunk
+    mac = mac_dtype or x.dtype
+    xc = x.reshape(bs, nc, chunk, h, p)
+    dtc = dt.reshape(bs, nc, chunk, h)
+    bc = b.reshape(bs, nc, chunk, n)
+    cc = c.reshape(bs, nc, chunk, n)
+
+    da = dtc * a[None, None, None]                    # (B,nc,L,H) log-decay
+    cum = jnp.cumsum(da, axis=2)                       # within-chunk cumsum
+    # intra-chunk (dual / attention form):
+    #   y_t = Σ_{u<=t} C_t·B_u exp(cum_t - cum_u) Δ_u x_u
+    # mask in LOG space before exp — masking after (exp(+big)·0) NaNs the
+    # backward pass.  The O(L²·H) decay tensor and the gathered operands
+    # are kept bf16 (decay ∈ [0,1]; f32 accumulation in the einsums) —
+    # halves the dominant HBM term (§Perf iteration 13).
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    diff = jnp.where(mask[None, None, :, :, None], diff, -jnp.inf)
+    decay = jnp.exp(diff).astype(mac)
+    xb16 = xc.astype(mac)
+    scores = jnp.einsum("bcln,bcmn->bclm", cc.astype(mac),
+                        bc.astype(mac),
+                        preferred_element_type=jnp.float32)  # (B,nc,L,L)
+    y_intra = jnp.einsum("bclm,bclmh,bcmh,bcmhp->bclhp",
+                         scores.astype(mac), decay,
+                         dtc.astype(mac), xb16,
+                         preferred_element_type=jnp.float32)
+
+    # chunk-level states: S_c = Σ_u exp(cum_L - cum_u) Δ_u B_u ⊗ x_u
+    chunk_decay = jnp.exp(cum[:, :, -1:, :] - cum)     # (B,nc,L,H)
+    states = jnp.einsum("bclh,bcln,bclhp->bchpn",
+                        (dtc * chunk_decay).astype(mac),
+                        bc.astype(mac), xb16,
+                        preferred_element_type=jnp.float32)  # (B,nc,H,P,N)
+    total = jnp.exp(cum[:, :, -1])                     # (B,nc,H) chunk decay
+
+    def step(carry, inp):
+        st_prev = carry                                # (B,H,P,N)
+        st_c, tot_c = inp
+        st = st_prev * tot_c[:, :, None, None] + st_c
+        return st, st_prev
+
+    init = jnp.zeros((bs, h, p, n), x.dtype)
+    final, prev_states = jax.lax.scan(
+        step, init, (states.transpose(1, 0, 2, 3, 4),
+                     total.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+
+    # inter-chunk: y_t += C_t · exp(cum_t) · S_{c-1}
+    y_inter = jnp.einsum("bcln,bclh,bchpn->bclhp",
+                         cc, jnp.exp(cum), prev_states)
+    y = (y_intra + y_inter).reshape(bs, s, h, p)
+    return y, final
+
+
+def ssd_apply(p, u, cfg, *, state=None):
+    """u (b, s, d).  Training/prefill: state=None.  Decode: s == 1 with
+    state = {"conv": (b,w-1,c), "ssm": (b,H,P,N)}."""
+    z, xbc, dt, din, n, heads = _split_proj(p, u, cfg)
+    hd = cfg.ssm_head_dim
+    a = -jnp.exp(p["a_log"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+
+    if state is None:
+        xbc, conv_state = _causal_conv(xbc, p["conv"].astype(xbc.dtype))
+        x, b, c = jnp.split(xbc, [din, din + n], axis=-1)
+        bs, s, _ = x.shape
+        xh = x.reshape(bs, s, heads, hd)
+        # pad seq to a chunk multiple with identity steps (dt = 0 →
+        # decay 1, zero state update) so the final state is exact
+        chunk = min(cfg.ssm_chunk, s)
+        pad = (-s) % chunk
+        sp = ((0, 0), (0, pad))
+        y, ssm_state = ssd_scan_chunked(
+            jnp.pad(xh.astype(jnp.float32), sp + ((0, 0), (0, 0))),
+            jnp.pad(dt, sp + ((0, 0),)), a,
+            jnp.pad(b.astype(jnp.float32), sp + ((0, 0),)),
+            jnp.pad(c.astype(jnp.float32), sp + ((0, 0),)), chunk=chunk,
+            mac_dtype=cfg.cdtype)
+        y = y[:, :s]
+        y = y + p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(bs, s, din).astype(u.dtype)
+    else:
+        xbc, conv_state = _causal_conv(
+            xbc, p["conv"].astype(xbc.dtype), state["conv"])
+        x, b, c = jnp.split(xbc, [din, din + n], axis=-1)
+        bs = x.shape[0]
+        xh = x.reshape(bs, heads, hd).astype(jnp.float32)
+        dt1 = dt[:, 0]                                  # (b, H)
+        decay = jnp.exp(dt1 * a[None])                  # (b, H)
+        db_x = jnp.einsum("bh,bn,bhp->bhpn", dt1, b[:, 0].astype(jnp.float32),
+                          xh)
+        ssm_state = state["ssm"] * decay[..., None, None] + db_x
+        y = jnp.einsum("bn,bhpn->bhp", c[:, 0].astype(jnp.float32), ssm_state)
+        y = y + p["d_skip"][None, :, None] * xh
+        y = y.reshape(bs, 1, din).astype(u.dtype)
+
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype)
+    out = y @ p["out_proj"].astype(u.dtype)
+    return out, {"conv": conv_state, "ssm": ssm_state}
+
+
+def init_ssd_state(cfg, batch, dtype=jnp.float32):
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    heads = din // cfg.ssm_head_dim
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, din + 2 * cfg.ssm_state),
+                          dtype),
+        "ssm": jnp.zeros((batch, heads, cfg.ssm_head_dim, cfg.ssm_state),
+                         jnp.float32),
+    }

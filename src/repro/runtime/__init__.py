@@ -1,0 +1,5 @@
+from .steps import (init_train_state, make_decode_step, make_prefill_step,
+                    make_train_step)
+
+__all__ = ["init_train_state", "make_decode_step", "make_prefill_step",
+           "make_train_step"]

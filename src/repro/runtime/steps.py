@@ -1,0 +1,114 @@
+"""Step functions: the units the launcher jits and the dry-run lowers.
+
+``make_train_step``: fwd+bwd+AdamW with scan-over-microbatches gradient
+accumulation (bounds live activations), remat, and optional int8
+error-feedback gradient compression of the cross-replica payload.
+
+``make_prefill_step`` / ``make_decode_step``: the serving pair.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.optim import adamw
+from repro.optim import compression as gc
+
+
+def make_train_step(cfg, opt_cfg: adamw.AdamWConfig, *,
+                    microbatches: int = 1, remat: bool = True,
+                    loss_chunk: int = 512,
+                    grad_compression: str = "none",
+                    param_mode: str = "fsdp"):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {params, opt, [residual]};  batch leaves have leading dim
+    global_batch (sharded over dp by the caller's in_shardings).
+    ``param_mode``: "fsdp" (f32 params sharded over data+model; gathered
+    per use) or "zero1" (bf16 compute params sharded over model only; f32
+    master + moments FSDP-sharded in the optimizer state).
+    """
+
+    def loss_fn(params, mb):
+        loss, aux = M.loss_and_aux(params, cfg, mb, remat=remat,
+                                   loss_chunk=loss_chunk)
+        return loss, aux
+
+    def grads_of(params, batch):
+        if microbatches == 1:
+            (loss, aux), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return loss, aux, grads
+
+        # batch arrives pre-shaped (microbatches, local, ...) — sharded on
+        # axis 1 — and is scanned over axis 0.  (Slicing a dp-sharded batch
+        # axis instead makes GSPMD all-gather the whole batch per
+        # microbatch; see EXPERIMENTS.md §Perf iteration 0.)
+        def acc_step(carry, mb):
+            loss_acc, grads_acc = carry
+            (loss, aux), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            grads_acc = jax.tree.map(jnp.add, grads_acc, grads)
+            return (loss_acc + loss, grads_acc), aux
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, grads), auxs = jax.lax.scan(
+            acc_step, (jnp.zeros(()), zeros), batch)
+        inv = 1.0 / microbatches
+        grads = jax.tree.map(lambda g: g * inv, grads)
+        aux = jax.tree.map(lambda a: a[-1], auxs)
+        return loss_sum * inv, aux, grads
+
+    def train_step(state, batch):
+        params, opt = state["params"], state["opt"]
+        loss, aux, grads = grads_of(params, batch)
+        if grad_compression == "int8_ef":
+            grads, residual = gc.roundtrip(grads, state["residual"])
+        if param_mode == "zero1":
+            new_params, new_opt, metrics = adamw.apply_updates_zero1(
+                params, grads, opt, opt_cfg)
+        else:
+            new_params, new_opt, metrics = adamw.apply_updates(
+                params, grads, opt, opt_cfg)
+        new_state = {"params": new_params, "opt": new_opt}
+        if grad_compression == "int8_ef":
+            new_state["residual"] = residual
+        metrics = dict(metrics, loss=loss, nll=aux["nll"], aux=aux["aux"])
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg, *, cache_len: Optional[int] = None):
+    def prefill_step(params, batch):
+        caches, logits, pos = M.prefill(params, cfg, batch,
+                                        cache_len=cache_len)
+        return {"caches": caches, "logits": logits, "pos": pos}
+
+    return prefill_step
+
+
+def make_decode_step(cfg):
+    def decode_step(params, caches, batch, pos):
+        logits, new_caches = M.decode_step(params, cfg, caches, batch, pos)
+        return logits, new_caches
+
+    return decode_step
+
+
+def init_train_state(cfg, key, *, grad_compression: str = "none",
+                     param_mode: str = "fsdp"):
+    params = M.init_params(cfg, key)
+    if param_mode == "zero1":
+        params, opt = adamw.init_state_zero1(params, cfg.cdtype)
+        state = {"params": params, "opt": opt}
+    else:
+        state = {"params": params, "opt": adamw.init_state(params)}
+    if grad_compression == "int8_ef":
+        state["residual"] = gc.init_residual(state["params"])
+    return state

@@ -1,0 +1,82 @@
+"""CSR container: roundtrips, invariants (property-based)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CSR, from_dense, prune_to_csr, random_csr
+from repro.core.csr import rows_from_row_ptr
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@st.composite
+def dense_matrices(draw):
+    m = draw(st.integers(1, 12))
+    k = draw(st.integers(1, 12))
+    density = draw(st.floats(0.0, 1.0))
+    rng = np.random.default_rng(draw(st.integers(0, 2**31 - 1)))
+    d = rng.standard_normal((m, k)) * (rng.random((m, k)) < density)
+    return d.astype(np.float32)
+
+
+@settings(max_examples=30, deadline=None)
+@given(dense_matrices())
+def test_from_dense_roundtrip(d):
+    a = from_dense(d)
+    np.testing.assert_array_equal(np.asarray(a.to_dense()), d)
+
+
+@settings(max_examples=30, deadline=None)
+@given(dense_matrices(), st.integers(0, 7))
+def test_roundtrip_with_padding(d, extra_pad):
+    nnz = int((d != 0).sum())
+    a = from_dense(d, nnz_pad=max(nnz, 1) + extra_pad)
+    np.testing.assert_array_equal(np.asarray(a.to_dense()), d)
+    assert int(a.nnz()) == nnz
+
+
+@settings(max_examples=30, deadline=None)
+@given(dense_matrices())
+def test_rows_from_row_ptr(d):
+    a = from_dense(d)
+    rows = np.asarray(rows_from_row_ptr(a.row_ptr, a.nnz_pad))
+    want_rows, _ = np.nonzero(d)
+    nnz = len(want_rows)
+    if nnz:
+        np.testing.assert_array_equal(rows[:nnz], want_rows)
+    # padded tail must land out of range (row id == m) so epilogues drop it
+    assert np.all(rows[nnz:] == d.shape[0])
+
+
+def test_random_csr_row_lengths():
+    a = random_csr(jax.random.PRNGKey(0), 50, 64, nnz_per_row=(2, 10))
+    lengths = np.diff(np.asarray(a.row_ptr))
+    assert lengths.min() >= 2 and lengths.max() <= 10
+    # col indices sorted and unique within each row
+    cols = np.asarray(a.col_ind)
+    rp = np.asarray(a.row_ptr)
+    for r in range(50):
+        row_cols = cols[rp[r]:rp[r + 1]]
+        assert np.all(np.diff(row_cols) > 0)
+
+
+def test_prune_to_csr_keeps_top_magnitude():
+    rng = np.random.default_rng(3)
+    w = rng.standard_normal((16, 32)).astype(np.float32)
+    a = prune_to_csr(w, keep_fraction=0.25)
+    d = np.asarray(a.to_dense())
+    kept = int((d != 0).sum())
+    assert kept == 16 * 8
+    # every kept entry must be among the row's top-8 magnitudes
+    for r in range(16):
+        thresh = np.sort(np.abs(w[r]))[-8]
+        nz = d[r] != 0
+        assert np.all(np.abs(w[r][nz]) >= thresh - 1e-6)
+        np.testing.assert_array_equal(d[r][nz], w[r][nz])
+
+
+def test_mean_row_length():
+    a = random_csr(jax.random.PRNGKey(1), 10, 20, nnz_per_row=4)
+    assert float(a.mean_row_length()) == pytest.approx(4.0)

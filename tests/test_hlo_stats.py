@@ -1,0 +1,92 @@
+"""Validate the trip-count-aware HLO parser against ground truth:
+unrolled modules (exact flop counts) and hand-built collectives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_stats
+
+
+def _parse(fn, *specs):
+    comp = jax.jit(fn).lower(*specs).compile()
+    return hlo_stats.parse_module(comp.as_text())
+
+
+def test_scan_flops_scaled_by_trip_count():
+    def f(w, x):
+        def step(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(step, x, None, length=7)
+        return y.sum()
+
+    r = _parse(f, jax.ShapeDtypeStruct((64, 64), jnp.float32),
+               jax.ShapeDtypeStruct((8, 64), jnp.float32))
+    assert r["flops"] == 7 * 2 * 8 * 64 * 64
+
+
+def test_nested_scan_flops_multiply():
+    def g(w, x):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            ci, _ = jax.lax.scan(inner, c, None, length=5)
+            return ci, None
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y.sum()
+
+    r = _parse(g, jax.ShapeDtypeStruct((64, 64), jnp.float32),
+               jax.ShapeDtypeStruct((8, 64), jnp.float32))
+    assert r["flops"] == 15 * 2 * 8 * 64 * 64
+
+
+def test_scan_matches_unrolled():
+    """Scanned and unrolled versions of the same program must agree on
+    flops (the whole point of trip-count scaling)."""
+    w = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    x = jax.ShapeDtypeStruct((4, 32), jnp.float32)
+
+    def scanned(w, x):
+        y, _ = jax.lax.scan(lambda c, _: (jnp.tanh(c @ w), None), x, None,
+                            length=6)
+        return y.sum()
+
+    def unrolled(w, x):
+        for _ in range(6):
+            x = jnp.tanh(x @ w)
+        return x.sum()
+
+    rs = _parse(scanned, w, x)
+    ru = _parse(unrolled, w, x)
+    assert rs["flops"] == ru["flops"] == 6 * 2 * 4 * 32 * 32
+
+
+def test_collective_wire_bytes():
+    mesh = jax.make_mesh((len(jax.devices()),), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    n = len(jax.devices())
+    if n == 1:
+        pytest.skip("single device — no collectives emitted")
+
+
+def test_batch_dot_general_flops():
+    def f(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b)
+
+    r = _parse(f, jax.ShapeDtypeStruct((4, 8, 16), jnp.float32),
+               jax.ShapeDtypeStruct((4, 16, 32), jnp.float32))
+    assert r["flops"] == 2 * 4 * 8 * 16 * 32
+
+
+def test_dtype_bytes_parsing():
+    assert hlo_stats._type_bytes("bf16[8,64]{1,0}") == 8 * 64 * 2
+    assert hlo_stats._type_bytes("(s32[], f32[8,64]{1,0})") == 4 + 8 * 64 * 4
+    assert hlo_stats._type_bytes("pred[16]") == 16
+
+
+def test_wire_factors():
+    assert hlo_stats._wire_factor("all-reduce", 8) == pytest.approx(1.75)
+    assert hlo_stats._wire_factor("all-gather", 8) == pytest.approx(0.875)
+    assert hlo_stats._wire_factor("reduce-scatter", 8) == 7.0
+    assert hlo_stats._wire_factor("collective-permute", 2) == 1.0
+    assert hlo_stats._wire_factor("all-reduce", 1) == 0.0

@@ -1,0 +1,212 @@
+"""Model-component correctness: each fast path vs. its naive reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import rglru as R
+from repro.models import ssm as S
+from repro.models import model as M
+
+
+def naive_attention(q, k, v, window=None, softcap=0.0):
+    b, sq, h, dh = q.shape
+    _, skv, kvh, _ = k.shape
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, dh).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
+    s = s * dh ** -0.5
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(sq)
+    kpos = jnp.arange(skv)
+    mask = qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= kpos[None, :] > (qpos[:, None] - window)
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bkgqd", p, v.astype(jnp.float32))
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dh)
+
+
+@pytest.mark.parametrize("window", [None, 8, 32])
+@pytest.mark.parametrize("gqa", [1, 4])
+def test_flash_attention_vs_naive(window, gqa):
+    b, s, kvh, dh = 2, 64, 2, 16
+    h = kvh * gqa
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, s, h, dh))
+    k = jax.random.normal(ks[1], (b, s, kvh, dh))
+    v = jax.random.normal(ks[2], (b, s, kvh, dh))
+    got = L.flash_attention(q, k, v, window=window, q_chunk=16, kv_chunk=16)
+    want = naive_attention(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [None, 16])
+def test_decode_attention_matches_last_row(window):
+    """decode at position s-1 == last row of full attention."""
+    b, s, kvh, g, dh = 2, 32, 2, 2, 16
+    h = kvh * g
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (b, s, h, dh))
+    k = jax.random.normal(ks[1], (b, s, kvh, dh))
+    v = jax.random.normal(ks[2], (b, s, kvh, dh))
+    full = naive_attention(q, k, v, window=window)
+    pos = jnp.full((b,), s - 1, jnp.int32)
+    got = L.decode_attention(q[:, -1:], k, v, pos, window=window)
+    np.testing.assert_allclose(np.asarray(got[:, 0]),
+                               np.asarray(full[:, -1]), rtol=2e-5, atol=2e-5)
+
+
+def _naive_ssd(x, dt, a, b, c):
+    """Sequential SSD recurrence (float64-ish reference)."""
+    bs, s, h, p = x.shape
+    n = b.shape[-1]
+    hstate = np.zeros((bs, h, p, n))
+    ys = np.zeros((bs, s, h, p))
+    x, dt, a, b, c = map(np.asarray, (x, dt, a, b, c))
+    for t in range(s):
+        decay = np.exp(dt[:, t] * a[None])                    # (bs, h)
+        upd = np.einsum("bh,bn,bhp->bhpn", dt[:, t], b[:, t], x[:, t])
+        hstate = hstate * decay[..., None, None] + upd
+        ys[:, t] = np.einsum("bn,bhpn->bhp", c[:, t], hstate)
+    return ys, hstate
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_ssd_chunked_vs_sequential(chunk):
+    bs, s, h, p, n = 2, 16, 3, 4, 5
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    x = jax.random.normal(ks[0], (bs, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bs, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    b = jax.random.normal(ks[3], (bs, s, n))
+    c = jax.random.normal(ks[4], (bs, s, n))
+    y, st = S.ssd_scan_chunked(x, dt, a, b, c, chunk=chunk)
+    y_ref, st_ref = _naive_ssd(x, dt, a, b, c)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st), st_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_decode_continues_prefill():
+    """prefill(s tokens) then decode == forward over s+1 tokens."""
+    cfg = get_smoke_config("mamba2-1.3b")
+    p = S.init_ssd(jax.random.PRNGKey(0), cfg)
+    u = jax.random.normal(jax.random.PRNGKey(1), (2, 9, cfg.d_model))
+    full, _ = S.ssd_apply(p, u, cfg)
+    out_pre, state = S.ssd_apply(p, u[:, :8], cfg)
+    out_dec, _ = S.ssd_apply(p, u[:, 8:9], cfg, state=state)
+    np.testing.assert_allclose(np.asarray(out_dec), np.asarray(full[:, 8:9]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_rglru_decode_continues_prefill():
+    cfg = get_smoke_config("recurrentgemma-2b")
+    p = R.init_rglru(jax.random.PRNGKey(0), cfg)
+    u = jax.random.normal(jax.random.PRNGKey(1), (2, 9, cfg.d_model))
+    full, _ = R.rglru_apply(p, u, cfg)
+    _, state = R.rglru_apply(p, u[:, :8], cfg)
+    out_dec, _ = R.rglru_apply(p, u[:, 8:9], cfg, state=state)
+    np.testing.assert_allclose(np.asarray(out_dec), np.asarray(full[:, 8:9]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_rglru_scan_vs_sequential():
+    cfg = get_smoke_config("recurrentgemma-2b")
+    p = R.init_rglru(jax.random.PRNGKey(3), cfg)
+    u = jax.random.normal(jax.random.PRNGKey(4), (1, 12, cfg.d_model))
+    full, final = R.rglru_apply(p, u, cfg)
+    # step one token at a time
+    state = R.init_rglru_state(cfg, 1)
+    outs = []
+    for t in range(12):
+        o, state = R.rglru_apply(p, u[:, t:t + 1], cfg, state=state)
+        outs.append(o)
+    seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(seq), np.asarray(full),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_moe_sort_matches_dense():
+    import dataclasses
+    cfg = get_smoke_config("olmoe-1b-7b")
+    cfg = dataclasses.replace(cfg, compute_dtype="float32")
+    p = MOE.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    y_sort, aux1 = MOE.moe_apply(p, x, cfg, use_kernel=False,
+                                 capacity_factor=float(cfg.num_experts))
+    cfg_d = dataclasses.replace(cfg, moe_impl="dense")
+    y_dense, aux2 = MOE.moe_apply(p, x, cfg_d, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(y_sort), np.asarray(y_dense),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(float(aux1), float(aux2), rtol=1e-5)
+
+
+def test_moe_sort_matches_pallas_kernel():
+    cfg = get_smoke_config("olmoe-1b-7b")
+    p = MOE.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    y_xla, _ = MOE.moe_apply(p, x, cfg, use_kernel=False, tt=8,
+                             capacity_factor=float(cfg.num_experts))
+    y_pal, _ = MOE.moe_apply(p, x, cfg, use_kernel=True, tt=8,
+                             capacity_factor=float(cfg.num_experts))
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_xla),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "recurrentgemma-2b",
+                                  "mamba2-1.3b", "olmoe-1b-7b"])
+def test_prefill_decode_consistency(arch):
+    """Gold standard: prefill(s) + decode == teacher-forced full forward.
+
+    MoE archs compare in f32: top-k routing is discontinuous, so bf16
+    noise can flip a near-tied expert choice between the two (individually
+    correct) paths — f32 isolates the algorithm (2e-6 agreement)."""
+    import dataclasses
+    cfg = get_smoke_config(arch)
+    if cfg.num_experts:
+        cfg = dataclasses.replace(cfg, compute_dtype="float32")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    b, s = 1, 12
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s + 1), 0,
+                                cfg.vocab_size)
+    # full forward logits at position s-1 predict token s
+    h = M.embed_inputs(params, cfg, {"tokens": tokens[:, :s + 1]})
+    h, _, _ = M.forward(params, cfg, h)
+    h = L.norm_apply(params["final_norm"], h, cfg.norm)
+    full_logits = h[:, s - 1].astype(jnp.float32) @ M.unembed_matrix(
+        params, cfg).T.astype(jnp.float32)
+    # prefill s tokens, then the same position's logits come from prefill
+    caches, pre_logits, pos = M.prefill(params, cfg,
+                                        {"tokens": tokens[:, :s]},
+                                        cache_len=s + 4)
+    np.testing.assert_allclose(np.asarray(pre_logits[:, 0]),
+                               np.asarray(full_logits), rtol=3e-2, atol=3e-2)
+    # decode token s: logits must match full forward at position s
+    full_logits_s = h[:, s].astype(jnp.float32) @ M.unembed_matrix(
+        params, cfg).T.astype(jnp.float32)
+    dec_logits, _ = M.decode_step(params, cfg, caches,
+                                  {"tokens": tokens[:, s:s + 1]}, pos)
+    np.testing.assert_allclose(np.asarray(dec_logits[:, 0]),
+                               np.asarray(full_logits_s),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_chunked_ce_matches_full():
+    from repro.models.losses import chunked_cross_entropy
+    b, s, d, v = 2, 16, 8, 32
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    h = jax.random.normal(ks[0], (b, s, d))
+    emb = jax.random.normal(ks[1], (v, d))
+    y = jax.random.randint(ks[2], (b, s), 0, v)
+    nll, cnt = chunked_cross_entropy(h, emb, y, chunk=4)
+    logits = h @ emb.T
+    want = (jax.nn.logsumexp(logits, -1)
+            - jnp.take_along_axis(logits, y[..., None], -1)[..., 0]).mean()
+    np.testing.assert_allclose(float(nll), float(want), rtol=1e-5)
+    assert float(cnt) == b * s

@@ -1,0 +1,84 @@
+"""Nonzero-split partitioning invariants (paper §4.2 Phase 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import partition_spmm, chunk_segments, random_csr
+from repro.core.csr import rows_from_row_ptr
+from repro.kernels.merge_spmm import plan_merge
+
+
+@st.composite
+def csr_cases(draw):
+    m = draw(st.integers(1, 40))
+    k = draw(st.integers(1, 32))
+    hi = draw(st.integers(0, min(k, 12)))
+    seed = draw(st.integers(0, 2**31 - 1))
+    pad = draw(st.integers(0, 9))
+    a = random_csr(jax.random.PRNGKey(seed), m, k, nnz_per_row=(0, hi))
+    if pad:
+        a = random_csr(jax.random.PRNGKey(seed), m, k, nnz_per_row=(0, hi),
+                       pad_to=a.nnz_pad + pad)
+    return a
+
+
+@settings(max_examples=30, deadline=None)
+@given(csr_cases(), st.integers(1, 9))
+def test_partition_equal_nonzeros(a, t):
+    """Every chunk gets exactly t nonzeroes; starts are the owning rows."""
+    chunk_start_rows, nnz_rows = partition_spmm(a, t)
+    rp = np.asarray(a.row_ptr)
+    rows = np.asarray(nnz_rows)
+    nnz = int(rp[-1])
+    for c, r in enumerate(np.asarray(chunk_start_rows)):
+        s = c * t
+        if s < nnz:
+            assert rp[r] <= s < rp[r + 1]
+    # CSR→COO flattening is exact
+    want = np.repeat(np.arange(a.m), np.diff(rp))
+    np.testing.assert_array_equal(rows[:nnz], want)
+
+
+@settings(max_examples=30, deadline=None)
+@given(csr_cases(), st.integers(1, 9))
+def test_chunk_segments_cover_every_nonzero(a, t):
+    _, nnz_rows = partition_spmm(a, t)
+    rows, local, seg_rows = chunk_segments(nnz_rows, t, a.m)
+    n_chunks = rows.shape[0]
+    rows, local, seg_rows = map(np.asarray, (rows, local, seg_rows))
+    nnz = int(np.asarray(a.row_ptr)[-1])
+    # Each in-range nonzero's (chunk, local segment) maps back to its row.
+    for i in range(nnz):
+        c, s = divmod(i, t)
+        assert seg_rows[c, local[c, s]] == rows[c, s]
+    # local ids increase only at row changes
+    assert np.all((np.diff(local, axis=1) == 0) | (np.diff(rows, axis=1) != 0))
+
+
+@settings(max_examples=30, deadline=None)
+@given(csr_cases(), st.integers(1, 9), st.sampled_from([4, 8]))
+def test_plan_merge_invariants(a, t, tm):
+    """The Pallas merge plan: every valid nonzero lands in exactly one slot
+    of a chunk belonging to its row tile; tiles are monotone; `first` marks
+    each tile's first chunk; every row tile is visited."""
+    plan = jax.tree.map(np.asarray, plan_merge(a, t=t, tm=tm))
+    n_tiles = -(-a.m // tm)
+    tile, first = plan["tile"], plan["first"]
+    assert np.all(np.diff(tile) >= 0), "tile stream must be monotone"
+    np.testing.assert_array_equal(
+        first, np.r_[1, (tile[1:] != tile[:-1]).astype(np.int32)])
+    assert set(range(n_tiles)) <= set(tile.tolist()), "every tile visited"
+
+    # Reconstruct the matrix from the plan and compare against to_dense.
+    m_pad = n_tiles * tm
+    recon = np.zeros((m_pad, a.k), np.float64)
+    n_chunks, tt = plan["cols"].shape
+    for c in range(n_chunks):
+        for s in range(tt):
+            v = plan["vals"][c, s]
+            if v != 0:
+                row = tile[c] * tm + plan["lrow"][c, s]
+                recon[row, plan["cols"][c, s]] += v
+    np.testing.assert_allclose(recon[: a.m], np.asarray(a.to_dense()),
+                               rtol=1e-6, atol=1e-6)

@@ -1,0 +1,89 @@
+"""Deliverable (f) validation without compilation: every (arch × shape)
+cell's input specs are well-formed ShapeDtypeStructs with the assigned
+shapes — train shapes lower train_step inputs, decode shapes lower
+serve-step inputs with a seq_len cache."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_config, shape_cells
+from repro.launch.specs import batch_specs, cache_specs, input_specs
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_cells_match_assignment(arch):
+    cells = shape_cells(arch)
+    assert {"train_4k", "prefill_32k", "decode_32k"} <= set(cells)
+    if arch in ("mixtral-8x22b", "mamba2-1.3b", "recurrentgemma-2b"):
+        assert "long_500k" in cells     # sub-quadratic archs
+    else:
+        assert "long_500k" not in cells  # documented skip (DESIGN.md §5)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "musicgen-large",
+                                  "mamba2-1.3b"])
+def test_train_specs_shapes(arch):
+    cfg = get_config(arch)
+    shape = SHAPES["train_4k"]
+    specs = input_specs(arch, "train_4k", microbatches=4)
+    b = specs["batch"]
+    assert b["labels"].shape == (4, 64, 4096)
+    if cfg.input_mode == "tokens":
+        assert b["tokens"].shape == (4, 64, 4096)
+        assert b["tokens"].dtype == jnp.int32
+    else:
+        assert b["embeds"].shape == (4, 64, 4096, cfg.d_model)
+    # state covers params + opt moments
+    st = specs["state"]
+    assert {"params", "opt"} <= set(st)
+    n_leaves = len(jax.tree.leaves(st["params"]))
+    assert n_leaves == len(jax.tree.leaves(st["opt"]["m"]))
+
+
+@pytest.mark.parametrize("arch,shape_name", [
+    ("qwen2-72b", "decode_32k"),
+    ("mixtral-8x22b", "long_500k"),
+    ("mamba2-1.3b", "long_500k"),
+    ("recurrentgemma-2b", "decode_32k"),
+])
+def test_decode_specs_have_seqlen_cache(arch, shape_name):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    specs = input_specs(arch, shape_name)
+    assert specs["pos"].shape == (shape.global_batch,)
+    tok = specs["batch"].get("tokens")
+    if tok is not None:
+        assert tok.shape == (shape.global_batch, 1)  # ONE new token
+    leaves = jax.tree.leaves(specs["caches"])
+    assert leaves, "decode must carry a cache"
+    kv = [l for l in leaves if l.ndim == 5]
+    if cfg.num_heads:  # attention archs: (layers?, b, S, kv, dh)
+        assert any(l.shape[2] == shape.seq_len for l in kv), \
+            "KV cache capacity must equal seq_len"
+    if arch == "mamba2-1.3b":
+        # O(1) state instead of a KV cache — no seq_len-sized leaf at all
+        assert not any(shape.seq_len in l.shape for l in leaves)
+    # serving params are compute-dtype (bf16) — §Perf
+    pl = [l for l in jax.tree.leaves(specs["params"])
+          if jnp.issubdtype(l.dtype, jnp.floating)]
+    assert all(l.dtype == cfg.cdtype for l in pl)
+
+
+def test_prefill_specs_no_labels():
+    specs = input_specs("granite-3-2b", "prefill_32k")
+    assert "labels" not in specs["batch"]
+    assert specs["batch"]["tokens"].shape == (32, 32768)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_count_sane(arch):
+    """Sanity: configured param counts are within 2× of the advertised
+    model size (embedding-heavy small models overshoot their nameplate)."""
+    nameplate = {
+        "olmoe-1b-7b": 7e9, "mixtral-8x22b": 141e9, "command-r-35b": 35e9,
+        "granite-3-2b": 2.5e9, "qwen2-72b": 72e9, "llama3.2-1b": 1.2e9,
+        "musicgen-large": 3.3e9, "internvl2-76b": 76e9,
+        "mamba2-1.3b": 1.3e9, "recurrentgemma-2b": 2.7e9,
+    }[arch]
+    n = get_config(arch).param_count()
+    assert 0.5 * nameplate < n < 2.1 * nameplate, (arch, n)

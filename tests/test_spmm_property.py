@@ -1,0 +1,79 @@
+"""Property-based system invariants for the SpMM core (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Heuristic, calibrate, random_csr, spmm
+from repro.kernels import ref, ops
+
+
+@st.composite
+def spmm_cases(draw):
+    m = draw(st.integers(1, 24))
+    k = draw(st.integers(1, 24))
+    n = draw(st.integers(1, 24))
+    hi = draw(st.integers(0, min(k, 8)))
+    seed = draw(st.integers(0, 2**31 - 1))
+    a = random_csr(jax.random.PRNGKey(seed), m, k, nnz_per_row=(0, hi))
+    b = jax.random.normal(jax.random.PRNGKey(seed + 1), (k, n))
+    return a, b
+
+
+@settings(max_examples=25, deadline=None)
+@given(spmm_cases())
+def test_methods_agree(case):
+    """Row-split, merge, and the oracle agree on arbitrary matrices."""
+    a, b = case
+    want = np.asarray(ref.spmm_dense_ref(a, b))
+    for method in ("merge", "rowsplit"):
+        got = np.asarray(spmm(a, b, method=method))
+        np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5,
+                                   err_msg=method)
+
+
+@settings(max_examples=25, deadline=None)
+@given(spmm_cases(), st.floats(-3, 3), st.floats(-3, 3))
+def test_linearity(case, alpha, beta):
+    """spmm(A, αB1 + βB2) == α spmm(A,B1) + β spmm(A,B2)."""
+    a, b = case
+    b2 = jnp.roll(b, 1, axis=0)
+    lhs = ops.merge_spmm(a, alpha * b + beta * b2)
+    rhs = alpha * ops.merge_spmm(a, b) + beta * ops.merge_spmm(a, b2)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(spmm_cases())
+def test_identity_rows(case):
+    """A row with a single unit nonzero at column j copies B[j]."""
+    a, b = case
+    d = np.asarray(a.to_dense())
+    out = np.asarray(ops.merge_spmm(a, b))
+    for r in range(d.shape[0]):
+        nz = np.nonzero(d[r])[0]
+        if len(nz) == 1 and d[r, nz[0]] == 1.0:
+            np.testing.assert_allclose(out[r], np.asarray(b)[nz[0]],
+                                       rtol=1e-5, atol=1e-5)
+
+
+def test_heuristic_rule_matches_paper():
+    h = Heuristic()  # default threshold = 9.35 (paper §5.4)
+    short = random_csr(jax.random.PRNGKey(0), 64, 64, nnz_per_row=4)
+    long = random_csr(jax.random.PRNGKey(1), 64, 64, nnz_per_row=32)
+    assert h.choose(short) == "merge"
+    assert h.choose(long) == "rowsplit"
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(0.5, 60), min_size=3, max_size=40),
+       st.floats(1, 30))
+def test_calibrate_recovers_separable_threshold(ds, true_thr):
+    """If timings are perfectly separated by a threshold, calibrate finds a
+    100%-accurate one (the paper's oracle-agreement metric)."""
+    ds = np.asarray(ds)
+    merge_us = np.where(ds < true_thr, 1.0, 2.0)
+    rowsplit_us = np.where(ds < true_thr, 2.0, 1.0)
+    thr, acc = calibrate(ds, rowsplit_us, merge_us)
+    assert acc == 1.0
