@@ -1,0 +1,17 @@
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: ci test smoke bench
+
+ci: test smoke
+
+# Tier-1 verify (ROADMAP.md)
+test:
+	$(PY) -m pytest -x -q
+
+# Fast interpret-mode smoke of the public SpMM API
+smoke:
+	$(PY) examples/quickstart.py
+
+bench:
+	$(PY) -m benchmarks.run

@@ -30,7 +30,7 @@ def run(csv=print):
         b = make_b(1, k, N)
         t_vendor = timeit(jax.jit(ref.spmm_gather_ref), a, b)
         t_rs = timeit(functools.partial(
-            spmm, method="rowsplit", impl="xla", l_pad=npr), a, b)
+            spmm, method="rowsplit", impl="xla", plan="inline", l_pad=npr), a, b)
         csv(f"fig4_rowsplit_len{npr},{t_rs:.1f},{t_vendor / t_rs:.2f}x")
 
 

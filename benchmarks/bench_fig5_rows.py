@@ -42,8 +42,8 @@ def _bench_suite(name, mean_len, csv):
         t_vendor = timeit(jax.jit(ref.spmm_gather_ref), a, b)
         l_pad = int(np.max(np.diff(np.asarray(a.row_ptr))))
         t_rs = timeit(functools.partial(
-            spmm, method="rowsplit", impl="xla", l_pad=max(l_pad, 1)), a, b)
-        t_mg = timeit(functools.partial(spmm, method="merge", impl="xla"),
+            spmm, method="rowsplit", impl="xla", plan="inline", l_pad=max(l_pad, 1)), a, b)
+        t_mg = timeit(functools.partial(spmm, method="merge", impl="xla", plan="inline"),
                       a, b)
         rs_speed.append(t_vendor / t_rs)
         mg_speed.append(t_vendor / t_mg)

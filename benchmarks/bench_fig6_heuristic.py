@@ -42,9 +42,9 @@ def run(csv=print):
         l_pad = int(np.max(np.diff(np.asarray(a.row_ptr))))
         t_vendor.append(timeit(jax.jit(ref.spmm_gather_ref), a, b))
         t_rs.append(timeit(functools.partial(
-            spmm, method="rowsplit", impl="xla", l_pad=max(l_pad, 1)), a, b))
+            spmm, method="rowsplit", impl="xla", plan="inline", l_pad=max(l_pad, 1)), a, b))
         t_mg.append(timeit(functools.partial(
-            spmm, method="merge", impl="xla"), a, b))
+            spmm, method="merge", impl="xla", plan="inline"), a, b))
         ds.append(float(a.mean_row_length()))
     ds, t_rs, t_mg, t_vendor = map(np.asarray, (ds, t_rs, t_mg, t_vendor))
 

@@ -27,7 +27,7 @@ def run(csv=print):
     crossover = None
     for pct in (0.5, 1, 2, 4, 6, 9, 12, 16, 25):
         a = make_matrix(5, M, K, density=pct / 100)
-        t_sp = timeit(functools.partial(spmm, method="merge", impl="xla"),
+        t_sp = timeit(functools.partial(spmm, method="merge", impl="xla", plan="inline"),
                       a, b)
         csv(f"fig7_spmm_d{pct}%,{t_sp:.1f},{t_gemm / t_sp:.2f}x")
         if crossover is None and t_sp > t_gemm:

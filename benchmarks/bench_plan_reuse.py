@@ -1,0 +1,61 @@
+"""Plan reuse: cold plan-build+execute vs. warm execute-only (the engine).
+
+The amortization claim behind the plan-once/execute-many refactor (and
+Shi et al., arXiv:2005.14469): per-pattern preprocessing is paid once,
+so steady-state SpMM cost is the execute phase alone.  Three numbers per
+(matrix, method):
+
+* ``plan_build``  — host-side ``build_plan`` incl. the transpose plan
+  (paid once per sparsity pattern, amortized by the engine cache),
+* ``cold``        — build + execute, the first-call cost,
+* ``warm``        — execute through the prebuilt plan, the steady state;
+  ``derived`` reports cold/warm, the per-pattern amortization factor.
+
+Also timed: ``inline`` — the pre-engine regime with planning traced into
+every call (what the figure benchmarks reproduce), as the honest baseline
+warm execution must beat.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+from repro.core import build_plan, execute_plan, spmm
+from .common import make_b, make_matrix, timeit
+
+N = 64
+M = 2048
+
+
+def _cases():
+    yield "merge_short4", make_matrix(0, M, M, nnz_per_row=(0, 8)), "merge"
+    yield "merge_mid16", make_matrix(1, M, M, nnz_per_row=(0, 32)), "merge"
+    yield "rowsplit_long64", make_matrix(2, M, M, nnz_per_row=64), "rowsplit"
+
+
+def run(csv=print):
+    csv("name,us_per_call,derived")
+    for name, a, method in _cases():
+        b = make_b(7, a.k, N)
+        # Warm the planning ops' trace/compile (build_plan itself never
+        # caches), so t_plan is the steady per-pattern cost, not XLA setup.
+        build_plan(a, method=method)
+        t0 = time.perf_counter()
+        plan = build_plan(a, method=method)
+        t_plan = (time.perf_counter() - t0) * 1e6
+
+        warm_fn = functools.partial(execute_plan, impl="xla")
+        t_warm = timeit(warm_fn, plan, a.vals, b)
+        t_inline = timeit(functools.partial(
+            spmm, method=method, impl="xla", plan="inline"), a, b)
+        t_cold = t_plan + t_warm
+
+        csv(f"plan_{name}_build,{t_plan:.1f},once_per_pattern")
+        csv(f"plan_{name}_cold,{t_cold:.1f},build+execute")
+        csv(f"plan_{name}_warm,{t_warm:.1f},{t_cold / t_warm:.1f}x_amortized")
+        csv(f"plan_{name}_inline,{t_inline:.1f},"
+            f"{t_inline / t_warm:.2f}x_vs_warm")
+
+
+if __name__ == "__main__":
+    run()

@@ -12,7 +12,8 @@ import sys
 def main() -> None:
     from . import (bench_fig1_imbalance, bench_fig4_aspect, bench_fig5_rows,
                    bench_fig6_heuristic, bench_fig7_density,
-                   bench_table1_analysis, bench_moe_balance)
+                   bench_plan_reuse, bench_table1_analysis,
+                   bench_train_step, bench_moe_balance)
     mods = [
         ("fig1", bench_fig1_imbalance),
         ("fig4", bench_fig4_aspect),
@@ -21,6 +22,8 @@ def main() -> None:
         ("fig7", bench_fig7_density),
         ("table1", bench_table1_analysis),
         ("moe", bench_moe_balance),
+        ("plan", bench_plan_reuse),
+        ("train", bench_train_step),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     printed_header = False

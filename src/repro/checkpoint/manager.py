@@ -24,7 +24,23 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:           # container without zstd: fall back to stdlib
+    import zlib
+
+    class _ZlibCodec:
+        """Drop-in for the two zstandard module functions we use.
+
+        Checkpoints written with one codec are unreadable by the other —
+        acceptable: the fallback only exists for environments that never
+        had zstandard to begin with.
+        """
+        compress = staticmethod(zlib.compress)
+        decompress = staticmethod(zlib.decompress)
+
+    zstandard = _ZlibCodec()
 
 
 def _leaf_hash(arr: np.ndarray) -> str:

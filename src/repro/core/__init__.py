@@ -1,10 +1,13 @@
 from .csr import CSR, from_dense, prune_to_csr, random_csr
 from .heuristic import Heuristic, PAPER_THRESHOLD, calibrate
 from .partition import chunk_segments, partition_spmm
-from .spmm import spmm
+from .plan import PlanMeta, SpmmPlan, build_plan, pattern_fingerprint
+from .spmm import execute_plan, spmm
 
 __all__ = [
     "CSR", "from_dense", "prune_to_csr", "random_csr",
     "Heuristic", "PAPER_THRESHOLD", "calibrate",
-    "chunk_segments", "partition_spmm", "spmm",
+    "chunk_segments", "partition_spmm",
+    "PlanMeta", "SpmmPlan", "build_plan", "pattern_fingerprint",
+    "execute_plan", "spmm",
 ]

@@ -142,7 +142,7 @@ def prune_to_csr(w: jax.Array, keep_fraction: float) -> CSR:
     """
     w = np.asarray(w)
     m, k = w.shape
-    keep = max(1, int(round(keep_fraction * k)))
+    keep = max(1, min(int(round(keep_fraction * k)), k))
     idx = np.argsort(-np.abs(w), axis=1)[:, :keep]
     idx.sort(axis=1)
     vals = np.take_along_axis(w, idx, axis=1)

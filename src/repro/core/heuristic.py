@@ -23,13 +23,32 @@ class Heuristic:
 
     def mean_row_length(self, a: CSR) -> float:
         # Host-side: method choice is static (selects which kernel to trace).
+        self._require_concrete(a)
         nnz = int(np.asarray(a.row_ptr)[-1])
         return nnz / max(a.m, 1)
 
     def choose(self, a: CSR) -> str:
-        """Return 'merge' or 'rowsplit' per the paper's rule."""
+        """Return 'merge' or 'rowsplit' per the paper's rule.
+
+        A *static* decision: it selects which kernel gets traced, so it
+        must see a concrete ``row_ptr``.  Inside jitted code the decision
+        is already captured in the ``SpmmPlan`` built at plan time
+        (``repro.engine.get_plan``) — never call this per step.
+        """
+        self._require_concrete(a)
         return "merge" if self.mean_row_length(a) < self.threshold \
             else "rowsplit"
+
+    @staticmethod
+    def _require_concrete(a: CSR) -> None:
+        import jax
+
+        if isinstance(a.row_ptr, jax.core.Tracer):
+            raise ValueError(
+                "Heuristic.choose is a static (host-side) decision and "
+                "cannot run on a traced CSR. Capture it once at plan-build "
+                "time: plan = repro.engine.get_plan(a) outside jit, then "
+                "pass the plan (or the resolved method) into jitted code.")
 
 
 def calibrate(ds: np.ndarray, rowsplit_us: np.ndarray,

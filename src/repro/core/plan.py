@@ -1,0 +1,239 @@
+"""Plan-once / execute-many SpMM plans.
+
+The paper's thesis is that CSR-native SpMM wins by paying for *planning*
+(load-balanced work partitioning) instead of format conversion.  For the
+motivating workload — a pruned weight whose sparsity pattern is frozen for
+the lifetime of the model — even that planning cost should be paid once,
+not once per jitted call.  ``SpmmPlan`` captures everything derived from
+the pattern:
+
+* the forward execute structure (merge chunk layout or row-split ELL
+  layout, including the static ``l_pad`` for row-split),
+* the kernel choice (the §5.4 heuristic evaluated *statically at plan-build
+  time*, so jitted code never host-syncs on a method decision),
+* per-nonzero (row, col) coordinates for the values-cotangent SDDMM, and
+* a *transpose plan*: the same merge-based equal-nonzero balancing applied
+  to the CSC view of A, so the backward ``dB = Aᵀ @ dC`` inherits the
+  paper's load-balance guarantees.
+
+Plans are pytrees of int32 device arrays plus static ``PlanMeta`` — they
+thread through ``jax.jit`` boundaries as ordinary arguments and live inside
+model pytrees (``repro.models.sparse.SparseLinear``).  Values are *not*
+part of a plan: they are re-applied per call via the ``slot_nz``
+indirection, which is what makes a plan reusable across training steps that
+update the values but not the pattern.
+
+Build plans eagerly (outside jit) with ``build_plan`` or, cached per
+pattern, with ``repro.engine.get_plan``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .csr import CSR
+from .heuristic import Heuristic
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanMeta:
+    """Static (hashable) metadata of an SpmmPlan — safe as a jit constant."""
+
+    method: str                  # "merge" | "rowsplit"
+    shape: Tuple[int, int]       # (m, k) of A
+    nnz_pad: int                 # static nonzero capacity
+    t: int                       # merge: nonzeroes per chunk
+    tl: int                      # rowsplit: nonzeroes per row batch
+    l_pad: Optional[int]         # rowsplit: static max row length
+    has_transpose: bool          # backward (CSC-view) plan present
+
+    @property
+    def m(self) -> int:
+        return self.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.shape[1]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SpmmPlan:
+    """Pattern-derived execute state for C = A @ B (and its VJP)."""
+
+    fwd: dict                    # forward structure + nz coordinate arrays
+    bwd: Optional[dict]          # transpose merge structure (CSC view)
+    meta: PlanMeta = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def method(self) -> str:
+        return self.meta.method
+
+    @property
+    def l_pad(self) -> Optional[int]:
+        return self.meta.l_pad
+
+
+def _kernels():
+    # deferred: repro.kernels imports repro.core.csr at module scope
+    from repro.kernels import merge_spmm, rowsplit_spmm
+    return merge_spmm, rowsplit_spmm
+
+
+def _require_concrete(a: CSR, what: str) -> None:
+    if isinstance(a.row_ptr, jax.core.Tracer) or \
+            isinstance(a.col_ind, jax.core.Tracer):
+        raise ValueError(
+            f"{what} needs a concrete sparsity pattern, but the CSR is "
+            "traced. Build the plan once outside jit (repro.engine.get_plan "
+            "or repro.core.plan.build_plan) and pass the SpmmPlan through "
+            "the jitted function — plans are ordinary pytrees.")
+
+
+def transpose_pattern(a: CSR):
+    """CSC view of A as a CSR matrix of Aᵀ, plus the nonzero permutation.
+
+    Returns ``(a_t, perm)`` where ``a_t`` is a (k, m) CSR holding the same
+    pattern transposed (vals are zeros — structure only) and ``perm`` is an
+    (nnz_pad,) int32 map from transpose nonzero position to original
+    nonzero position (``nnz_pad`` sentinel past the valid range, so
+    ``vals_ext[perm]`` with an appended zero yields the transposed values).
+    Host-side; pattern must be concrete.
+    """
+    rp = np.asarray(a.row_ptr)
+    ci = np.asarray(a.col_ind)
+    m, k = a.shape
+    nnz = int(rp[-1])
+    nnz_pad = a.nnz_pad
+    rows = np.repeat(np.arange(m, dtype=np.int32), np.diff(rp))
+    cols = ci[:nnz]
+    perm_valid = np.argsort(cols, kind="stable")           # CSC order
+    t_row_ptr = np.zeros(k + 1, np.int32)
+    np.cumsum(np.bincount(cols, minlength=k), out=t_row_ptr[1:])
+    t_col_ind = np.zeros(nnz_pad, np.int32)
+    t_col_ind[:nnz] = rows[perm_valid]
+    perm = np.full(nnz_pad, nnz_pad, np.int32)
+    perm[:nnz] = perm_valid
+    a_t = CSR(jnp.asarray(t_row_ptr), jnp.asarray(t_col_ind),
+              jnp.zeros(nnz_pad, a.vals.dtype), (k, m))
+    return a_t, jnp.asarray(perm)
+
+
+def _compose_slots(slot_nz: jax.Array, perm: jax.Array,
+                   nnz_pad: int) -> jax.Array:
+    """Remap slot indices through a nonzero permutation (sentinel-safe)."""
+    perm_ext = jnp.concatenate(
+        [perm, jnp.full((1,), nnz_pad, jnp.int32)])
+    return perm_ext[slot_nz]
+
+
+def resolve_static(a: CSR, *, method: str = "auto",
+                   heuristic: Heuristic | None = None,
+                   t: int | None = None, tl: int | None = None,
+                   l_pad: int | None = None):
+    """Pin down every pattern-static decision of a plan request.
+
+    Returns ``(method, t, tl, l_pad)`` fully resolved: ``auto`` goes
+    through the §5.4 heuristic, an omitted rowsplit ``l_pad`` becomes the
+    pattern's max row length, omitted tile sizes become kernel defaults,
+    and merge normalizes ``l_pad`` to None.  Single source of truth for
+    ``build_plan`` and the engine cache key — they can never disagree.
+    """
+    merge_k, rowsplit_k = _kernels()
+    _require_concrete(a, "resolve_static")
+    heuristic = heuristic or Heuristic()
+    t = merge_k.DEFAULT_T if t is None else t
+    tl = rowsplit_k.DEFAULT_TL if tl is None else tl
+    if method == "auto":
+        method = heuristic.choose(a)
+    if method not in ("merge", "rowsplit"):
+        raise ValueError(f"unknown SpMM method: {method!r}")
+    if method == "rowsplit" and l_pad is None:
+        lengths = np.diff(np.asarray(a.row_ptr))
+        l_pad = max(int(lengths.max()) if lengths.size else 1, 1)
+    if method == "merge":
+        l_pad = None
+    return method, t, tl, l_pad
+
+
+def build_plan(a: CSR, *, method: str = "auto",
+               heuristic: Heuristic | None = None,
+               t: int | None = None, tl: int | None = None,
+               l_pad: int | None = None,
+               with_transpose: bool = True) -> SpmmPlan:
+    """Build an SpmmPlan from a concrete CSR (once per sparsity pattern).
+
+    ``method="auto"`` evaluates the paper's §5.4 heuristic here — a static
+    decision captured in the plan, so execution never host-syncs on it.
+    ``with_transpose`` additionally builds the CSC-view merge plan that
+    powers the ``dB`` backward pass; forward-only callers can skip it.
+    """
+    merge_k, rowsplit_k = _kernels()
+    _require_concrete(a, "build_plan")
+    method, t, tl, l_pad = resolve_static(
+        a, method=method, heuristic=heuristic, t=t, tl=tl, l_pad=l_pad)
+    if method == "merge":
+        fwd = dict(merge_k.plan_merge_structure(a, t=t))
+    else:
+        fwd = dict(rowsplit_k.plan_rowsplit_structure(a, l_pad=l_pad, tl=tl))
+
+    # Per-nonzero coordinates for the SDDMM values-cotangent (in-bounds
+    # everywhere; validity carried separately).
+    rp = np.asarray(a.row_ptr)
+    nnz = int(rp[-1])
+    nnz_pad = a.nnz_pad
+    nz_rows = np.zeros(nnz_pad, np.int32)
+    nz_rows[:nnz] = np.repeat(np.arange(a.m, dtype=np.int32), np.diff(rp))
+    fwd["nz_rows"] = jnp.asarray(nz_rows)
+    fwd["nz_cols"] = a.col_ind
+    fwd["nz_valid"] = jnp.asarray(np.arange(nnz_pad) < nnz)
+
+    bwd = None
+    if with_transpose:
+        a_t, perm = transpose_pattern(a)
+        bwd = dict(merge_k.plan_merge_structure(a_t, t=t))
+        # Backward slots index *original* vals: compose chunk slots with the
+        # transpose permutation once, at build time.
+        bwd["slot_nz"] = _compose_slots(bwd["slot_nz"], perm, nnz_pad)
+
+    meta = PlanMeta(method=method, shape=a.shape, nnz_pad=nnz_pad, t=t,
+                    tl=tl, l_pad=l_pad, has_transpose=with_transpose)
+    return SpmmPlan(fwd=fwd, bwd=bwd, meta=meta)
+
+
+_fingerprint_memo: dict = {}
+
+
+def pattern_fingerprint(a: CSR) -> str:
+    """Content hash of the sparsity pattern (not the values).
+
+    Two CSR matrices with equal fingerprints (and shapes) share every plan
+    — this is the engine cache key, so retraced/re-pruned models with the
+    same mask reuse plans instead of replanning.
+
+    Memoized per live CSR object (identity-checked via weakref), so the
+    O(nnz) device→host hash is paid once per object, not per call — a
+    serving loop that holds one CSR hits the plan cache in O(1).
+    """
+    import hashlib
+    import weakref
+
+    _require_concrete(a, "pattern_fingerprint")
+    key = id(a)
+    memo = _fingerprint_memo.get(key)
+    if memo is not None and memo[0]() is a:
+        return memo[1]
+    h = hashlib.sha1()
+    h.update(np.asarray(a.row_ptr).tobytes())
+    h.update(np.asarray(a.col_ind).tobytes())
+    fp = h.hexdigest()
+    try:
+        ref = weakref.ref(a, lambda _, k=key: _fingerprint_memo.pop(k, None))
+    except TypeError:       # object not weakref-able: skip the memo
+        return fp
+    _fingerprint_memo[key] = (ref, fp)
+    return fp

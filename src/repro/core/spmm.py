@@ -1,15 +1,31 @@
-"""Public SpMM API: the paper's multi-algorithm with heuristic dispatch.
+"""Public SpMM API: the paper's multi-algorithm with heuristic dispatch,
+now plan-once/execute-many and differentiable.
 
     C = spmm(A, B)                  # auto: paper §5.4 heuristic
     C = spmm(A, B, method="merge")  # force merge-based  (paper §4.2)
     C = spmm(A, B, method="rowsplit", l_pad=64)  # force row-split (§4.1)
+
+    plan = repro.engine.get_plan(A)          # once per sparsity pattern
+    C = spmm(A, B, plan=plan)                # jit-safe, never replans
+    C = execute_plan(plan, A.vals, B)        # the explicit-plan core
+
+With a concrete (non-traced) CSR, ``spmm`` routes through the engine's
+plan cache automatically.  Either way execution is differentiable via
+``jax.custom_vjp``: ``dB = Aᵀ @ dC`` runs through the plan's cached
+transpose (CSC-view) merge plan — equal-nonzero balanced, like the forward
+— and ``dvals`` is a sampled-dense-dense (gather-dot) kernel over the
+pattern (``repro.kernels.sddmm``).
 """
 from __future__ import annotations
 
+import functools
+
 import jax
+import numpy as np
 
 from .csr import CSR
 from .heuristic import Heuristic
+from .plan import SpmmPlan, PlanMeta
 
 _DEFAULT_HEURISTIC = Heuristic()
 
@@ -21,13 +37,121 @@ def _ops():
     return ops
 
 
+def _is_traced(a: CSR) -> bool:
+    return isinstance(a.row_ptr, jax.core.Tracer) or \
+        isinstance(a.col_ind, jax.core.Tracer)
+
+
+# --------------------------------------------------- plan execution core ---
+
+
+def _forward(meta: PlanMeta, fwd: dict, vals, b, interpret, impl):
+    ops = _ops()
+    if meta.method == "merge":
+        return ops.merge_execute(fwd, vals, b, m=meta.m,
+                                 interpret=interpret, impl=impl)
+    return ops.rowsplit_execute(fwd, vals, b, m=meta.m, tl=meta.tl,
+                                interpret=interpret, impl=impl)
+
+
+def _int_zeros(tree):
+    # Cotangents for the integer plan arrays: symbolic float0 zeros.
+    return jax.tree.map(
+        lambda x: np.zeros(x.shape, jax.dtypes.float0), tree)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _execute_vjp(meta, interpret, impl, fwd, bwd, vals, b):
+    return _forward(meta, fwd, vals, b, interpret, impl)
+
+
+def _execute_vjp_fwd(meta, interpret, impl, fwd, bwd, vals, b):
+    out = _forward(meta, fwd, vals, b, interpret, impl)
+    return out, (fwd, bwd, vals, b)
+
+
+def _execute_vjp_bwd(meta, interpret, impl, res, dc):
+    fwd, bwd, vals, b = res
+    ops = _ops()
+    # dB = Aᵀ @ dC through the transpose merge plan: the CSC view gets the
+    # same equal-nonzero balancing as the forward pass.
+    db = ops.merge_execute(bwd, vals, dc, m=meta.k, interpret=interpret,
+                           impl=impl).astype(b.dtype)
+    # dvals = (dC · Bᵀ) sampled at the pattern (gather-dot SDDMM).
+    dvals = ops.sddmm(fwd["nz_rows"], fwd["nz_cols"], fwd["nz_valid"],
+                      dc, b, interpret=interpret,
+                      impl=impl).astype(vals.dtype)
+    return _int_zeros(fwd), _int_zeros(bwd), dvals, db
+
+
+_execute_vjp.defvjp(_execute_vjp_fwd, _execute_vjp_bwd)
+
+
+def execute_plan(plan: SpmmPlan, vals: jax.Array, b: jax.Array, *,
+                 interpret: bool | None = None,
+                 impl: str = "pallas") -> jax.Array:
+    """Execute a prebuilt plan: C = A @ B with A's values given per call.
+
+    Trace-safe (every static decision was captured at plan build) and
+    differentiable in ``vals`` and ``b`` when the plan carries its
+    transpose (``build_plan(..., with_transpose=True)``, the default).
+    """
+    # Static shape guards: gathers clamp out-of-bounds indices silently, so
+    # a stale plan would otherwise produce garbage instead of an error.
+    if vals.shape != (plan.meta.nnz_pad,):
+        raise ValueError(
+            f"plan expects vals of shape ({plan.meta.nnz_pad},) for pattern "
+            f"{plan.meta.shape}, got {vals.shape} — was the plan built for "
+            "a different sparsity pattern?")
+    if b.ndim != 2 or b.shape[0] != plan.meta.k:
+        raise ValueError(
+            f"plan expects B of shape ({plan.meta.k}, n) for pattern "
+            f"{plan.meta.shape}, got {b.shape}")
+    if plan.bwd is None:
+        return _forward(plan.meta, plan.fwd, vals, b, interpret, impl)
+    return _execute_vjp(plan.meta, interpret, impl, plan.fwd, plan.bwd,
+                        vals, b)
+
+
+# ------------------------------------------------------------ public API ---
+
+
 def spmm(a: CSR, b: jax.Array, *, method: str = "auto",
          l_pad: int | None = None, t: int = 16,
          heuristic: Heuristic = _DEFAULT_HEURISTIC,
-         interpret: bool | None = None, impl: str = "pallas") -> jax.Array:
-    """Sparse(CSR) × dense = dense.  ``b`` is (k, n); returns (m, n)."""
-    if method == "auto":
+         interpret: bool | None = None, impl: str = "pallas",
+         plan: SpmmPlan | str | None = None) -> jax.Array:
+    """Sparse(CSR) × dense = dense.  ``b`` is (k, n); returns (m, n).
+
+    Dispatch on ``plan``:
+
+    * an ``SpmmPlan`` — execute it (jit-safe; ``a`` supplies only values).
+    * ``None`` (default) with concrete ``a`` — look up / build the
+      pattern's plan in the engine cache, then execute.  Repeated calls
+      with the same pattern (any values) never replan.
+    * ``None`` with traced ``a``, or the string ``"inline"`` — plan inside
+      the traced computation, every call (the paper's original per-call
+      regime; benchmarks time it deliberately).  Requires an explicit
+      ``method`` under trace — the heuristic is a host-side decision.
+    """
+    if isinstance(plan, SpmmPlan):
+        return execute_plan(plan, a.vals, b, interpret=interpret, impl=impl)
+    if plan is None and not _is_traced(a):
+        from repro.engine import get_plan
+        built = get_plan(a, method=method, t=t, l_pad=l_pad,
+                         heuristic=heuristic)
+        return execute_plan(built, a.vals, b, interpret=interpret, impl=impl)
+    if plan not in (None, "inline"):
+        raise ValueError(f"plan must be an SpmmPlan, None, or 'inline'; "
+                         f"got {plan!r}")
+    if method == "auto" and not _is_traced(a):
         method = heuristic.choose(a)
+    if method == "auto":
+        raise ValueError(
+            "spmm(method='auto') on a traced CSR would need a host-side "
+            "heuristic decision per call. Build a plan outside jit "
+            "(repro.engine.get_plan) — the kernel choice is captured "
+            "statically at plan-build time — or pass method= explicitly.")
     if method == "merge":
         return _ops().merge_spmm(a, b, t=t, interpret=interpret, impl=impl)
     if method == "rowsplit":

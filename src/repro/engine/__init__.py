@@ -1,0 +1,13 @@
+"""Plan-once / execute-many SpMM engine.
+
+    plan = repro.engine.get_plan(a)            # cached per pattern
+    c = repro.core.spmm(a, b, plan=plan)       # never replans, jit-safe
+
+See ``repro.core.plan`` for what a plan holds and ``engine.cache`` for the
+LRU keyed on pattern fingerprints.
+"""
+from .cache import (CacheStats, PlanCache, cache_stats, clear_cache,
+                    default_cache, get_plan)
+
+__all__ = ["CacheStats", "PlanCache", "cache_stats", "clear_cache",
+           "default_cache", "get_plan"]

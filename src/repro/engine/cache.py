@@ -1,0 +1,138 @@
+"""LRU cache of SpmmPlans keyed on sparsity-pattern identity.
+
+The amortization layer of the plan-once/execute-many engine: a pruned
+weight's pattern is frozen for the lifetime of the model, so every plan
+derived from it — forward chunk/ELL structure, heuristic decision,
+transpose plan — is built at most once per pattern and shared by every
+layer, step, and restart that presents the same mask.
+
+Keys are *content* fingerprints of (row_ptr, col_ind) plus the build
+configuration, not object identity — re-pruning with the same mask,
+checkpoint restore, or two layers tied to one mask all hit.  Counters
+(hits/misses/evictions) are exposed for tests and ops dashboards; the
+acceptance criterion "plans are built at most once per pattern in a jitted
+loop" is asserted against them in ``tests/test_engine.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import OrderedDict
+
+from repro.core.csr import CSR
+from repro.core.heuristic import Heuristic
+from repro.core.plan import (SpmmPlan, build_plan, pattern_fingerprint,
+                             resolve_static)
+
+DEFAULT_MAXSIZE = 256
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    size: int = 0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class PlanCache:
+    """Thread-safe LRU over ``build_plan`` results."""
+
+    def __init__(self, maxsize: int = DEFAULT_MAXSIZE):
+        self.maxsize = maxsize
+        self._entries: OrderedDict[tuple, SpmmPlan] = OrderedDict()
+        # raw (unresolved) request key -> canonical key, so a hit on a
+        # repeated request skips resolve_static's host sync entirely.
+        self._aliases: dict[tuple, tuple] = {}
+        self._lock = threading.Lock()
+        self._stats = CacheStats()
+
+    def get(self, a: CSR, *, method: str = "auto",
+            heuristic: Heuristic | None = None, t: int | None = None,
+            tl: int | None = None, l_pad: int | None = None,
+            with_transpose: bool = True) -> SpmmPlan:
+        """Cached ``build_plan`` — the engine's plan-once entry point.
+
+        Canonical keys pin down the static decisions through the same
+        ``resolve_static`` that ``build_plan`` uses, so "auto" and its
+        resolved form share one entry and key/plan can never disagree.
+        A raw-request alias map makes repeated identical requests O(1):
+        neither the heuristic's host read nor the l_pad scan reruns on a
+        hit (the fingerprint itself is memoized per CSR object).
+        """
+        hkey = (heuristic or Heuristic()).threshold \
+            if method == "auto" else None
+        raw = (pattern_fingerprint(a), a.shape, a.nnz_pad, method, hkey,
+               t, tl, l_pad, with_transpose)
+        with self._lock:
+            canonical = self._aliases.get(raw)
+            plan = self._entries.get(canonical) if canonical else None
+            if plan is not None:
+                self._entries.move_to_end(canonical)
+                self._stats.hits += 1
+                return plan
+        method, t, tl, l_pad = resolve_static(
+            a, method=method, heuristic=heuristic, t=t, tl=tl, l_pad=l_pad)
+        key = (raw[0], a.shape, a.nnz_pad, method, t, tl, l_pad,
+               with_transpose)
+        with self._lock:
+            plan = self._entries.get(key)
+            if plan is not None:
+                self._entries.move_to_end(key)
+                self._aliases[raw] = key
+                self._stats.hits += 1
+                return plan
+        # Build outside the lock — plans are pure functions of the key.
+        plan = build_plan(a, method=method, t=t, tl=tl, l_pad=l_pad,
+                          with_transpose=with_transpose)
+        with self._lock:
+            self._stats.misses += 1
+            self._entries[key] = plan
+            self._entries.move_to_end(key)
+            self._aliases[raw] = key
+            while len(self._entries) > self.maxsize:
+                evicted, _ = self._entries.popitem(last=False)
+                self._aliases = {r: c for r, c in self._aliases.items()
+                                 if c != evicted}
+                self._stats.evictions += 1
+            self._stats.size = len(self._entries)
+        return plan
+
+    # ------------------------------------------------------ maintenance ---
+
+    def stats(self) -> CacheStats:
+        with self._lock:
+            return dataclasses.replace(self._stats)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self._aliases.clear()
+            self._stats = CacheStats()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+
+_default_cache = PlanCache()
+
+
+def default_cache() -> PlanCache:
+    return _default_cache
+
+
+def get_plan(a: CSR, **kw) -> SpmmPlan:
+    """Module-level convenience over the process-wide default cache."""
+    return _default_cache.get(a, **kw)
+
+
+def cache_stats() -> CacheStats:
+    return _default_cache.stats()
+
+
+def clear_cache() -> None:
+    _default_cache.clear()

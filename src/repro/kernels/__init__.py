@@ -1,5 +1,5 @@
 # Submodules only — the jit'd wrappers live in ops (kernels.ops.merge_spmm
 # etc.); re-exporting them here would shadow the kernel modules themselves.
-from . import merge_spmm, moe_gemm, ops, ref, rowsplit_spmm
+from . import merge_spmm, moe_gemm, ops, ref, rowsplit_spmm, sddmm
 
-__all__ = ["merge_spmm", "moe_gemm", "ops", "ref", "rowsplit_spmm"]
+__all__ = ["merge_spmm", "moe_gemm", "ops", "ref", "rowsplit_spmm", "sddmm"]

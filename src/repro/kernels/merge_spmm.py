@@ -41,14 +41,21 @@ TM = 8
 DEFAULT_T = 16
 
 
-def plan_merge(a: CSR, *, t: int = DEFAULT_T, tm: int = TM):
-    """Phase 1: equal-nonzero chunks, broken at TM-row output tiles.
+def plan_merge_structure(a: CSR, *, t: int = DEFAULT_T, tm: int = TM):
+    """Phase 1, pattern-only: equal-nonzero chunks broken at TM-row tiles.
+
+    Depends only on the sparsity pattern (``row_ptr``/``col_ind``), never on
+    ``vals`` — the plan-once/execute-many split: values are re-applied per
+    call through ``slot_nz`` while the chunk structure is built once per
+    pattern (``repro.core.plan``).
 
     Returns a dict of device arrays (all static-shaped):
-      cols   (C, t) int32   column index of each nonzero in each chunk
-      vals   (C, t) f       value of each nonzero
-      lrow   (C, t) int32   row offset within the TM-row tile, in [0, tm)
-      tile   (C,)   int32   output row-tile of the chunk (non-decreasing)
+      cols    (C, t) int32  column index of each nonzero in each chunk
+      lrow    (C, t) int32  row offset within the TM-row tile, in [0, tm)
+      slot_nz (C, t) int32  flat nonzero id feeding each slot, or ``nnz_pad``
+                            (a sentinel gathering an appended zero) for
+                            unused slots
+      tile    (C,)   int32  output row-tile of the chunk (non-decreasing)
       first  (C,)   int32   1 iff chunk is the first of its row tile
     where C = nnz_pad//t + ceil(m/tm) (static worst case).
     """
@@ -79,8 +86,10 @@ def plan_merge(a: CSR, *, t: int = DEFAULT_T, tm: int = TM):
     zeros_i = jnp.zeros((n_chunks, t), jnp.int32)
     cols = zeros_i.at[dest_chunk, dest_slot].set(
         jnp.where(valid, a.col_ind, 0), mode="drop")
-    vals = jnp.zeros((n_chunks, t), a.vals.dtype).at[dest_chunk, dest_slot].set(
-        jnp.where(valid, a.vals, 0), mode="drop")
+    slot_nz = jnp.full((n_chunks, t), nnz_pad, jnp.int32)
+    slot_nz = slot_nz.at[dest_chunk, dest_slot].set(
+        jnp.where(valid, jnp.arange(nnz_pad, dtype=jnp.int32), nnz_pad),
+        mode="drop")
     lrow = zeros_i.at[dest_chunk, dest_slot].set(
         jnp.where(valid, rows % tm, 0), mode="drop")
 
@@ -98,8 +107,26 @@ def plan_merge(a: CSR, *, t: int = DEFAULT_T, tm: int = TM):
     last = jnp.concatenate(
         [(tile[1:] != tile[:-1]).astype(jnp.int32),
          jnp.ones((1,), jnp.int32)])
-    return dict(cols=cols, vals=vals, lrow=lrow, tile=tile, first=first,
+    return dict(cols=cols, lrow=lrow, slot_nz=slot_nz, tile=tile, first=first,
                 last=last)
+
+
+def apply_vals(structure: dict, vals: jax.Array) -> jax.Array:
+    """Gather per-call values into a structure's slots (chunk or ELL layout).
+
+    ``slot_nz == nnz_pad`` slots read the appended zero, so padded/unused
+    slots contribute nothing regardless of what ``vals`` holds.
+    """
+    vals_ext = jnp.concatenate([vals, jnp.zeros((1,), vals.dtype)])
+    return vals_ext[structure["slot_nz"]]
+
+
+def plan_merge(a: CSR, *, t: int = DEFAULT_T, tm: int = TM):
+    """Phase 1 with values applied: the single-call (plan-per-call) form."""
+    structure = plan_merge_structure(a, t=t, tm=tm)
+    plan = dict(structure)
+    plan["vals"] = apply_vals(structure, a.vals)
+    return plan
 
 
 def _merge_kernel(tile_ref, first_ref, last_ref, cols_ref, vals_ref, lrow_ref,

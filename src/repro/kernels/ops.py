@@ -19,6 +19,7 @@ from . import merge_spmm as _merge
 from . import moe_gemm as _moe
 from . import ref as _ref
 from . import rowsplit_spmm as _rowsplit
+from . import sddmm as _sddmm
 
 
 def _interpret_default() -> bool:
@@ -61,7 +62,14 @@ def rowsplit_spmm(a: CSR, b: jax.Array, *, l_pad: int | None = None,
     """
     if l_pad is None:
         if isinstance(a.row_ptr, jax.core.Tracer):
-            raise ValueError("rowsplit_spmm under trace requires l_pad")
+            raise ValueError(
+                "rowsplit_spmm under trace requires a static l_pad (the max "
+                "row length is data-dependent and cannot be derived from a "
+                "traced row_ptr). Either pass l_pad= explicitly, or build an "
+                "SpmmPlan outside jit — repro.engine.get_plan(a) / "
+                "repro.core.plan.build_plan(a) — which captures the static "
+                "l_pad once per sparsity pattern and can be passed through "
+                "jitted code freely.")
         l_pad = int(np.max(np.diff(np.asarray(a.row_ptr)))) if a.m else 1
         l_pad = max(l_pad, 1)
     return _rowsplit_spmm_jit(a, b, l_pad=l_pad, tl=tl, interpret=interpret,
@@ -81,6 +89,77 @@ def _rowsplit_spmm_jit(a: CSR, b: jax.Array, *, l_pad: int,
     plan = _rowsplit.plan_rowsplit(a, l_pad=l_pad, tl=tl)
     out = _rowsplit.rowsplit_spmm_pallas(plan, b2, tl=tl, interpret=interpret)
     return out[: a.m, : b.shape[1]]
+
+
+@functools.partial(jax.jit, static_argnames=("m", "interpret", "impl"))
+def merge_execute(structure: dict, vals: jax.Array, b: jax.Array, *, m: int,
+                  interpret: bool | None = None, impl: str = "pallas"):
+    """Execute a prebuilt merge structure: C = A @ B with per-call values.
+
+    ``structure`` is the pattern-only plan from
+    ``merge_spmm.plan_merge_structure`` (built once per sparsity pattern by
+    ``repro.core.plan`` / cached by ``repro.engine``); ``vals`` is the
+    (nnz_pad,) value vector of the call.  No planning happens here — only a
+    single slot gather plus the phase-2 kernel.
+    """
+    chunk_vals = _merge.apply_vals(structure, vals)
+    if impl == "xla":
+        return _ref.merge_execute_ref(structure, chunk_vals, b, m, _merge.TM)
+    if interpret is None:
+        interpret = _interpret_default()
+    b2 = _pad_axis(b, _merge.TN, 1)
+    m_pad = _merge.TM * (-(-m // _merge.TM))
+    plan = dict(structure)
+    plan["vals"] = chunk_vals
+    out = _merge.merge_spmm_pallas(plan, b2, m_pad, interpret=interpret)
+    return out[:m, : b.shape[1]]
+
+
+@functools.partial(jax.jit, static_argnames=("m", "tl", "interpret", "impl"))
+def rowsplit_execute(structure: dict, vals: jax.Array, b: jax.Array, *,
+                     m: int, tl: int = _rowsplit.DEFAULT_TL,
+                     interpret: bool | None = None, impl: str = "pallas"):
+    """Execute a prebuilt ELL structure: row-split SpMM with per-call values.
+
+    The static ``l_pad`` is baked into the structure's (m_pad, L) shape, so
+    this is trace-safe with no l_pad argument.
+    """
+    ell_vals = _merge.apply_vals(structure, vals)
+    if impl == "xla":
+        return _ref.rowsplit_execute_ref(structure, ell_vals, b, m)
+    if interpret is None:
+        interpret = _interpret_default()
+    b2 = _pad_axis(b, _rowsplit.TN, 1)
+    plan = dict(structure)
+    plan["vals"] = ell_vals
+    out = _rowsplit.rowsplit_spmm_pallas(plan, b2, tl=tl, interpret=interpret)
+    return out[:m, : b.shape[1]]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "impl"))
+def sddmm(rows: jax.Array, cols: jax.Array, valid: jax.Array, dc: jax.Array,
+          b: jax.Array, *, interpret: bool | None = None,
+          impl: str = "pallas"):
+    """Sampled dense-dense matmul over a pattern: dvals[p] = dC[r_p]·B[c_p].
+
+    ``rows``/``cols`` are per-nonzero coordinates (in-bounds everywhere;
+    padded entries masked off by ``valid``).  This is the values-cotangent
+    kernel of the differentiable SpMM.
+    """
+    if impl == "xla":
+        return _ref.sddmm_ref(rows, cols, valid, dc, b)
+    if interpret is None:
+        interpret = _interpret_default()
+    nnz_pad = rows.shape[0]
+    tq = _sddmm.TQ
+    p = max(1, -(-nnz_pad // tq))
+    rows2 = _pad_axis(rows, tq, 0).reshape(p, tq)
+    cols2 = _pad_axis(cols, tq, 0).reshape(p, tq)
+    dc2 = _pad_axis(dc, _sddmm.TN, 1)
+    b2 = _pad_axis(b, _sddmm.TN, 1)
+    out = _sddmm.sddmm_pallas(rows2, cols2, dc2, b2, interpret=interpret)
+    dvals = out.reshape(-1)[:nnz_pad]
+    return jnp.where(valid, dvals, 0).astype(dc.dtype)
 
 
 def moe_group_gemm(x: jax.Array, w: jax.Array, group_sizes: jax.Array, *,

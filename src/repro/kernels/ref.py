@@ -70,6 +70,39 @@ def spmm_merge_ref(a: CSR, b: jax.Array, t: int = 8) -> jax.Array:
         num_segments=a.m)
 
 
+def merge_execute_ref(structure: dict, chunk_vals: jax.Array, b: jax.Array,
+                      m: int, tm: int) -> jax.Array:
+    """Plan-execute reference for the merge structure (differentiable XLA).
+
+    Same dataflow as ``merge_spmm_pallas`` on a prebuilt pattern structure:
+    gather B rows per chunk slot, multiply by the per-call values, scatter
+    into C by (tile, lrow).  Unused slots carry value 0 and scatter 0.
+    """
+    prods = chunk_vals[..., None] * b[structure["cols"]]       # (C, t, n)
+    rows = structure["tile"][:, None] * tm + structure["lrow"]  # (C, t)
+    m_pad = tm * (-(-m // tm))
+    out = jax.ops.segment_sum(prods.reshape(-1, b.shape[1]),
+                              rows.reshape(-1), num_segments=m_pad)
+    return out[:m]
+
+
+def rowsplit_execute_ref(structure: dict, ell_vals: jax.Array,
+                         b: jax.Array, m: int) -> jax.Array:
+    """Plan-execute reference for the ELL structure (differentiable XLA)."""
+    return jnp.einsum("ml,mln->mn", ell_vals, b[structure["cols"]])[:m]
+
+
+def sddmm_ref(rows: jax.Array, cols: jax.Array, valid: jax.Array,
+              dc: jax.Array, b: jax.Array) -> jax.Array:
+    """Gather-dot oracle for the sampled dense-dense product.
+
+    ``dvals[p] = dC[rows[p]] · B[cols[p]]`` masked by ``valid`` — the
+    cotangent of the CSR values under C = A @ B.
+    """
+    dots = jnp.sum(dc[rows] * b[cols], axis=-1)
+    return jnp.where(valid, dots, 0).astype(dc.dtype)
+
+
 def moe_group_gemm_ref(x_sorted: jax.Array, w: jax.Array,
                        group_ids: jax.Array) -> jax.Array:
     """Grouped GEMM oracle: y[i] = x_sorted[i] @ w[group_ids[i]].

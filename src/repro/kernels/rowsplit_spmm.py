@@ -35,11 +35,14 @@ TM = 8
 DEFAULT_TL = 16
 
 
-def plan_rowsplit(a: CSR, *, l_pad: int, tl: int = DEFAULT_TL,
-                  tm: int = TM):
-    """ELL-pad CSR to (m_pad, L) with L = l_pad rounded up to tl.
+def plan_rowsplit_structure(a: CSR, *, l_pad: int, tl: int = DEFAULT_TL,
+                            tm: int = TM):
+    """Phase 0, pattern-only: ELL slot structure (m_pad, L), L = l_pad↑tl.
 
-    ``l_pad`` must be a static upper bound on the longest row.
+    ``l_pad`` must be a static upper bound on the longest row.  Depends only
+    on the sparsity pattern; per-call values are re-applied through
+    ``slot_nz`` (see ``merge_spmm.apply_vals``) — the plan-once/execute-many
+    split of ``repro.core.plan``.
     """
     m = a.m
     m_pad = tm * (-(-m // tm))
@@ -48,13 +51,24 @@ def plan_rowsplit(a: CSR, *, l_pad: int, tl: int = DEFAULT_TL,
     idx = jnp.arange(l, dtype=jnp.int32)
     take = a.row_ptr[:-1, None] + idx[None, :]             # (m, l)
     valid = idx[None, :] < lengths[:, None]
-    take = jnp.where(valid, take, 0)
-    cols = jnp.where(valid, a.col_ind[take], 0)
-    vals = jnp.where(valid, a.vals[take], 0)
+    safe = jnp.where(valid, take, 0)
+    cols = jnp.where(valid, a.col_ind[safe], 0)
+    slot_nz = jnp.where(valid, take, a.nnz_pad).astype(jnp.int32)
     pad_rows = m_pad - m
     cols = jnp.pad(cols, ((0, pad_rows), (0, 0)))
-    vals = jnp.pad(vals, ((0, pad_rows), (0, 0)))
-    return dict(cols=cols, vals=vals)
+    slot_nz = jnp.pad(slot_nz, ((0, pad_rows), (0, 0)),
+                      constant_values=a.nnz_pad)
+    return dict(cols=cols, slot_nz=slot_nz)
+
+
+def plan_rowsplit(a: CSR, *, l_pad: int, tl: int = DEFAULT_TL,
+                  tm: int = TM):
+    """Phase 0 with values applied: the single-call (plan-per-call) form."""
+    from .merge_spmm import apply_vals
+    structure = plan_rowsplit_structure(a, l_pad=l_pad, tl=tl, tm=tm)
+    plan = dict(structure)
+    plan["vals"] = apply_vals(structure, a.vals)
+    return plan
 
 
 def _rowsplit_kernel(cols_ref, vals_ref, b_ref, o_ref, acc_ref, *,

@@ -1,0 +1,77 @@
+"""Sampled dense-dense matmul (SDDMM) — Pallas TPU kernel.
+
+The backward pass of ``C = A @ B`` with respect to the CSR values is a
+dense-dense product *sampled at the sparsity pattern*:
+
+    dvals[p] = dC[row[p], :] · B[col[p], :]       for each nonzero p.
+
+This is the gather-dot dual of the forward SpMM: instead of gathering B
+rows by column index and scattering into C, we gather a dC row and a B row
+per nonzero and reduce across the lane axis.  The nonzero stream is chunked
+``TQ`` at a time (the same equal-nonzero balancing as the merge kernel —
+cost is O(nnz), independent of row distribution, so the backward pass
+inherits the paper's load-balance guarantees), and the reduction over the
+dense axis n runs as an inner grid dimension with a VMEM accumulator.
+
+Padded nonzeroes must arrive with in-bounds (row, col) = (0, 0); the caller
+masks their outputs (``repro.kernels.ops.sddmm``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+TN = 128   # lanes of the dense axis per grid step
+TQ = 128   # nonzeroes per chunk
+
+
+def _sddmm_kernel(rows_ref, cols_ref, dc_ref, b_ref, o_ref, acc_ref, *,
+                  n_j: int, acc_dtype):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    rows = rows_ref[0]                                    # (TQ,)
+    cols = cols_ref[0]                                    # (TQ,)
+    # Row-major coalesced gathers of dC and B rows (lane-contiguous slices).
+    dcg = jnp.take(dc_ref[...], rows, axis=0).astype(acc_dtype)   # (TQ, TN)
+    bg = jnp.take(b_ref[...], cols, axis=0).astype(acc_dtype)     # (TQ, TN)
+    acc_ref[...] += jnp.sum(dcg * bg, axis=1)[None, :]
+
+    @pl.when(j == n_j - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def sddmm_pallas(rows: jax.Array, cols: jax.Array, dc: jax.Array,
+                 b: jax.Array, *, tn: int = TN,
+                 interpret: bool = False) -> jax.Array:
+    """``rows``/``cols`` are (P, TQ) chunked nonzero coordinates; ``dc`` is
+    (m, n), ``b`` is (k, n), n % tn == 0.  Returns (P, TQ) float32 dots."""
+    p, tq = rows.shape
+    m, n = dc.shape
+    k, _ = b.shape
+    acc_dtype = jnp.float32
+    grid = (p, n // tn)
+    kernel = functools.partial(_sddmm_kernel, n_j=n // tn,
+                               acc_dtype=acc_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tq), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, tq), lambda i, j: (i, 0)),
+            pl.BlockSpec((m, tn), lambda i, j: (0, j)),
+            pl.BlockSpec((k, tn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, tq), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, tq), acc_dtype),
+        scratch_shapes=[pltpu.VMEM((1, tq), acc_dtype)],
+        interpret=interpret,
+    )(rows, cols, dc, b)

@@ -3,6 +3,10 @@ with optional pruned-FFN SpMM (the paper's use case).
 
     python -m repro.launch.serve --arch llama3.2-1b --smoke \
         --batch 4 --prompt-len 32 --gen 16
+
+    # pruned-FFN scoring through the plan-once/execute-many SpMM engine
+    python -m repro.launch.serve --arch llama3.2-1b --smoke \
+        --batch 2 --prompt-len 16 --prune-ffn 0.25
 """
 from __future__ import annotations
 
@@ -13,7 +17,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.models import layers as L
 from repro.models import model as M
+from repro.models import sparse as S
 from repro.runtime import steps as R
 
 
@@ -35,6 +41,88 @@ def generate(cfg, params, prompt_tokens, gen_len: int, *, cache_extra=8):
     return jnp.concatenate(toks, axis=1)
 
 
+_PRUNABLE_BTYPES = ("attn", "rglru")   # blocks that own a dense "mlp"
+
+
+def check_prunable(cfg):
+    btypes = {bt for pattern, _ in cfg.segments for bt in pattern}
+    unsupported = btypes - set(_PRUNABLE_BTYPES)
+    if unsupported:
+        raise SystemExit(
+            f"--prune-ffn needs every block to own a dense MLP "
+            f"(btypes {_PRUNABLE_BTYPES}); arch has {sorted(unsupported)} "
+            "blocks (MoE experts / SSD cores have no per-block dense FFN "
+            "to prune)")
+
+
+def prune_ffn_blocks(params, cfg, keep: float):
+    """Unstack each block's params and prune its MLP once, building each
+    pattern's plan through the engine cache — plans are reused by every
+    subsequent jitted call."""
+    blocks = []
+    for si, (pattern, count) in enumerate(cfg.segments):
+        for ci in range(count):
+            for pi, btype in enumerate(pattern):
+                lp = jax.tree.map(lambda x: x[ci],
+                                  params["segments"][si][pi])
+                lp["mlp"] = S.prune_mlp(lp["mlp"], keep)
+                blocks.append(lp)
+    return blocks
+
+
+def block_types(cfg):
+    return [btype for pattern, count in cfg.segments
+            for _ in range(count) for btype in pattern]
+
+
+def make_pruned_forward(cfg):
+    """Unstacked full forward with SparseLinear MLPs (jit-ready).
+
+    Routes through ``model.block_apply`` — parallel blocks, attention
+    windows, and norms behave exactly as in the dense model; only
+    ``mlp_apply`` dispatches to the sparse layers.  The SparseLinear
+    leaves carry their SpmmPlans, so the jitted trace executes prebuilt
+    plans — no replanning, no host syncs.
+    """
+    btypes = block_types(cfg)      # static: jit sees only the param pytree
+
+    def fwd(params, blocks, tokens):
+        h = M.embed_inputs(params, cfg, {"tokens": tokens})
+        for btype, lp in zip(btypes, blocks):
+            h, _, _ = M.block_apply(lp, btype, h, cfg)
+        h = L.norm_apply(params["final_norm"], h, cfg.norm)
+        return h.astype(jnp.float32) @ M.unembed_matrix(
+            params, cfg).T.astype(jnp.float32)
+
+    return fwd
+
+
+def serve_pruned(cfg, params, prompt, keep: float):
+    from repro import engine
+
+    check_prunable(cfg)
+    t0 = time.perf_counter()
+    blocks = prune_ffn_blocks(params, cfg, keep)
+    t_plan = time.perf_counter() - t0
+    stats = engine.cache_stats()
+    methods = {k: v.method for k, v in blocks[0]["mlp"].items()}
+    print(f"[serve] pruned {len(blocks)} MLPs (keep={keep:.0%}) "
+          f"in {t_plan:.2f}s; methods={methods}; "
+          f"plan cache: {stats.misses} built, {stats.hits} reused")
+
+    fwd = jax.jit(make_pruned_forward(cfg))
+    logits = jax.block_until_ready(fwd(params, blocks, prompt))
+    t1 = time.perf_counter()
+    logits = jax.block_until_ready(fwd(params, blocks, prompt))
+    t_warm = time.perf_counter() - t1
+    after = engine.cache_stats()
+    assert after.misses == stats.misses, "jitted serving replanned!"
+    print(f"[serve] warm pruned forward {t_warm * 1e3:.1f}ms "
+          f"({prompt.size / t_warm:.0f} tok/s); plans built during "
+          f"serving: {after.misses - stats.misses}")
+    return logits
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCHS, default="llama3.2-1b")
@@ -43,6 +131,9 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prune-ffn", type=float, default=0.0, metavar="KEEP",
+                    help="serve with magnitude-pruned FFNs (CSR SpMM via "
+                    "the plan engine); KEEP is the kept fraction per row")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -53,6 +144,11 @@ def main(argv=None):
     params = M.init_params(cfg, key)
     prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                 cfg.vocab_size)
+    if args.prune_ffn > 0.0:
+        logits = serve_pruned(cfg, params, prompt, args.prune_ffn)
+        print(f"pruned-FFN logits {logits.shape}; "
+              f"argmax@last {jnp.argmax(logits[:, -1], -1)}")
+        return 0
     t0 = time.perf_counter()
     out = generate(cfg, params, prompt, args.gen)
     dt = time.perf_counter() - t0

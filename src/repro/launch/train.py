@@ -65,6 +65,9 @@ def main(argv=None):
             if restored is not None:
                 state, start_step = restored, step
                 print(f"[train] resumed from step {step}")
+    # Route any SparseLinear layers through the SpMM engine: plans are
+    # (re)built once here, outside jit — the jitted step never replans.
+    state["params"] = R.ensure_spmm_plans(state["params"])
 
     data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
                           global_batch=args.global_batch, seed=args.seed,

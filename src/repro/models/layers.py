@@ -318,6 +318,11 @@ def init_mlp(key, cfg, d_ff=None) -> dict:
 
 
 def mlp_apply(p, x, cfg):
+    if callable(p.get("w1")):
+        # SparseLinear (pruned-FFN serving/fine-tuning): the layer carries
+        # its own SpmmPlan and kernel choice — see repro/models/sparse.py.
+        from repro.models.sparse import sparse_mlp_apply
+        return sparse_mlp_apply(p, x, cfg)
     dt = cfg.cdtype
     if "w3" in p:
         h = jax.nn.silu(x @ p["w1"].astype(dt)) * (x @ p["w3"].astype(dt))

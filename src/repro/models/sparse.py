@@ -1,54 +1,87 @@
-"""Pruned-FFN serving via SpMM — the paper's motivating use case (§1, [1]).
+"""Pruned-FFN layers via SpMM — the paper's motivating use case (§1, [1]).
 
-``SparseLinear`` stores a magnitude-pruned weight matrix in CSR and runs the
-forward matmul through the paper's SpMM: ``y = (W_csr @ x.T).T`` where the
-activation matrix ``x.T (d_in, tokens)`` is the tall-skinny dense B — during
-decode ``tokens`` is the batch size (1–128), exactly the paper's
-n ∈ [32, 128] regime.  Kernel selection uses the paper's §5.4 heuristic.
+``SparseLinear`` stores a magnitude-pruned weight matrix in CSR and runs
+the matmul through the plan-once/execute-many engine: the forward is
+``y = (W_csr @ x.T).T`` where the activation matrix ``x.T (d_in, tokens)``
+is the tall-skinny dense B — during decode ``tokens`` is the batch size
+(1–128), exactly the paper's n ∈ [32, 128] regime.
+
+Every pattern-derived static decision — kernel choice (§5.4 heuristic),
+row-split ``l_pad``, chunk layout, and the transpose plan for the backward
+pass — lives in the layer's ``SpmmPlan``, built once per sparsity pattern
+through ``repro.engine``'s cache.  The layer is a pytree, so it passes
+through ``jax.jit`` / ``jax.grad`` boundaries with its plan attached and
+*never replans inside a jitted step*.  It is differentiable: gradients
+flow to the CSR values (sparse fine-tuning of a pruned weight) and to the
+activations.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import CSR, Heuristic, prune_to_csr, spmm
+from repro.core import CSR, Heuristic, SpmmPlan, execute_plan, prune_to_csr
 
 
 @dataclasses.dataclass(frozen=True)
 class SparseLinear:
-    weight: CSR            # (d_out, d_in)
-    l_pad: int             # static max row nnz (for row-split)
-    method: str            # rowsplit | merge (resolved once at build)
+    weight: CSR                    # (d_out, d_in)
+    plan: Optional[SpmmPlan]       # pattern plan (None = plan on first use)
 
     @classmethod
     def from_dense(cls, w: jax.Array, keep_fraction: float,
                    heuristic: Heuristic = Heuristic()) -> "SparseLinear":
         """Prune w (d_in, d_out) — stored transposed as (d_out, d_in)."""
         csr = prune_to_csr(np.asarray(w).T, keep_fraction)
-        l_pad = int(np.max(np.diff(np.asarray(csr.row_ptr))))
-        return cls(csr, max(l_pad, 1), heuristic.choose(csr))
+        from repro import engine
+        return cls(csr, engine.get_plan(csr, heuristic=heuristic))
+
+    def with_plan(self, heuristic: Heuristic = Heuristic()) -> "SparseLinear":
+        """(Re)attach the engine-cached plan for this weight's pattern.
+
+        Identity-cheap when the plan is already cached — use after
+        checkpoint restore or pattern surgery, outside jit.
+        """
+        from repro import engine
+        method = self.plan.meta.method if self.plan is not None else "auto"
+        return dataclasses.replace(
+            self, plan=engine.get_plan(self.weight, method=method,
+                                       heuristic=heuristic))
+
+    @property
+    def method(self) -> str:
+        return self.plan.meta.method if self.plan is not None else "auto"
+
+    @property
+    def l_pad(self) -> Optional[int]:
+        return self.plan.meta.l_pad if self.plan is not None else None
 
     def __call__(self, x: jax.Array, **kw) -> jax.Array:
-        """x (..., d_in) → (..., d_out)."""
+        """x (..., d_in) → (..., d_out).  Differentiable in x and vals."""
+        layer = self if self.plan is not None else self.with_plan()
         lead = x.shape[:-1]
         xt = x.reshape(-1, x.shape[-1]).T          # (d_in, tokens) = B
-        y = spmm(self.weight, xt.astype(self.weight.dtype),
-                 method=self.method, l_pad=self.l_pad, **kw)
-        return y.T.reshape(*lead, self.weight.m).astype(x.dtype)
+        y = execute_plan(layer.plan, layer.weight.vals,
+                         xt.astype(layer.weight.dtype), **kw)
+        return y.T.reshape(*lead, layer.weight.m).astype(x.dtype)
 
 
 jax.tree_util.register_pytree_node(
     SparseLinear,
-    lambda sl: ((sl.weight,), (sl.l_pad, sl.method)),
-    lambda aux, ch: SparseLinear(ch[0], *aux),
+    lambda sl: ((sl.weight, sl.plan), ()),
+    lambda aux, ch: SparseLinear(*ch),
 )
 
 
 def prune_mlp(mlp_params: dict, keep_fraction: float) -> dict:
-    """Convert a dense MLP param dict (w1/w2[/w3]) to SparseLinear layers."""
+    """Convert a dense MLP param dict (w1/w2[/w3]) to SparseLinear layers.
+
+    Plans come from the engine cache, so repeated pruning with the same
+    masks (e.g. rebuilding layers each serving epoch) replans nothing.
+    """
     return {name: SparseLinear.from_dense(w, keep_fraction)
             for name, w in mlp_params.items()}
 
@@ -59,3 +92,17 @@ def sparse_mlp_apply(sparse_p: dict, x: jax.Array, cfg) -> jax.Array:
     else:
         h = jax.nn.gelu(sparse_p["w1"](x))
     return sparse_p["w2"](h)
+
+
+def mlp_vals(sparse_p: dict) -> dict:
+    """Extract the trainable CSR values of a SparseLinear dict."""
+    return {name: sl.weight.vals for name, sl in sparse_p.items()}
+
+
+def mlp_with_vals(sparse_p: dict, vals: dict) -> dict:
+    """Rebind CSR values onto the (frozen-pattern) layers — the sparse
+    fine-tuning parameterization: patterns and plans stay put, values are
+    the optimizer's degrees of freedom."""
+    return {name: dataclasses.replace(
+        sl, weight=dataclasses.replace(sl.weight, vals=vals[name]))
+        for name, sl in sparse_p.items()}

@@ -5,6 +5,10 @@ accumulation (bounds live activations), remat, and optional int8
 error-feedback gradient compression of the cross-replica payload.
 
 ``make_prefill_step`` / ``make_decode_step``: the serving pair.
+
+``ensure_spmm_plans`` / ``make_sparse_train_step``: the SpMM-engine hooks —
+plans are (re)built through the engine cache once, outside jit, and the
+jitted steps only ever execute them.
 """
 from __future__ import annotations
 
@@ -15,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import model as M
+from repro.models import sparse as S
 from repro.optim import adamw
 from repro.optim import compression as gc
 
@@ -99,6 +104,50 @@ def make_decode_step(cfg):
         return logits, new_caches
 
     return decode_step
+
+
+def ensure_spmm_plans(tree):
+    """(Re)attach engine-cached SpmmPlans to every SparseLinear in a tree.
+
+    Call once, outside jit, after init / checkpoint restore / pattern
+    surgery — the engine cache makes it free when plans already exist, and
+    it is the identity for trees without SparseLinear leaves.  Jitted steps
+    then receive prebuilt plans and never replan (verified by the cache-hit
+    counter test in tests/test_engine.py).
+    """
+    is_sl = lambda x: isinstance(x, S.SparseLinear)
+    return jax.tree.map(lambda x: x.with_plan() if is_sl(x) else x, tree,
+                        is_leaf=is_sl)
+
+
+def make_sparse_train_step(sparse_p: dict, *, lr: float = 1e-2,
+                           impl: str = "pallas",
+                           interpret: Optional[bool] = None):
+    """SGD step over the CSR *values* of a SparseLinear MLP (sparse
+    fine-tuning: the pruned pattern — and therefore every plan — is
+    frozen; values are the degrees of freedom).
+
+    Returns ``(step, vals0)``; ``step(vals, x, y) -> (vals, loss)`` is
+    jit-ready and exercises the full differentiable SpMM: forward through
+    the cached plans, ``dB`` through the transpose merge plans, ``dvals``
+    through the SDDMM kernel.
+    """
+    sparse_p = ensure_spmm_plans(sparse_p)
+
+    def loss_fn(vals, x, y):
+        layers = S.mlp_with_vals(sparse_p, vals)
+        pred = S.sparse_mlp_apply(
+            {k: functools.partial(sl, impl=impl, interpret=interpret)
+             for k, sl in layers.items()}, x, None)
+        return jnp.mean((pred - y) ** 2)
+
+    def step(vals, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(vals, x, y)
+        vals = jax.tree.map(lambda v, g: v - lr * g.astype(v.dtype),
+                            vals, grads)
+        return vals, loss
+
+    return step, S.mlp_vals(sparse_p)
 
 
 def init_train_state(cfg, key, *, grad_compression: str = "none",

@@ -62,8 +62,8 @@ def test_scan_matches_unrolled():
 
 
 def test_collective_wire_bytes():
-    mesh = jax.make_mesh((len(jax.devices()),), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((len(jax.devices()),), ("model",))
     n = len(jax.devices())
     if n == 1:
         pytest.skip("single device — no collectives emitted")

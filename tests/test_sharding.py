@@ -14,8 +14,8 @@ from repro.models import model as M
 def _mesh(shape=(1, 1), axes=("data", "model")):
     # 1 CPU device → 1×1 mesh; rules are still exercised (everything falls
     # back to replication via the divisibility check)
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    from repro.launch.mesh import make_mesh
+    return make_mesh(shape, axes)
 
 
 def test_fit_drops_nondivisible_axes():

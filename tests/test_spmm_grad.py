@@ -1,0 +1,139 @@
+"""Differentiable SpMM: jax.grad through plans vs. the dense-autodiff
+oracle (values and B cotangents), for both kernel methods.
+
+The backward pass is custom: dB rides the cached transpose (CSC-view)
+merge plan, dvals rides the SDDMM gather-dot kernel — so the oracle is a
+densify-and-matmul loss differentiated by plain autodiff.  Acceptance
+criterion: float32 agreement to 1e-4.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CSR, build_plan, execute_plan, random_csr, spmm
+from repro.models.sparse import SparseLinear, prune_mlp
+from repro.runtime import steps as R
+
+TOL = dict(rtol=1e-4, atol=1e-5)
+
+
+def _case(seed=0, m=48, k=40, n=24, npr=(0, 12)):
+    a = random_csr(jax.random.PRNGKey(seed), m, k, nnz_per_row=npr)
+    b = jax.random.normal(jax.random.PRNGKey(seed + 1), (k, n))
+    w = jax.random.normal(jax.random.PRNGKey(seed + 2), (m, n))
+    return a, b, w
+
+
+def _dense_loss(a: CSR, w):
+    row_ptr, col_ind, shape = a.row_ptr, a.col_ind, a.shape
+
+    def loss(vals, b):
+        dense = CSR(row_ptr, col_ind, vals, shape).to_dense()
+        return jnp.sum((dense @ b) * w)
+
+    return loss
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+@pytest.mark.parametrize("method", ["merge", "rowsplit"])
+def test_grad_matches_dense_oracle(method, impl):
+    a, b, w = _case()
+    plan = build_plan(a, method=method)
+
+    def loss(vals, bb):
+        return jnp.sum(execute_plan(plan, vals, bb, impl=impl) * w)
+
+    g_vals, g_b = jax.grad(loss, argnums=(0, 1))(a.vals, b)
+    want_vals, want_b = jax.grad(_dense_loss(a, w), argnums=(0, 1))(a.vals, b)
+    np.testing.assert_allclose(np.asarray(g_vals), np.asarray(want_vals),
+                               **TOL)
+    np.testing.assert_allclose(np.asarray(g_b), np.asarray(want_b), **TOL)
+
+
+@pytest.mark.parametrize("method", ["merge", "rowsplit"])
+def test_grad_through_spmm_api(method):
+    """spmm() with a concrete pattern closed over is differentiable."""
+    a, b, w = _case(seed=3)
+
+    def loss(bb):
+        return jnp.sum(spmm(a, bb, method=method, impl="xla") * w)
+
+    g = jax.grad(loss)(b)
+    want = jax.grad(lambda bb: _dense_loss(a, w)(a.vals, bb))(b)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(want), **TOL)
+
+
+@pytest.mark.parametrize("method", ["merge", "rowsplit"])
+def test_grad_under_jit(method):
+    a, b, w = _case(seed=4, m=32, k=24, n=16)
+    plan = build_plan(a, method=method)
+
+    @jax.jit
+    def grads(vals, bb):
+        return jax.grad(
+            lambda v, x: jnp.sum(execute_plan(plan, v, x, impl="xla") * w),
+            argnums=(0, 1))(vals, bb)
+
+    g_vals, g_b = grads(a.vals, b)
+    want_vals, want_b = jax.grad(_dense_loss(a, w), argnums=(0, 1))(a.vals, b)
+    np.testing.assert_allclose(np.asarray(g_vals), np.asarray(want_vals),
+                               **TOL)
+    np.testing.assert_allclose(np.asarray(g_b), np.asarray(want_b), **TOL)
+
+
+def test_grad_empty_and_degenerate_rows():
+    """Empty rows / empty matrix tails: cotangents stay masked to zero."""
+    a, b, w = _case(seed=5, m=16, k=12, n=8, npr=(0, 2))
+    for method in ("merge", "rowsplit"):
+        plan = build_plan(a, method=method)
+        g_vals = jax.grad(lambda v: jnp.sum(
+            execute_plan(plan, v, b, impl="xla") * w))(a.vals)
+        want = jax.grad(
+            lambda v: _dense_loss(a, w)(v, b))(a.vals)
+        np.testing.assert_allclose(np.asarray(g_vals), np.asarray(want),
+                                   **TOL)
+        nnz = int(np.asarray(a.row_ptr)[-1])
+        assert not np.any(np.asarray(g_vals)[nnz:]), \
+            "padded values received nonzero cotangents"
+
+
+def test_sparse_linear_loss_grad():
+    """jax.grad of a SparseLinear loss vs. the dense-autodiff oracle."""
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((24, 32)), jnp.float32)  # (d_in, d_out)
+    x = jnp.asarray(rng.standard_normal((8, 24)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((8, 32)), jnp.float32)
+    sl = SparseLinear.from_dense(w, 0.25)
+
+    def loss_sparse(vals):
+        layer = dataclasses.replace(
+            sl, weight=dataclasses.replace(sl.weight, vals=vals))
+        return jnp.mean((layer(x, impl="xla") - y) ** 2)
+
+    def loss_dense(vals):
+        wd = dataclasses.replace(sl.weight, vals=vals).to_dense()  # (d_out, d_in)
+        return jnp.mean((x @ wd.T - y) ** 2)
+
+    g = jax.grad(loss_sparse)(sl.weight.vals)
+    want = jax.grad(loss_dense)(sl.weight.vals)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(want), **TOL)
+
+
+def test_sparse_train_step_learns():
+    """End-to-end: the runtime's sparse fine-tuning step reduces loss."""
+    rng = np.random.default_rng(1)
+    p = {"w1": jnp.asarray(rng.standard_normal((16, 48)), jnp.float32),
+         "w2": jnp.asarray(rng.standard_normal((48, 16)), jnp.float32)}
+    sp = prune_mlp(p, 0.25)
+    step, vals = R.make_sparse_train_step(sp, lr=5e-3, impl="xla")
+    jstep = jax.jit(step)
+    x = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+    losses = []
+    for _ in range(10):
+        vals, loss = jstep(vals, x, y)
+        losses.append(float(loss))
+    assert losses[-1] < 0.7 * losses[0], losses
