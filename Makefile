@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: ci test smoke bench
+.PHONY: ci test smoke bench tune tune-smoke
 
 ci: test smoke
 
@@ -15,3 +15,17 @@ smoke:
 
 bench:
 	$(PY) -m benchmarks.run
+
+# Full empirical autotune over the paper corpus (see EXPERIMENTS.md)
+tune:
+	$(PY) -m repro.tune --suite paper --out tune.json
+
+# CI smoke: autotune the 3-matrix mini suite + corpus bench, artifacts
+# land in artifacts/ (TuneDB JSON + bench CSV)
+tune-smoke:
+	mkdir -p artifacts
+	$(PY) -m repro.tune --suite mini --out artifacts/tune.json \
+	    --warmup 1 --repeat 2
+	REPRO_CORPUS_SUITE=mini $(PY) -m benchmarks.run corpus \
+	    > artifacts/bench_corpus.csv
+	cat artifacts/bench_corpus.csv

@@ -1,0 +1,107 @@
+"""Corpus sweep: per-matrix kernel timings + heuristic-vs-oracle accuracy.
+
+The §5.4 claim generalized from Fig. 6's synthetic sweep to the matrix
+corpus (``repro.matrices.suites``; ``REPRO_CORPUS_SUITE`` env overrides
+the default ``paper`` suite — CI smoke uses ``mini``).  Per matrix:
+row-length stats (d, cv, Gini — the Fig. 1 axes), vendor-stand-in /
+merge / row-split timings, and the oracle winner.  Then three selection
+policies are scored against the oracle:
+
+* the paper's fixed K40c threshold (9.35),
+* a threshold calibrated on *this* sweep's timings,
+* the TuneDB ladder as ``engine.get_plan`` would resolve it — exact hits
+  replayed from the sweep's own records (100% by construction; reported
+  as a consistency check) and, more interestingly, **class-signature
+  leave-one-out**: each matrix resolved only from the *other* matrices'
+  records, the generalization the binned ``(m, k, d, cv)`` classes claim.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import numpy as np
+
+from repro.core import Heuristic, calibrate, spmm
+from repro.core.plan import pattern_fingerprint
+from repro.kernels import ref
+from repro.matrices import compute_stats, get_suite
+from repro.tune.db import TuneDB, TuneRecord, class_signature
+
+from .common import geomean, make_b, timeit
+
+N = 64
+
+
+def run(csv=print):
+    suite = os.environ.get("REPRO_CORPUS_SUITE", "paper")
+    specs = get_suite(suite)
+    csv("name,us_per_call,derived")
+
+    recs, fps, mats = [], [], []
+    for spec in specs:
+        a = spec()
+        s = compute_stats(a)
+        b = make_b(7, a.k, N)
+        t_vendor = timeit(jax.jit(ref.spmm_gather_ref), a, b)
+        t_mg = timeit(functools.partial(
+            spmm, method="merge", impl="xla", plan="inline"), a, b)
+        t_rs = timeit(functools.partial(
+            spmm, method="rowsplit", impl="xla", plan="inline",
+            l_pad=max(s.max_len, 1)), a, b)
+        winner = "merge" if t_mg < t_rs else "rowsplit"
+        pred = Heuristic().choose(a)
+        csv(f"corpus_{spec.name}_vendor,{t_vendor:.1f},"
+            f"d={s.d:.1f};cv={s.cv:.2f};gini={s.gini:.2f}")
+        csv(f"corpus_{spec.name}_merge,{t_mg:.1f},"
+            f"{'WIN' if winner == 'merge' else ''}")
+        csv(f"corpus_{spec.name}_rowsplit,{t_rs:.1f},"
+            f"{'WIN' if winner == 'rowsplit' else ''}")
+        csv(f"corpus_{spec.name}_heuristic,0,pred={pred};oracle={winner};"
+            f"{'HIT' if pred == winner else 'MISS'}")
+        recs.append(TuneRecord(
+            method=winner, merge_us=t_mg, rowsplit_us=t_rs, m=s.m, k=s.k,
+            d=s.d, cv=s.cv, n=N, name=spec.name))
+        fps.append(pattern_fingerprint(a))
+        mats.append(a)
+
+    ds = np.array([r.d for r in recs])
+    t_mg = np.array([r.merge_us for r in recs])
+    t_rs = np.array([r.rowsplit_us for r in recs])
+    oracle_merge = t_mg < t_rs
+    t_best = np.minimum(t_mg, t_rs)
+
+    paper_pred = ds < Heuristic().threshold
+    csv(f"corpus_paper_threshold_accuracy,0,"
+        f"{np.mean(paper_pred == oracle_merge) * 100:.1f}%")
+    thr, acc = calibrate(ds, t_rs, t_mg)
+    csv(f"corpus_calibrated_threshold,0,{thr:.2f}")
+    csv(f"corpus_calibrated_accuracy,0,{acc * 100:.1f}%")
+
+    # TuneDB ladder accuracy: exact (consistency) and class leave-one-out.
+    db = TuneDB(backend="bench")
+    for fp, r in zip(fps, recs):
+        db.record(fp, r)
+    exact_ok = sum(db.choose(a) == r.oracle
+                   for a, r in zip(mats, recs))
+    csv(f"corpus_tunedb_exact_accuracy,0,"
+        f"{exact_ok / len(recs) * 100:.1f}%")
+    loo_ok = 0
+    for i, r in enumerate(recs):
+        loo = TuneDB(backend="bench")
+        for j, (fp, rj) in enumerate(zip(fps, recs)):
+            if j != i:
+                loo.record(fp, rj)
+        loo.calibrate_threshold()
+        loo_ok += loo.choose(mats[i]) == r.oracle
+    csv(f"corpus_tunedb_loo_accuracy,0,"
+        f"{loo_ok / len(recs) * 100:.1f}%")
+    csv(f"corpus_oracle_vs_merge_only_geomean,0,"
+        f"{geomean(t_mg / t_best):.3f}x")
+    csv(f"corpus_oracle_vs_rowsplit_only_geomean,0,"
+        f"{geomean(t_rs / t_best):.3f}x")
+
+
+if __name__ == "__main__":
+    run()

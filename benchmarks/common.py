@@ -10,25 +10,17 @@ CPU numbers; see EXPERIMENTS.md for the TPU roofline story.
 """
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import CSR, random_csr
+# Single timing implementation, shared with the empirical autotuner
+# (repro.tune) so bench rows and TuneDB records are directly comparable.
+from repro.tune.timing import timeit
 
-
-def timeit(fn, *args, warmup: int = 2, repeat: int = 5) -> float:
-    """Median wall-time in µs of a jitted callable."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    ts = []
-    for _ in range(repeat):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        ts.append((time.perf_counter() - t0) * 1e6)
-    return float(np.median(ts))
+__all__ = ["timeit", "make_matrix", "make_b", "geomean", "CSR",
+           "random_csr"]
 
 
 def make_matrix(seed: int, m: int, k: int, *, nnz_per_row=None,

@@ -10,8 +10,8 @@ import sys
 
 
 def main() -> None:
-    from . import (bench_fig1_imbalance, bench_fig4_aspect, bench_fig5_rows,
-                   bench_fig6_heuristic, bench_fig7_density,
+    from . import (bench_corpus, bench_fig1_imbalance, bench_fig4_aspect,
+                   bench_fig5_rows, bench_fig6_heuristic, bench_fig7_density,
                    bench_plan_reuse, bench_table1_analysis,
                    bench_train_step, bench_moe_balance)
     mods = [
@@ -24,6 +24,7 @@ def main() -> None:
         ("moe", bench_moe_balance),
         ("plan", bench_plan_reuse),
         ("train", bench_train_step),
+        ("corpus", bench_corpus),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     printed_header = False
@@ -32,7 +33,7 @@ def main() -> None:
             continue
         print(f"# --- {name}: {mod.__doc__.splitlines()[0]}", flush=True)
 
-        def csv(line, _ph=printed_header):
+        def csv(line):
             nonlocal printed_header
             if line.startswith("name,") and printed_header:
                 return

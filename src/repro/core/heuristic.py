@@ -43,7 +43,11 @@ class Heuristic:
     def _require_concrete(a: CSR) -> None:
         import jax
 
-        if isinstance(a.row_ptr, jax.core.Tracer):
+        # Either structure array being traced means the pattern is traced
+        # (matches core.spmm._is_traced): vmapped/scanned CSRs can carry a
+        # concrete row_ptr next to a traced col_ind.
+        if isinstance(a.row_ptr, jax.core.Tracer) or \
+                isinstance(a.col_ind, jax.core.Tracer):
             raise ValueError(
                 "Heuristic.choose is a static (host-side) decision and "
                 "cannot run on a traced CSR. Capture it once at plan-build "

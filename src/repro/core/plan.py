@@ -134,17 +134,34 @@ def _compose_slots(slot_nz: jax.Array, perm: jax.Array,
 def resolve_static(a: CSR, *, method: str = "auto",
                    heuristic: Heuristic | None = None,
                    t: int | None = None, tl: int | None = None,
-                   l_pad: int | None = None):
+                   l_pad: int | None = None, tunedb=None):
     """Pin down every pattern-static decision of a plan request.
 
-    Returns ``(method, t, tl, l_pad)`` fully resolved: ``auto`` goes
-    through the §5.4 heuristic, an omitted rowsplit ``l_pad`` becomes the
-    pattern's max row length, omitted tile sizes become kernel defaults,
-    and merge normalizes ``l_pad`` to None.  Single source of truth for
+    Returns ``(method, t, tl, l_pad)`` fully resolved: ``auto`` resolves
+    the method — through the empirical ``tunedb`` when given (exact
+    pattern hit, then binned pattern-class hit, each replaying measured
+    winners; see ``repro.tune.db``), then the §5.4 analytic heuristic
+    (DB-calibrated threshold when available) — an omitted rowsplit
+    ``l_pad`` becomes the pattern's max row length, omitted tile sizes
+    become kernel defaults, and merge normalizes ``l_pad`` to None.  All
+    host-side, never inside jit.  Single source of truth for
     ``build_plan`` and the engine cache key — they can never disagree.
     """
     merge_k, rowsplit_k = _kernels()
     _require_concrete(a, "resolve_static")
+    if method == "auto" and tunedb is not None:
+        rec = tunedb.lookup_exact(pattern_fingerprint(a))
+        if rec is not None:
+            # Exact hit: replay the measured winner and its tuned params.
+            method = rec.method
+            t = rec.t if t is None else t
+            l_pad = rec.l_pad if l_pad is None else l_pad
+        else:
+            cls_method, _ = tunedb.resolve(a)
+            if cls_method is not None:
+                method = cls_method
+            elif heuristic is None:
+                heuristic = tunedb.heuristic()   # calibrated threshold
     heuristic = heuristic or Heuristic()
     t = merge_k.DEFAULT_T if t is None else t
     tl = rowsplit_k.DEFAULT_TL if tl is None else tl
@@ -164,10 +181,11 @@ def build_plan(a: CSR, *, method: str = "auto",
                heuristic: Heuristic | None = None,
                t: int | None = None, tl: int | None = None,
                l_pad: int | None = None,
-               with_transpose: bool = True) -> SpmmPlan:
+               with_transpose: bool = True, tunedb=None) -> SpmmPlan:
     """Build an SpmmPlan from a concrete CSR (once per sparsity pattern).
 
-    ``method="auto"`` evaluates the paper's §5.4 heuristic here — a static
+    ``method="auto"`` resolves the kernel choice here — via the empirical
+    ``tunedb`` when given, else the paper's §5.4 heuristic — a static
     decision captured in the plan, so execution never host-syncs on it.
     ``with_transpose`` additionally builds the CSC-view merge plan that
     powers the ``dB`` backward pass; forward-only callers can skip it.
@@ -175,7 +193,8 @@ def build_plan(a: CSR, *, method: str = "auto",
     merge_k, rowsplit_k = _kernels()
     _require_concrete(a, "build_plan")
     method, t, tl, l_pad = resolve_static(
-        a, method=method, heuristic=heuristic, t=t, tl=tl, l_pad=l_pad)
+        a, method=method, heuristic=heuristic, t=t, tl=tl, l_pad=l_pad,
+        tunedb=tunedb)
     if method == "merge":
         fwd = dict(merge_k.plan_merge_structure(a, t=t))
     else:

@@ -118,7 +118,7 @@ def execute_plan(plan: SpmmPlan, vals: jax.Array, b: jax.Array, *,
 
 def spmm(a: CSR, b: jax.Array, *, method: str = "auto",
          l_pad: int | None = None, t: int = 16,
-         heuristic: Heuristic = _DEFAULT_HEURISTIC,
+         heuristic: Heuristic | None = None,
          interpret: bool | None = None, impl: str = "pallas",
          plan: SpmmPlan | str | None = None) -> jax.Array:
     """Sparse(CSR) × dense = dense.  ``b`` is (k, n); returns (m, n).
@@ -145,7 +145,7 @@ def spmm(a: CSR, b: jax.Array, *, method: str = "auto",
         raise ValueError(f"plan must be an SpmmPlan, None, or 'inline'; "
                          f"got {plan!r}")
     if method == "auto" and not _is_traced(a):
-        method = heuristic.choose(a)
+        method = (heuristic or _DEFAULT_HEURISTIC).choose(a)
     if method == "auto":
         raise ValueError(
             "spmm(method='auto') on a traced CSR would need a host-side "

@@ -3,11 +3,17 @@
     plan = repro.engine.get_plan(a)            # cached per pattern
     c = repro.core.spmm(a, b, plan=plan)       # never replans, jit-safe
 
-See ``repro.core.plan`` for what a plan holds and ``engine.cache`` for the
-LRU keyed on pattern fingerprints.
+    engine.load_tunedb("tune.json")            # measured kernel selection
+    plan = repro.engine.get_plan(a)            # exact/class/threshold
+
+See ``repro.core.plan`` for what a plan holds, ``engine.cache`` for the
+LRU keyed on pattern fingerprints, and ``repro.tune`` for building the
+TuneDB that replaces the analytic heuristic with measurements.
 """
 from .cache import (CacheStats, PlanCache, cache_stats, clear_cache,
-                    default_cache, get_plan)
+                    current_tunedb, default_cache, get_plan, load_tunedb,
+                    set_tunedb)
 
 __all__ = ["CacheStats", "PlanCache", "cache_stats", "clear_cache",
-           "default_cache", "get_plan"]
+           "current_tunedb", "default_cache", "get_plan", "load_tunedb",
+           "set_tunedb"]

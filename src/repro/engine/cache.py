@@ -26,6 +26,40 @@ from repro.core.plan import (SpmmPlan, build_plan, pattern_fingerprint,
 
 DEFAULT_MAXSIZE = 256
 
+# Sentinel: "no tunedb argument given — use the process default".
+_USE_DEFAULT = object()
+
+# Process-wide empirical tuning database (repro.tune.TuneDB).  When set,
+# every "auto" plan request resolves its method through measurements
+# (exact pattern -> pattern class -> calibrated threshold) instead of the
+# paper's fixed K40c threshold.  Host-side only: consulted at plan build,
+# never inside jit.
+_default_tunedb = None
+
+
+def set_tunedb(db) -> None:
+    """Install (or clear, with None) the process-default TuneDB."""
+    global _default_tunedb
+    _default_tunedb = db
+
+
+def current_tunedb():
+    return _default_tunedb
+
+
+def load_tunedb(path, **kw):
+    """Load a TuneDB from ``path`` and install it as the process default.
+
+    Forgiving like ``TuneDB.load``: a corrupt/mismatched file installs an
+    empty DB (with a warning), so plan building falls back to the
+    analytic heuristic rather than crashing the launcher.
+    """
+    from repro.tune.db import TuneDB
+
+    db = TuneDB.load(path, **kw)
+    set_tunedb(db)
+    return db
+
 
 @dataclasses.dataclass
 class CacheStats:
@@ -53,7 +87,8 @@ class PlanCache:
     def get(self, a: CSR, *, method: str = "auto",
             heuristic: Heuristic | None = None, t: int | None = None,
             tl: int | None = None, l_pad: int | None = None,
-            with_transpose: bool = True) -> SpmmPlan:
+            with_transpose: bool = True,
+            tunedb=_USE_DEFAULT) -> SpmmPlan:
         """Cached ``build_plan`` — the engine's plan-once entry point.
 
         Canonical keys pin down the static decisions through the same
@@ -62,9 +97,19 @@ class PlanCache:
         A raw-request alias map makes repeated identical requests O(1):
         neither the heuristic's host read nor the l_pad scan reruns on a
         hit (the fingerprint itself is memoized per CSR object).
+
+        ``tunedb`` (default: the process-wide DB from ``set_tunedb``)
+        resolves "auto" methods from measurements; its content digest is
+        part of the raw key, so swapping databases can never serve a plan
+        resolved against the old one (explicit ``tunedb=None`` opts out).
         """
-        hkey = (heuristic or Heuristic()).threshold \
-            if method == "auto" else None
+        if tunedb is _USE_DEFAULT:
+            tunedb = _default_tunedb
+        if method == "auto":
+            hkey = (heuristic.threshold if heuristic is not None else None,
+                    tunedb.digest() if tunedb is not None else None)
+        else:
+            hkey = None
         raw = (pattern_fingerprint(a), a.shape, a.nnz_pad, method, hkey,
                t, tl, l_pad, with_transpose)
         with self._lock:
@@ -75,7 +120,8 @@ class PlanCache:
                 self._stats.hits += 1
                 return plan
         method, t, tl, l_pad = resolve_static(
-            a, method=method, heuristic=heuristic, t=t, tl=tl, l_pad=l_pad)
+            a, method=method, heuristic=heuristic, t=t, tl=tl, l_pad=l_pad,
+            tunedb=tunedb)
         key = (raw[0], a.shape, a.nnz_pad, method, t, tl, l_pad,
                with_transpose)
         with self._lock:

@@ -134,7 +134,17 @@ def main(argv=None):
     ap.add_argument("--prune-ffn", type=float, default=0.0, metavar="KEEP",
                     help="serve with magnitude-pruned FFNs (CSR SpMM via "
                     "the plan engine); KEEP is the kept fraction per row")
+    ap.add_argument("--tunedb", default="", metavar="PATH",
+                    help="TuneDB JSON (python -m repro.tune) — pruned-FFN "
+                    "plans resolve merge/rowsplit from measurements "
+                    "instead of the paper's fixed threshold")
     args = ap.parse_args(argv)
+
+    if args.tunedb:
+        from repro import engine
+        db = engine.load_tunedb(args.tunedb)
+        print(f"[serve] tunedb {args.tunedb}: backend={db.backend} "
+              f"entries={len(db)} threshold={db.threshold}")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     assert cfg.input_mode == "tokens", \

@@ -42,7 +42,17 @@ def main(argv=None):
                     choices=["none", "int8_ef"])
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--data-path", default="")
+    ap.add_argument("--tunedb", default="", metavar="PATH",
+                    help="TuneDB JSON (python -m repro.tune) — SparseLinear "
+                    "plan (re)builds resolve their kernel method from "
+                    "measurements instead of the analytic heuristic")
     args = ap.parse_args(argv)
+
+    if args.tunedb:
+        from repro import engine
+        db = engine.load_tunedb(args.tunedb)
+        print(f"[train] tunedb {args.tunedb}: backend={db.backend} "
+              f"entries={len(db)} threshold={db.threshold}")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     mesh = make_local_mesh()

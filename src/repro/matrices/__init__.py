@@ -1,0 +1,35 @@
+"""Matrix corpus subsystem: real + synthetic sparsity patterns.
+
+The paper's headline numbers (31.7% geomean speedup, 99.3%-accurate kernel
+selection) are claims about *real-world matrices* — SuiteSparse graphs,
+FEM stencils, pruned weights — not about the near-uniform `random_csr`
+patterns the seed repo could generate.  This package supplies the inputs
+that make those claims measurable on this backend:
+
+* ``mmio`` — MatrixMarket ``.mtx`` reader/writer (coordinate
+  real/integer/pattern, general/symmetric/skew-symmetric with expansion)
+  producing/consuming :class:`repro.core.CSR`,
+* ``generators`` — deterministic synthetic families spanning the paper's
+  regimes: power-law (graph), banded (stencil), block-sparse (pruned
+  weight), uniform (regular / irregular),
+* ``stats`` — per-matrix row-length statistics: mean ``d`` (the §5.4
+  heuristic axis), coefficient of variation, Gini imbalance (the Fig. 1
+  axis), max row length,
+* ``suites`` — a named-suite registry (``mini``, ``paper``, ``pruned``)
+  the autotuner (``repro.tune``) and ``benchmarks/bench_corpus.py``
+  iterate over, plus ``specs_from_mtx_dir`` for on-disk corpora.
+"""
+from .generators import (banded, block_sparse, power_law, uniform,
+                         uniform_irregular)
+from .mmio import read_mtx, write_mtx
+from .stats import MatrixStats, compute_stats
+from .suites import (MatrixSpec, get_suite, register_spec, register_suite,
+                     specs_from_mtx_dir, suite_names)
+
+__all__ = [
+    "banded", "block_sparse", "power_law", "uniform", "uniform_irregular",
+    "read_mtx", "write_mtx",
+    "MatrixStats", "compute_stats",
+    "MatrixSpec", "get_suite", "register_spec", "register_suite",
+    "specs_from_mtx_dir", "suite_names",
+]

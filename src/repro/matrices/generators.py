@@ -1,0 +1,136 @@
+"""Deterministic synthetic matrix families spanning the paper's regimes.
+
+Each generator is a pure function of an integer ``seed`` (numpy
+``default_rng`` — no JAX key threading), so corpus suites are reproducible
+across processes and backends: the autotuner can fingerprint a generated
+pattern today and hit the same fingerprint in next week's serving job.
+
+Families and the regime they cover (Fig. 1 / §5 of the paper):
+
+* :func:`uniform` / :func:`uniform_irregular` — regular rows / mild Type-2
+  imbalance, the ``random_csr`` regime the seed repo already measured,
+* :func:`power_law` — heavy-tailed row lengths (web/social graphs), the
+  Type-1 imbalance that breaks row-per-thread kernels,
+* :func:`banded` — FEM/stencil diagonals: near-constant short rows, the
+  regime where row-split's ELL padding is free,
+* :func:`block_sparse` — structured blocks surviving magnitude pruning of
+  a weight matrix, the paper's §1 serving use case.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.csr import CSR
+
+
+def _csr_from_lengths(rng: np.random.Generator, lengths: np.ndarray,
+                      m: int, k: int, dtype) -> CSR:
+    """Rows with given lengths; sorted unique uniform columns per row."""
+    lengths = np.minimum(np.maximum(lengths, 0), k).astype(np.int64)
+    row_ptr = np.zeros(m + 1, np.int32)
+    np.cumsum(lengths, out=row_ptr[1:])
+    nnz = int(row_ptr[-1])
+    nnz_pad = max(nnz, 1)
+    col_ind = np.zeros(nnz_pad, np.int32)
+    for r in range(m):
+        s, e = row_ptr[r], row_ptr[r + 1]
+        if e > s:
+            col_ind[s:e] = np.sort(rng.choice(k, size=e - s, replace=False))
+    vals = np.zeros(nnz_pad, np.float64)
+    vals[:nnz] = rng.standard_normal(nnz)
+    return CSR(jnp.asarray(row_ptr), jnp.asarray(col_ind),
+               jnp.asarray(vals, dtype=dtype), (m, k))
+
+
+def uniform(seed: int, m: int, k: int, d: int, *,
+            dtype=jnp.float32) -> CSR:
+    """Every row has exactly ``d`` nonzeroes (regular, zero imbalance)."""
+    rng = np.random.default_rng(seed)
+    return _csr_from_lengths(rng, np.full(m, d), m, k, dtype)
+
+
+def uniform_irregular(seed: int, m: int, k: int, d: int, *,
+                      dtype=jnp.float32) -> CSR:
+    """Row lengths uniform in [0, 2d] (mean ``d``) — mild imbalance."""
+    rng = np.random.default_rng(seed)
+    return _csr_from_lengths(rng, rng.integers(0, 2 * d + 1, size=m),
+                             m, k, dtype)
+
+
+def power_law(seed: int, m: int, k: int, d: float, *, alpha: float = 1.6,
+              dtype=jnp.float32) -> CSR:
+    """Heavy-tailed (Pareto) row lengths rescaled to mean ``d``.
+
+    ``alpha`` is the Pareto tail index: smaller → heavier tail → a few
+    huge rows dominate (web-graph-like; high Gini).  Lengths are clipped
+    to ``k`` after rescaling, so the realized mean can sit slightly below
+    the target for extreme tails.
+    """
+    rng = np.random.default_rng(seed)
+    raw = rng.pareto(alpha, size=m) + 1.0
+    lengths = np.floor(raw * (d / raw.mean())).astype(np.int64)
+    return _csr_from_lengths(rng, lengths, m, k, dtype)
+
+
+def banded(seed: int, m: int, k: int, band: int, *,
+           fill: float = 1.0, dtype=jnp.float32) -> CSR:
+    """Stencil-style band of half-width ``band`` around the scaled diagonal.
+
+    ``fill < 1`` keeps each in-band entry with that probability (a
+    partially assembled FEM operator); ``fill = 1`` is the dense band.
+    Rows are near-constant length — the paper's low-variance regime.
+    """
+    rng = np.random.default_rng(seed)
+    row_ptr = np.zeros(m + 1, np.int32)
+    cols_per_row = []
+    for r in range(m):
+        center = int(round(r * (k - 1) / max(m - 1, 1)))
+        lo, hi = max(center - band, 0), min(center + band + 1, k)
+        cols = np.arange(lo, hi, dtype=np.int32)
+        if fill < 1.0:
+            cols = cols[rng.random(cols.size) < fill]
+        cols_per_row.append(cols)
+        row_ptr[r + 1] = row_ptr[r] + cols.size
+    nnz = int(row_ptr[-1])
+    nnz_pad = max(nnz, 1)
+    col_ind = np.zeros(nnz_pad, np.int32)
+    if nnz:
+        col_ind[:nnz] = np.concatenate(cols_per_row)
+    vals = np.zeros(nnz_pad, np.float64)
+    vals[:nnz] = rng.standard_normal(nnz)
+    return CSR(jnp.asarray(row_ptr), jnp.asarray(col_ind),
+               jnp.asarray(vals, dtype=dtype), (m, k))
+
+
+def block_sparse(seed: int, m: int, k: int, *, block: int = 8,
+                 keep: float = 0.25, dtype=jnp.float32) -> CSR:
+    """Block-structured pruning mask: keep whole ``block×block`` tiles.
+
+    Models a magnitude-pruned weight with structured sparsity: a uniform
+    ``keep`` fraction of tiles survives; rows inside a surviving tile are
+    dense across it.  ``m`` and ``k`` need not divide ``block`` — edge
+    tiles are clipped.
+    """
+    rng = np.random.default_rng(seed)
+    mb = (m + block - 1) // block
+    kb = (k + block - 1) // block
+    mask = rng.random((mb, kb)) < keep
+    row_ptr = np.zeros(m + 1, np.int32)
+    cols_per_row = []
+    for r in range(m):
+        tiles = np.nonzero(mask[r // block])[0]
+        cols = np.concatenate(
+            [np.arange(t * block, min((t + 1) * block, k), dtype=np.int32)
+             for t in tiles]) if tiles.size else np.empty(0, np.int32)
+        cols_per_row.append(cols)
+        row_ptr[r + 1] = row_ptr[r] + cols.size
+    nnz = int(row_ptr[-1])
+    nnz_pad = max(nnz, 1)
+    col_ind = np.zeros(nnz_pad, np.int32)
+    if nnz:
+        col_ind[:nnz] = np.concatenate(cols_per_row)
+    vals = np.zeros(nnz_pad, np.float64)
+    vals[:nnz] = rng.standard_normal(nnz)
+    return CSR(jnp.asarray(row_ptr), jnp.asarray(col_ind),
+               jnp.asarray(vals, dtype=dtype), (m, k))

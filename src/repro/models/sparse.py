@@ -33,13 +33,19 @@ class SparseLinear:
 
     @classmethod
     def from_dense(cls, w: jax.Array, keep_fraction: float,
-                   heuristic: Heuristic = Heuristic()) -> "SparseLinear":
-        """Prune w (d_in, d_out) — stored transposed as (d_out, d_in)."""
+                   heuristic: Optional[Heuristic] = None) -> "SparseLinear":
+        """Prune w (d_in, d_out) — stored transposed as (d_out, d_in).
+
+        ``heuristic=None`` (default) lets the engine resolve the kernel
+        method through the full ladder — TuneDB exact/class hits, then a
+        DB-calibrated threshold — instead of pinning the analytic default.
+        """
         csr = prune_to_csr(np.asarray(w).T, keep_fraction)
         from repro import engine
         return cls(csr, engine.get_plan(csr, heuristic=heuristic))
 
-    def with_plan(self, heuristic: Heuristic = Heuristic()) -> "SparseLinear":
+    def with_plan(self,
+                  heuristic: Optional[Heuristic] = None) -> "SparseLinear":
         """(Re)attach the engine-cached plan for this weight's pattern.
 
         Identity-cheap when the plan is already cached — use after

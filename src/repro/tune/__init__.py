@@ -1,0 +1,24 @@
+"""Empirical autotuning: measured kernel selection with a persistent DB.
+
+    # build the database once per backend
+    python -m repro.tune --suite paper --out tune.json
+
+    # plan building then resolves methods from measurements
+    from repro import engine
+    engine.load_tunedb("tune.json")
+    plan = engine.get_plan(a)       # exact -> class -> calibrated threshold
+
+See ``repro.tune.db`` for the resolution ladder and the on-disk schema,
+``repro.tune.autotune`` for what exactly gets timed.
+"""
+from .autotune import tune_pattern, tune_suite
+from .db import (SCHEMA_VERSION, TuneDB, TuneRecord, backend_key,
+                 class_signature)
+from .timing import timeit
+
+__all__ = [
+    "tune_pattern", "tune_suite",
+    "SCHEMA_VERSION", "TuneDB", "TuneRecord", "backend_key",
+    "class_signature",
+    "timeit",
+]

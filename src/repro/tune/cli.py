@@ -1,0 +1,90 @@
+"""``python -m repro.tune``: build/refresh a TuneDB over a corpus suite.
+
+    # tune the paper suite and write the database
+    python -m repro.tune --suite paper --out tune.json
+
+    # CI smoke: 3 matrices, fast timing budget
+    python -m repro.tune --suite mini --out artifacts/tune.json \
+        --warmup 1 --repeat 2
+
+    # fold a directory of .mtx files into an existing DB
+    python -m repro.tune --mtx-dir ./suitesparse --out tune.json
+
+The resulting JSON is consumed by ``repro.engine`` (``--tunedb`` on the
+serve/train launchers, or ``engine.load_tunedb(path)``): plan building
+then resolves the kernel method from measurements instead of the paper's
+K40c threshold.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.matrices.suites import get_suite, specs_from_mtx_dir, suite_names
+
+from .autotune import tune_suite
+from .db import TuneDB, backend_key
+
+
+def _report(db: TuneDB) -> None:
+    print(f"# TuneDB backend={db.backend} entries={len(db)}")
+    print("name,m,k,d,cv,method,merge_us,rowsplit_us,speedup")
+    for rec in sorted(db.entries.values(), key=lambda r: r.name):
+        lo, hi = sorted((rec.merge_us, rec.rowsplit_us))
+        print(f"{rec.name or '?'},{rec.m},{rec.k},{rec.d:.2f},"
+              f"{rec.cv:.2f},{rec.method},{rec.merge_us:.0f},"
+              f"{rec.rowsplit_us:.0f},{hi / max(lo, 1e-9):.2f}x")
+    if db.threshold is not None:
+        print(f"# calibrated_threshold={db.threshold:.3f} "
+              f"accuracy={db.threshold_accuracy * 100:.1f}%")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.tune",
+        description="empirically autotune merge vs rowsplit over a "
+                    "matrix corpus and persist winners in a TuneDB")
+    ap.add_argument("--suite", choices=suite_names(), default=None,
+                    help="named corpus suite (repro.matrices.suites)")
+    ap.add_argument("--mtx-dir", default=None,
+                    help="directory of .mtx files to tune as well")
+    ap.add_argument("--out", required=True, help="TuneDB JSON path "
+                    "(loaded and extended if it exists)")
+    ap.add_argument("--n", type=int, default=64,
+                    help="dense B columns for timing (paper: n in 32-128)")
+    ap.add_argument("--impl", default="xla", choices=["xla", "pallas"],
+                    help="kernel implementation to time")
+    ap.add_argument("--warmup", type=int, default=2)
+    ap.add_argument("--repeat", type=int, default=5)
+    ap.add_argument("--wide", action="store_true",
+                    help="also sweep l_pad/t candidates per method")
+    ap.add_argument("--refresh", action="store_true",
+                    help="re-time patterns already in the DB")
+    args = ap.parse_args(argv)
+
+    if args.suite is None and args.mtx_dir is None:
+        ap.error("nothing to tune: pass --suite and/or --mtx-dir")
+
+    specs = list(get_suite(args.suite)) if args.suite else []
+    if args.mtx_dir:
+        specs += specs_from_mtx_dir(args.mtx_dir)
+
+    try:
+        # strict: a corrupt or backend/schema-mismatched existing DB must
+        # error out, not silently degrade to empty and then be overwritten
+        # by db.save() — launchers degrade gracefully, the builder doesn't.
+        db = TuneDB.load(args.out, strict=True)
+        print(f"# extending {args.out} ({len(db)} entries)")
+    except FileNotFoundError:
+        db = TuneDB()
+        print(f"# new TuneDB for backend {backend_key()}")
+    except ValueError as e:
+        ap.error(f"refusing to overwrite {args.out}: {e} "
+                 "(move the file aside, or point --out elsewhere)")
+
+    tune_suite(specs, db, n=args.n, impl=args.impl, warmup=args.warmup,
+               repeat=args.repeat, wide=args.wide, refresh=args.refresh,
+               log=lambda s: print(f"# {s}"))
+    db.save(args.out)
+    _report(db)
+    print(f"# wrote {args.out}")
+    return 0

@@ -1,0 +1,260 @@
+"""TuneDB: a versioned, backend-keyed, on-disk record of measured winners.
+
+The paper ships one number — threshold 9.35, calibrated once on a K40c —
+and the seed repo hard-coded it.  The crossover is a property of the
+backend (memory system, kernel implementations), so this module replaces
+the constant with *measurements*: every tuned pattern gets a record of its
+merge/rowsplit timings, the winning method, and the winning static
+parameters (row-split ``l_pad``, merge chunk ``t``).
+
+Resolution at plan-build time (``repro.engine.get_plan``), all host-side:
+
+1. **exact** — the pattern's content fingerprint has a record → use its
+   method (and tuned ``l_pad``/``t``),
+2. **class** — the pattern's binned ``(m, k, d, cv)`` signature matches
+   tuned patterns → majority winner among them,
+3. **threshold** — the §5.4 analytic rule with a threshold *calibrated
+   from this DB's own timings* (falling back to the paper's 9.35 only
+   when the DB is empty).
+
+A DB is bound to one backend key (platform + device kind).  ``load`` is
+forgiving by design: a corrupt file, a schema-version mismatch, or a
+backend mismatch degrades to an *empty* DB — plan building then falls
+back to the analytic heuristic instead of crashing a serving job over a
+stale artifact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import math
+import os
+import warnings
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.csr import CSR
+from repro.core.heuristic import Heuristic, calibrate
+from repro.core.plan import pattern_fingerprint
+
+SCHEMA_VERSION = 1
+
+
+def backend_key() -> str:
+    """Identity of the backend the timings belong to."""
+    import jax
+
+    dev = jax.devices()[0]
+    return f"{jax.default_backend()}:{dev.device_kind}"
+
+
+def _log2_bin(x: float) -> int:
+    return int(round(math.log2(x))) if x > 0 else -1
+
+
+_CV_EDGES = (0.1, 0.5, 1.0)     # regular | mild | irregular | heavy-tail
+
+
+def class_signature(m: int, k: int, d: float, cv: float) -> str:
+    """Binned pattern-class signature over (m, k, d, cv).
+
+    Octave (log2) bins for the sizes and the mean row length, coarse
+    imbalance bins for cv — wide enough that one tuned matrix covers its
+    neighbours, narrow enough that the merge/rowsplit crossover (an
+    octave-scale effect in ``d``) stays resolvable.
+    """
+    cv_bin = sum(cv >= e for e in _CV_EDGES)
+    return (f"m{_log2_bin(m)}k{_log2_bin(k)}"
+            f"d{_log2_bin(d)}cv{cv_bin}")
+
+
+@dataclasses.dataclass
+class TuneRecord:
+    """Measured outcome for one sparsity pattern on one backend."""
+
+    method: str                  # winner: "merge" | "rowsplit"
+    merge_us: float
+    rowsplit_us: float
+    m: int
+    k: int
+    d: float                     # mean row length
+    cv: float                    # row-length coefficient of variation
+    n: int                       # dense B columns used for timing
+    l_pad: Optional[int] = None  # winning rowsplit pad (None: pattern max)
+    t: Optional[int] = None      # winning merge chunk size (None: default)
+    name: str = ""               # corpus spec name, for reports
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @property
+    def oracle(self) -> str:
+        return "merge" if self.merge_us < self.rowsplit_us else "rowsplit"
+
+    @property
+    def signature(self) -> str:
+        return class_signature(self.m, self.k, self.d, self.cv)
+
+
+class TuneDB:
+    """In-memory view of the tuning database (see module docstring)."""
+
+    def __init__(self, backend: str | None = None):
+        self.backend = backend or backend_key()
+        self.entries: Dict[str, TuneRecord] = {}
+        self.threshold: Optional[float] = None
+        self.threshold_accuracy: Optional[float] = None
+        self._classes: Dict[str, Dict[str, float]] = {}
+        self._digest: Optional[str] = None
+
+    # ------------------------------------------------------- mutation ---
+
+    def record(self, fingerprint: str, rec: TuneRecord) -> None:
+        old = self.entries.get(fingerprint)
+        if old is not None:
+            self._class_add(old, remove=True)
+        self.entries[fingerprint] = rec
+        self._class_add(rec)
+        self._digest = None
+
+    def _class_add(self, rec: TuneRecord, remove: bool = False) -> None:
+        sgn = -1.0 if remove else 1.0
+        agg = self._classes.setdefault(
+            rec.signature, {"merge_wins": 0.0, "rowsplit_wins": 0.0,
+                            "merge_us": 0.0, "rowsplit_us": 0.0})
+        agg[f"{rec.oracle}_wins"] += sgn
+        agg["merge_us"] += sgn * rec.merge_us
+        agg["rowsplit_us"] += sgn * rec.rowsplit_us
+
+    def calibrate_threshold(self) -> Tuple[float, float]:
+        """Fit the analytic-fallback threshold from this DB's timings."""
+        if not self.entries:
+            raise ValueError("cannot calibrate an empty TuneDB")
+        recs = list(self.entries.values())
+        ds = np.array([r.d for r in recs])
+        thr, acc = calibrate(ds, np.array([r.rowsplit_us for r in recs]),
+                             np.array([r.merge_us for r in recs]))
+        self.threshold, self.threshold_accuracy = thr, acc
+        self._digest = None
+        return thr, acc
+
+    # -------------------------------------------------------- queries ---
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def lookup_exact(self, fingerprint: str) -> Optional[TuneRecord]:
+        return self.entries.get(fingerprint)
+
+    def lookup_class(self, signature: str) -> Optional[str]:
+        agg = self._classes.get(signature)
+        if agg is None or (agg["merge_wins"] + agg["rowsplit_wins"]) <= 0:
+            return None
+        if agg["merge_wins"] != agg["rowsplit_wins"]:
+            return "merge" if agg["merge_wins"] > agg["rowsplit_wins"] \
+                else "rowsplit"
+        return "merge" if agg["merge_us"] <= agg["rowsplit_us"] \
+            else "rowsplit"
+
+    def heuristic(self) -> Heuristic:
+        """Analytic fallback, calibrated from this DB when possible."""
+        if self.threshold is not None:
+            return Heuristic(threshold=self.threshold)
+        return Heuristic()
+
+    def resolve(self, a: CSR) -> Tuple[Optional[str], str]:
+        """Method for a concrete pattern: ``(method, source)``.
+
+        ``source`` is ``"exact"``, ``"class"``, or ``"miss"`` (method
+        None — the caller falls back to :meth:`heuristic`).  Host-side
+        only: fingerprints and stats need a concrete pattern.
+        """
+        rec = self.lookup_exact(pattern_fingerprint(a))
+        if rec is not None:
+            return rec.method, "exact"
+        from repro.matrices.stats import compute_stats
+
+        s = compute_stats(a)
+        cls = self.lookup_class(class_signature(s.m, s.k, s.d, s.cv))
+        if cls is not None:
+            return cls, "class"
+        return None, "miss"
+
+    def choose(self, a: CSR) -> str:
+        """Fully resolved method (resolve, then heuristic fallback)."""
+        method, _ = self.resolve(a)
+        return method if method is not None else self.heuristic().choose(a)
+
+    def digest(self) -> str:
+        """Content hash — cache-key token so plan caches never serve a
+        plan resolved against a different DB state."""
+        if self._digest is None:
+            blob = json.dumps(self.as_dict(), sort_keys=True)
+            self._digest = hashlib.sha1(blob.encode()).hexdigest()[:16]
+        return self._digest
+
+    # ---------------------------------------------------- persistence ---
+
+    def as_dict(self) -> dict:
+        return {
+            "schema_version": SCHEMA_VERSION,
+            "backend": self.backend,
+            "threshold": self.threshold,
+            "threshold_accuracy": self.threshold_accuracy,
+            "entries": {fp: r.as_dict()
+                        for fp, r in sorted(self.entries.items())},
+        }
+
+    def save(self, path: str | os.PathLike) -> None:
+        tmp = f"{path}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(self.as_dict(), f, indent=1, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, path)
+
+    @classmethod
+    def load(cls, path: str | os.PathLike, *,
+             backend: str | None = None, strict: bool = False) -> "TuneDB":
+        """Load a DB for ``backend`` (default: the current one).
+
+        Any defect — unreadable/corrupt JSON, schema-version mismatch,
+        backend mismatch — returns an **empty** DB (with a warning), so
+        callers degrade to the analytic heuristic.  ``strict=True`` turns
+        those defects into exceptions (the CLI uses it).
+        """
+        expect = backend or backend_key()
+
+        def _reject(msg: str) -> "TuneDB":
+            if strict:
+                raise ValueError(f"TuneDB {path}: {msg}")
+            warnings.warn(f"TuneDB {path}: {msg}; falling back to the "
+                          "analytic heuristic", stacklevel=2)
+            return cls(backend=expect)
+
+        try:
+            with open(path) as f:
+                raw = json.load(f)
+        except FileNotFoundError:
+            raise
+        except (OSError, json.JSONDecodeError, UnicodeDecodeError) as e:
+            return _reject(f"unreadable or corrupt ({e})")
+        if not isinstance(raw, dict):
+            return _reject("not a JSON object")
+        if raw.get("schema_version") != SCHEMA_VERSION:
+            return _reject(f"schema version {raw.get('schema_version')!r} "
+                           f"!= supported {SCHEMA_VERSION}")
+        if raw.get("backend") != expect:
+            return _reject(f"built for backend {raw.get('backend')!r}, "
+                           f"this process runs {expect!r}")
+        db = cls(backend=expect)
+        try:
+            for fp, rd in raw.get("entries", {}).items():
+                db.record(fp, TuneRecord(**rd))
+        except TypeError as e:
+            return _reject(f"malformed entry ({e})")
+        db.threshold = raw.get("threshold")
+        db.threshold_accuracy = raw.get("threshold_accuracy")
+        db._digest = None
+        return db

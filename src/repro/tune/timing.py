@@ -1,0 +1,27 @@
+"""Wall-clock timing of jitted callables — the measurement primitive.
+
+This is the single implementation behind both the paper-figure benchmarks
+(``benchmarks/common.timeit`` re-exports it) and the empirical autotuner:
+warm up past compilation, then report the median of ``repeat`` synchronous
+calls in microseconds.  Median (not mean) so a stray GC pause or
+first-touch page fault cannot flip a merge/rowsplit verdict recorded into
+the TuneDB.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def timeit(fn, *args, warmup: int = 2, repeat: int = 5) -> float:
+    """Median wall-time in µs of a jitted callable."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))

@@ -1,0 +1,220 @@
+"""Matrix corpus subsystem: .mtx round-trips, generator determinism,
+row-length statistics, suite registry.
+
+Acceptance (ISSUE 2): write→read round-trip exact on pattern and ≤1e-6 on
+values; generator suites are seed-deterministic.
+"""
+import io
+
+import numpy as np
+import pytest
+
+from repro.matrices import (MatrixSpec, banded, block_sparse, compute_stats,
+                            get_suite, power_law, read_mtx, register_spec,
+                            specs_from_mtx_dir, suite_names, uniform,
+                            uniform_irregular, write_mtx)
+
+
+def _np(x):
+    return np.asarray(x)
+
+
+def _pattern_equal(a, b):
+    nnz = int(_np(a.row_ptr)[-1])
+    assert a.shape == b.shape
+    np.testing.assert_array_equal(_np(a.row_ptr), _np(b.row_ptr))
+    np.testing.assert_array_equal(_np(a.col_ind)[:nnz], _np(b.col_ind)[:nnz])
+    return nnz
+
+
+# ------------------------------------------------------------- mmio ---
+
+
+@pytest.mark.parametrize("gen", [
+    lambda: power_law(3, 64, 48, 4.0),
+    lambda: uniform_irregular(4, 32, 32, 5),
+    lambda: banded(5, 40, 40, 2),
+])
+def test_mtx_roundtrip_real(gen):
+    a = gen()
+    buf = io.StringIO()
+    write_mtx(buf, a, comments=["roundtrip test"])
+    buf.seek(0)
+    r = read_mtx(buf)
+    nnz = _pattern_equal(a, r)
+    np.testing.assert_allclose(_np(r.vals)[:nnz], _np(a.vals)[:nnz],
+                               atol=1e-6, rtol=0)
+
+
+def test_mtx_roundtrip_pattern_field():
+    a = uniform(6, 16, 24, 3)
+    buf = io.StringIO()
+    write_mtx(buf, a, field="pattern")
+    buf.seek(0)
+    r = read_mtx(buf)
+    nnz = _pattern_equal(a, r)
+    np.testing.assert_array_equal(_np(r.vals)[:nnz], np.ones(nnz))
+
+
+def test_mtx_roundtrip_integer_field():
+    import dataclasses
+    import jax.numpy as jnp
+    a = uniform(7, 8, 8, 2)
+    nnz = int(_np(a.row_ptr)[-1])
+    ints = np.arange(1, a.nnz_pad + 1, dtype=np.float64)
+    a = dataclasses.replace(a, vals=jnp.asarray(ints, jnp.float32))
+    buf = io.StringIO()
+    write_mtx(buf, a, field="integer")
+    buf.seek(0)
+    r = read_mtx(buf)
+    _pattern_equal(a, r)
+    np.testing.assert_array_equal(_np(r.vals)[:nnz], ints[:nnz])
+
+
+def test_mtx_symmetric_expansion():
+    text = """%%MatrixMarket matrix coordinate real symmetric
+% lower triangle of a 3x3
+3 3 4
+1 1 2.0
+2 1 -1.0
+3 2 0.5
+3 3 4.0
+"""
+    a = read_mtx(io.StringIO(text))
+    dense = _np(a.to_dense())
+    want = np.array([[2.0, -1.0, 0.0],
+                     [-1.0, 0.0, 0.5],
+                     [0.0, 0.5, 4.0]], np.float32)
+    np.testing.assert_allclose(dense, want, atol=1e-6)
+
+
+def test_mtx_skew_symmetric_expansion():
+    text = """%%MatrixMarket matrix coordinate real skew-symmetric
+2 2 1
+2 1 3.0
+"""
+    a = read_mtx(io.StringIO(text))
+    np.testing.assert_allclose(_np(a.to_dense()),
+                               [[0.0, -3.0], [3.0, 0.0]], atol=1e-6)
+
+
+def test_mtx_duplicates_summed():
+    text = """%%MatrixMarket matrix coordinate real general
+2 2 3
+1 1 1.5
+1 1 2.5
+2 2 1.0
+"""
+    a = read_mtx(io.StringIO(text))
+    np.testing.assert_allclose(_np(a.to_dense()),
+                               [[4.0, 0.0], [0.0, 1.0]], atol=1e-6)
+
+
+def test_mtx_rejects_garbage():
+    with pytest.raises(ValueError, match="not a MatrixMarket"):
+        read_mtx(io.StringIO("garbage\n1 1 1\n"))
+    with pytest.raises(ValueError, match="coordinate"):
+        read_mtx(io.StringIO("%%MatrixMarket matrix array real general\n"))
+    with pytest.raises(ValueError, match="declared"):
+        read_mtx(io.StringIO(
+            "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1\n"))
+    with pytest.raises(ValueError, match="bounds"):
+        read_mtx(io.StringIO(
+            "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1\n"))
+
+
+def test_mtx_file_roundtrip(tmp_path):
+    a = block_sparse(9, 32, 32, block=4, keep=0.5)
+    path = tmp_path / "bs.mtx"
+    write_mtx(path, a)
+    r = read_mtx(path)
+    nnz = _pattern_equal(a, r)
+    np.testing.assert_allclose(_np(r.vals)[:nnz], _np(a.vals)[:nnz],
+                               atol=1e-6, rtol=0)
+
+
+# ------------------------------------------------------- generators ---
+
+
+@pytest.mark.parametrize("gen", [
+    lambda s: power_law(s, 64, 64, 4.0),
+    lambda s: banded(s, 64, 64, 3, fill=0.7),
+    lambda s: block_sparse(s, 64, 64, block=8, keep=0.3),
+    lambda s: uniform(s, 64, 64, 5),
+    lambda s: uniform_irregular(s, 64, 64, 5),
+])
+def test_generators_seed_deterministic(gen):
+    a, b = gen(42), gen(42)
+    np.testing.assert_array_equal(_np(a.row_ptr), _np(b.row_ptr))
+    np.testing.assert_array_equal(_np(a.col_ind), _np(b.col_ind))
+    np.testing.assert_array_equal(_np(a.vals), _np(b.vals))
+    c = gen(43)
+    assert not (np.array_equal(_np(a.row_ptr), _np(c.row_ptr))
+                and np.array_equal(_np(a.col_ind), _np(c.col_ind)))
+
+
+def test_generator_columns_sorted_unique_in_bounds():
+    for a in (power_law(1, 48, 40, 6.0), block_sparse(2, 48, 40, block=8),
+              banded(3, 48, 40, 4)):
+        rp, ci = _np(a.row_ptr), _np(a.col_ind)
+        assert rp[-1] <= a.nnz_pad
+        for r in range(a.m):
+            cols = ci[rp[r]:rp[r + 1]]
+            assert (np.diff(cols) > 0).all()      # sorted and unique
+            if cols.size:
+                assert 0 <= cols[0] and cols[-1] < a.k
+
+
+# ------------------------------------------------------------ stats ---
+
+
+def test_stats_uniform_regular():
+    s = compute_stats(uniform(1, 32, 64, 8))
+    assert s.d == 8.0 and s.cv == 0.0 and s.gini == pytest.approx(0.0)
+    assert s.max_len == 8 and s.nnz == 32 * 8
+
+
+def test_stats_imbalance_ordering():
+    flat = compute_stats(banded(2, 256, 256, 3))
+    heavy = compute_stats(power_law(2, 256, 256, 4.0, alpha=1.2))
+    assert heavy.gini > flat.gini
+    assert heavy.cv > flat.cv
+    assert 0.0 <= flat.gini < heavy.gini < 1.0
+
+
+def test_stats_empty_matrix():
+    s = compute_stats(uniform(1, 16, 16, 0))
+    assert s.nnz == 0 and s.d == 0.0 and s.cv == 0.0 and s.gini == 0.0
+
+
+# ----------------------------------------------------------- suites ---
+
+
+def test_suite_registry():
+    assert {"mini", "paper", "pruned"} <= set(suite_names())
+    mini = get_suite("mini")
+    assert len(mini) == 3
+    assert len({sp.name for sp in get_suite("paper")}) == \
+        len(get_suite("paper"))
+    with pytest.raises(KeyError, match="unknown suite"):
+        get_suite("nope")
+    with pytest.raises(ValueError, match="duplicate"):
+        register_spec(MatrixSpec(name=mini[0].name, build=mini[0].build))
+
+
+def test_mini_suite_builds_deterministically():
+    for spec in get_suite("mini"):
+        a, b = spec(), spec()
+        np.testing.assert_array_equal(_np(a.row_ptr), _np(b.row_ptr))
+        np.testing.assert_array_equal(_np(a.col_ind), _np(b.col_ind))
+
+
+def test_specs_from_mtx_dir(tmp_path):
+    for i in range(2):
+        write_mtx(tmp_path / f"mat{i}.mtx", uniform(i, 8, 8, 2))
+    (tmp_path / "notes.txt").write_text("ignored")
+    specs = specs_from_mtx_dir(tmp_path)
+    assert [sp.name for sp in specs] == ["mat0", "mat1"]
+    assert all(sp.family == "mtx" for sp in specs)
+    a = specs[0]()
+    assert a.shape == (8, 8)

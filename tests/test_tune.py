@@ -1,0 +1,363 @@
+"""Autotuning subsystem: TuneDB persistence + resolution ladder +
+calibrate edge cases + engine integration.
+
+Acceptance (ISSUE 2): ``engine.get_plan`` with a TuneDB built on this
+backend selects the oracle-faster method on >= 90% of the mini-suite —
+asserted via *recorded* timings (the records below), not live
+benchmarking.  The recorded oracles are chosen to contradict the analytic
+heuristic where possible, so the assertion can only pass if the DB (not
+the fallback) drives the decision.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core import Heuristic, build_plan, calibrate
+from repro.core.plan import pattern_fingerprint
+from repro.engine.cache import PlanCache
+from repro.matrices import compute_stats, get_suite, power_law, uniform
+from repro.tune import (SCHEMA_VERSION, TuneDB, TuneRecord,
+                        class_signature, tune_suite)
+
+
+def _rec(method, merge_us, rowsplit_us, a, **kw):
+    s = compute_stats(a)
+    return TuneRecord(method=method, merge_us=merge_us,
+                      rowsplit_us=rowsplit_us, m=s.m, k=s.k, d=s.d,
+                      cv=s.cv, n=64, **kw)
+
+
+def _mini_db_with_recorded_timings():
+    """TuneDB over the mini suite from recorded (synthetic) timings whose
+    oracle contradicts the paper-threshold heuristic on every matrix."""
+    db = TuneDB(backend="test")
+    oracles = {}
+    for spec in get_suite("mini"):
+        a = spec()
+        d = compute_stats(a).d
+        analytic = Heuristic().choose(a)
+        oracle = "rowsplit" if analytic == "merge" else "merge"
+        merge_us, rowsplit_us = (50.0, 100.0) if oracle == "merge" \
+            else (100.0, 50.0)
+        db.record(pattern_fingerprint(a),
+                  _rec(oracle, merge_us, rowsplit_us, a, name=spec.name))
+        oracles[spec.name] = (a, oracle, analytic, d)
+    return db, oracles
+
+
+# -------------------------------------------------------- persistence ---
+
+
+def test_tunedb_roundtrip(tmp_path):
+    db = TuneDB(backend="test")
+    a = uniform(0, 32, 32, 4)
+    db.record("fp0", _rec("merge", 10.0, 20.0, a, t=16, name="u"))
+    db.record("fp1", _rec("rowsplit", 30.0, 15.0, a, l_pad=7))
+    db.calibrate_threshold()
+    path = tmp_path / "tune.json"
+    db.save(path)
+    back = TuneDB.load(path, backend="test")
+    assert back.as_dict() == db.as_dict()
+    assert back.digest() == db.digest()
+    assert back.lookup_exact("fp1").l_pad == 7
+    assert back.threshold == db.threshold
+
+
+def test_tunedb_schema_version_mismatch(tmp_path):
+    path = tmp_path / "tune.json"
+    raw = {"schema_version": SCHEMA_VERSION + 1, "backend": "test",
+           "entries": {}}
+    path.write_text(json.dumps(raw))
+    with pytest.warns(UserWarning, match="schema version"):
+        db = TuneDB.load(path, backend="test")
+    assert len(db) == 0
+    # analytic-heuristic fallback still functions on the empty DB
+    assert db.choose(uniform(1, 16, 64, 2)) == "merge"
+    with pytest.raises(ValueError, match="schema version"):
+        TuneDB.load(path, backend="test", strict=True)
+
+
+def test_tunedb_corrupt_file_falls_back(tmp_path):
+    path = tmp_path / "tune.json"
+    path.write_text("{this is not json")
+    with pytest.warns(UserWarning, match="corrupt"):
+        db = TuneDB.load(path, backend="test")
+    assert len(db) == 0
+    a = uniform(2, 16, 64, 30)
+    assert db.choose(a) == Heuristic().choose(a) == "rowsplit"
+
+
+def test_tunedb_backend_mismatch(tmp_path):
+    db = TuneDB(backend="tpu:v5e")
+    db.record("fp", _rec("merge", 1.0, 2.0, uniform(0, 8, 8, 2)))
+    path = tmp_path / "tune.json"
+    db.save(path)
+    with pytest.warns(UserWarning, match="backend"):
+        loaded = TuneDB.load(path, backend="cpu:cpu")
+    assert len(loaded) == 0
+    assert len(TuneDB.load(path, backend="tpu:v5e")) == 1
+
+
+def test_tunedb_malformed_entry(tmp_path):
+    path = tmp_path / "tune.json"
+    raw = {"schema_version": SCHEMA_VERSION, "backend": "test",
+           "entries": {"fp": {"not_a_field": 1}}}
+    path.write_text(json.dumps(raw))
+    with pytest.warns(UserWarning, match="malformed"):
+        db = TuneDB.load(path, backend="test")
+    assert len(db) == 0
+
+
+def test_tunedb_missing_file_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        TuneDB.load(tmp_path / "absent.json", backend="test")
+
+
+# -------------------------------------------------- resolution ladder ---
+
+
+def test_resolve_exact_beats_class_beats_threshold():
+    db = TuneDB(backend="test")
+    a = power_law(7, 256, 256, 4.0)
+    twin = power_law(8, 256, 256, 4.0)       # same class, other pattern
+    # Class evidence says rowsplit (from the twin)...
+    db.record(pattern_fingerprint(twin),
+              _rec("rowsplit", 100.0, 50.0, twin))
+    assert db.resolve(a) == ("rowsplit", "class")
+    # ...but an exact record for `a` itself says merge, and wins.
+    db.record(pattern_fingerprint(a), _rec("merge", 50.0, 100.0, a))
+    assert db.resolve(a) == ("merge", "exact")
+    # A pattern in a class nobody tuned falls through to the threshold.
+    far = uniform(9, 16, 2048, 512)
+    method, src = db.resolve(far)
+    assert (method, src) == (None, "miss")
+    assert db.choose(far) == db.heuristic().choose(far)
+
+
+def test_class_majority_vote():
+    db = TuneDB(backend="test")
+    sig = None
+    for seed, (method, mu, ru) in enumerate(
+            [("merge", 10, 20), ("merge", 10, 20), ("rowsplit", 20, 10)]):
+        a = power_law(20 + seed, 256, 256, 4.0)
+        rec = _rec(method, float(mu), float(ru), a)
+        sig = rec.signature
+        db.record(pattern_fingerprint(a), rec)
+    assert db.lookup_class(sig) == "merge"
+
+
+def test_calibrated_threshold_fallback():
+    db = TuneDB(backend="test")
+    # Recorded timings: merge wins up to d=8, rowsplit after — so the
+    # calibrated threshold lands in (8, 16], far from the paper's 9.35
+    # being the point; d=12 would flip under threshold=13 vs 9.35.
+    for seed, (d, mu, ru) in enumerate(
+            [(2, 10, 30), (4, 10, 30), (8, 10, 30), (16, 30, 10),
+             (32, 30, 10)]):
+        a = uniform(seed, 64, 64, d)
+        db.record(pattern_fingerprint(a),
+                  _rec("merge" if mu < ru else "rowsplit",
+                       float(mu), float(ru), a))
+    thr, acc = db.calibrate_threshold()
+    assert 8.0 < thr <= 16.0 and acc == 1.0
+    assert db.heuristic().threshold == thr
+
+
+def test_record_overwrite_updates_class_aggregate():
+    db = TuneDB(backend="test")
+    a = power_law(30, 256, 256, 4.0)
+    rec = _rec("merge", 10.0, 20.0, a)
+    db.record("fp", rec)
+    assert db.lookup_class(rec.signature) == "merge"
+    db.record("fp", _rec("rowsplit", 20.0, 10.0, a))
+    assert db.lookup_class(rec.signature) == "rowsplit"
+    assert len(db) == 1
+
+
+def test_digest_tracks_content():
+    db = TuneDB(backend="test")
+    d0 = db.digest()
+    db.record("fp", _rec("merge", 1.0, 2.0, uniform(0, 8, 8, 2)))
+    d1 = db.digest()
+    assert d0 != d1
+    db.calibrate_threshold()
+    assert db.digest() != d1
+
+
+# ------------------------------------------------ calibrate edge cases ---
+
+
+def test_calibrate_tied_timings():
+    ds = np.array([2.0, 8.0, 32.0])
+    same = np.array([10.0, 10.0, 10.0])
+    thr, acc = calibrate(ds, same, same)
+    assert acc == 1.0 and np.isfinite(thr)
+
+
+def test_calibrate_single_point():
+    thr, acc = calibrate(np.array([5.0]), rowsplit_us=np.array([20.0]),
+                         merge_us=np.array([10.0]))
+    assert acc == 1.0 and thr > 5.0
+    thr, acc = calibrate(np.array([5.0]), rowsplit_us=np.array([10.0]),
+                         merge_us=np.array([20.0]))
+    assert acc == 1.0 and thr <= 5.0
+
+
+def test_calibrate_all_merge_oracle():
+    ds = np.array([2.0, 8.0, 32.0])
+    thr, acc = calibrate(ds, rowsplit_us=np.full(3, 20.0),
+                         merge_us=np.full(3, 10.0))
+    assert acc == 1.0 and thr > ds.max()
+
+
+def test_calibrate_all_rowsplit_oracle():
+    ds = np.array([2.0, 8.0, 32.0])
+    thr, acc = calibrate(ds, rowsplit_us=np.full(3, 10.0),
+                         merge_us=np.full(3, 20.0))
+    assert acc == 1.0 and thr <= ds.min()
+
+
+# ------------------------------------------------- engine integration ---
+
+
+def test_get_plan_selects_oracle_on_mini_suite():
+    """The ISSUE 2 acceptance criterion: >= 90% oracle agreement on the
+    mini-suite through engine.get_plan, from recorded timings."""
+    db, oracles = _mini_db_with_recorded_timings()
+    cache = PlanCache()
+    hits = 0
+    for name, (a, oracle, analytic, d) in oracles.items():
+        plan = cache.get(a, tunedb=db)
+        assert plan.meta.method != analytic or oracle == analytic
+        hits += plan.meta.method == oracle
+    assert hits / len(oracles) >= 0.9
+
+
+def test_exact_hit_replays_tuned_params():
+    a = uniform(40, 32, 48, 6)
+    lmax = int(np.diff(np.asarray(a.row_ptr)).max())
+    db = TuneDB(backend="test")
+    db.record(pattern_fingerprint(a),
+              _rec("rowsplit", 100.0, 50.0, a, l_pad=lmax + 3))
+    plan = build_plan(a, tunedb=db)
+    assert plan.meta.method == "rowsplit"
+    assert plan.meta.l_pad == lmax + 3
+    # explicit arguments still beat the record
+    plan2 = build_plan(a, tunedb=db, l_pad=lmax)
+    assert plan2.meta.l_pad == lmax
+
+
+def test_cache_keys_include_tunedb_digest():
+    """Swapping DBs must never serve a plan resolved against the old one."""
+    a = power_law(41, 128, 128, 4.0)
+    fp = pattern_fingerprint(a)
+    db_merge = TuneDB(backend="test")
+    db_merge.record(fp, _rec("merge", 10.0, 20.0, a))
+    db_rowsplit = TuneDB(backend="test")
+    db_rowsplit.record(fp, _rec("rowsplit", 20.0, 10.0, a))
+    cache = PlanCache()
+    assert cache.get(a, tunedb=db_merge).meta.method == "merge"
+    assert cache.get(a, tunedb=db_rowsplit).meta.method == "rowsplit"
+    assert cache.get(a, tunedb=None).meta.method == Heuristic().choose(a)
+
+
+def test_process_default_tunedb():
+    a = uniform(42, 32, 512, 30)             # analytic: rowsplit (d=30)
+    db = TuneDB(backend="test")
+    db.record(pattern_fingerprint(a), _rec("merge", 10.0, 20.0, a))
+    cache = PlanCache()
+    try:
+        engine.set_tunedb(db)
+        assert engine.current_tunedb() is db
+        assert cache.get(a).meta.method == "merge"
+    finally:
+        engine.set_tunedb(None)
+    assert cache.get(a).meta.method == "rowsplit"
+
+
+def test_sparse_linear_reaches_calibrated_threshold_rung():
+    """A pattern with no exact/class hit must fall through to the DB's
+    *calibrated* threshold, not the paper's 9.35 — including via the
+    SparseLinear path (which must not pin the analytic default)."""
+    import jax.numpy as jnp
+    from repro.models.sparse import SparseLinear
+
+    # prune_to_csr keeps 50% per row -> d = 16 on a 16x32 weight.T ...
+    w = jnp.asarray(np.random.default_rng(0).standard_normal((32, 16)),
+                    jnp.float32)
+    d = 0.5 * 32                              # 16: analytic(9.35)=rowsplit
+    db = TuneDB(backend="test")
+    far = uniform(50, 8, 8, 2)                # some far-away class
+    db.record(pattern_fingerprint(far), _rec("merge", 1.0, 2.0, far))
+    db.threshold = d + 1.0                    # calibrated: d=16 -> merge
+    try:
+        engine.set_tunedb(db)
+        sl = SparseLinear.from_dense(w, 0.5)
+        assert sl.plan.meta.method == "merge"
+    finally:
+        engine.set_tunedb(None)
+    assert SparseLinear.from_dense(w, 0.5).plan.meta.method == "rowsplit"
+
+
+def test_cli_refuses_to_overwrite_mismatched_db(tmp_path):
+    from repro.tune.cli import main
+
+    path = tmp_path / "tune.json"
+    path.write_text("{corrupt")
+    with pytest.raises(SystemExit):
+        main(["--suite", "mini", "--out", str(path)])
+    assert path.read_text() == "{corrupt"    # untouched
+
+
+def test_load_tunedb_corrupt_installs_empty(tmp_path):
+    path = tmp_path / "tune.json"
+    path.write_text("garbage{")
+    try:
+        with pytest.warns(UserWarning, match="corrupt"):
+            db = engine.load_tunedb(path)
+        assert len(db) == 0 and engine.current_tunedb() is db
+        a = uniform(43, 32, 512, 30)
+        assert PlanCache().get(a).meta.method == Heuristic().choose(a)
+    finally:
+        engine.set_tunedb(None)
+
+
+# ----------------------------------------------------- live tuning (S) ---
+
+
+def test_tune_suite_records_and_calibrates():
+    """One real (tiny) tuning pass: records exist, oracle is respected,
+    threshold gets calibrated.  Timings are real but minimal (repeat=1)."""
+    specs = [sp for sp in get_suite("mini")][:1]
+    db = TuneDB(backend="test")
+    logs = []
+    tune_suite(specs, db, n=8, warmup=0, repeat=1, log=logs.append)
+    assert len(db) == 1
+    rec = next(iter(db.entries.values()))
+    assert rec.method == rec.oracle in ("merge", "rowsplit")
+    assert rec.merge_us > 0 and rec.rowsplit_us > 0
+    assert db.threshold is not None
+    assert any("calibrated" in line for line in logs)
+    # idempotent: second pass skips the cached pattern
+    tune_suite(specs, db, n=8, warmup=0, repeat=1, log=logs.append)
+    assert any("cached" in line for line in logs)
+
+
+def test_heuristic_rejects_traced_col_ind():
+    """Satellite: _require_concrete must reject a traced col_ind too,
+    matching core.spmm._is_traced."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import CSR
+
+    a = uniform(44, 8, 8, 2)
+
+    def f(ci):
+        traced = CSR(a.row_ptr, ci, a.vals, a.shape)
+        return jnp.zeros(()) if Heuristic().choose(traced) else jnp.ones(())
+
+    with pytest.raises(ValueError, match="plan-build time"):
+        jax.jit(f)(a.col_ind)
