@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: ci test smoke bench tune tune-smoke
+.PHONY: ci test smoke bench tune tune-smoke bench-batched-smoke
 
 ci: test smoke
 
@@ -29,3 +29,11 @@ tune-smoke:
 	REPRO_CORPUS_SUITE=mini $(PY) -m benchmarks.run corpus \
 	    > artifacts/bench_corpus.csv
 	cat artifacts/bench_corpus.csv
+
+# CI smoke: tiny batch x k sweep through the Pallas kernels in interpret
+# mode (real batched/K-tiled grid dataflow), CSV lands in artifacts/
+bench-batched-smoke:
+	mkdir -p artifacts
+	REPRO_BENCH_BATCHED=smoke $(PY) -m benchmarks.run batched \
+	    > artifacts/bench_batched.csv
+	cat artifacts/bench_batched.csv

@@ -1,0 +1,83 @@
+"""Batched plan execution: one plan, many dense operands (batch × k sweep).
+
+The serving regime behind the engine: a frozen pruned pattern is planned
+once and then multiplies a *stream* of dense right-hand sides.  Three
+timings per (k, batch):
+
+* ``loop``    — the pre-batch regime: one ``execute_plan`` dispatch per
+  matrix (a Python loop over the stack), paying per-call dispatch +
+  framework overhead ``batch`` times,
+* ``batched`` — ``execute_plan(plan, vals, B)`` with ``B (batch, k, n)``:
+  the batch folds into the kernel grid, one dispatch for the whole stack;
+  ``derived`` reports loop/batched, the amortization factor,
+* ``cold``    — the batched path's first call (trace + compile + run),
+  to show what one-time cost the warm numbers amortize.
+
+The k sweep exercises the K-tiled B stream: panels of at most
+``DEFAULT_TK_MAX`` rows hold VMEM bounded as ``d_in`` grows (the
+whole-``k`` panel this replaced scaled linearly with ``d_in`` and could
+not run configs like Qwen2-72B's d_in=29568 at all).
+
+Smoke mode (``REPRO_BENCH_BATCHED=smoke``, used by ``make
+bench-batched-smoke``): a tiny sweep through the *Pallas kernels in
+interpret mode* — exercising the real batched/K-tiled grid dataflow, not
+the XLA twin — with the CSV landing in artifacts/ from CI.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import build_plan, execute_plan
+from .common import make_matrix, timeit
+
+
+def _config():
+    if os.environ.get("REPRO_BENCH_BATCHED", "") == "smoke":
+        return dict(m=32, n=32, ks=(32, 128), batches=(1, 4), npr=(0, 8),
+                    impl="pallas", interpret=True, tk=64,
+                    warmup=1, repeat=2)
+    return dict(m=1024, n=64, ks=(256, 1024, 4096), batches=(1, 4, 16),
+                npr=(0, 16), impl="xla", interpret=None, tk=None,
+                warmup=2, repeat=5)
+
+
+def run(csv=print):
+    cfg = _config()
+    csv("name,us_per_call,derived")
+    for k in cfg["ks"]:
+        a = make_matrix(0, cfg["m"], k, nnz_per_row=cfg["npr"])
+        plan = build_plan(a, method="merge", with_transpose=False)
+        ex = functools.partial(execute_plan, impl=cfg["impl"],
+                               interpret=cfg["interpret"], tk=cfg["tk"])
+        for batch in cfg["batches"]:
+            bs = jax.random.normal(jax.random.PRNGKey(1),
+                                   (batch, k, cfg["n"]), jnp.float32)
+            # Fresh closures per point so "cold" really compiles.
+            one = jax.jit(lambda v, b2: ex(plan, v, b2))
+            many = jax.jit(lambda v, b3: ex(plan, v, b3))
+
+            t0 = time.perf_counter()
+            jax.block_until_ready(many(a.vals, bs))
+            cold = (time.perf_counter() - t0) * 1e6
+            warm = timeit(many, a.vals, bs, warmup=cfg["warmup"],
+                          repeat=cfg["repeat"])
+
+            def loop(v, b3):
+                return [one(v, b3[i]) for i in range(b3.shape[0])]
+
+            t_loop = timeit(loop, a.vals, bs, warmup=cfg["warmup"],
+                            repeat=cfg["repeat"])
+            name = f"batched_k{k}_b{batch}"
+            csv(f"{name}_cold,{cold:.1f},compile+run")
+            csv(f"{name}_batched,{warm:.1f},"
+                f"{t_loop / warm:.2f}x_vs_loop")
+            csv(f"{name}_loop,{t_loop:.1f},{batch}_dispatches")
+
+
+if __name__ == "__main__":
+    run()

@@ -10,10 +10,11 @@ import sys
 
 
 def main() -> None:
-    from . import (bench_corpus, bench_fig1_imbalance, bench_fig4_aspect,
-                   bench_fig5_rows, bench_fig6_heuristic, bench_fig7_density,
-                   bench_plan_reuse, bench_table1_analysis,
-                   bench_train_step, bench_moe_balance)
+    from . import (bench_batched, bench_corpus, bench_fig1_imbalance,
+                   bench_fig4_aspect, bench_fig5_rows, bench_fig6_heuristic,
+                   bench_fig7_density, bench_plan_reuse,
+                   bench_table1_analysis, bench_train_step,
+                   bench_moe_balance)
     mods = [
         ("fig1", bench_fig1_imbalance),
         ("fig4", bench_fig4_aspect),
@@ -23,6 +24,7 @@ def main() -> None:
         ("table1", bench_table1_analysis),
         ("moe", bench_moe_balance),
         ("plan", bench_plan_reuse),
+        ("batched", bench_batched),
         ("train", bench_train_step),
         ("corpus", bench_corpus),
     ]

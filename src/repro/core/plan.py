@@ -169,9 +169,23 @@ def resolve_static(a: CSR, *, method: str = "auto",
         method = heuristic.choose(a)
     if method not in ("merge", "rowsplit"):
         raise ValueError(f"unknown SpMM method: {method!r}")
-    if method == "rowsplit" and l_pad is None:
+    if method == "rowsplit":
         lengths = np.diff(np.asarray(a.row_ptr))
-        l_pad = max(int(lengths.max()) if lengths.size else 1, 1)
+        max_len = int(lengths.max()) if lengths.size else 0
+        if l_pad is None:
+            l_pad = max(max_len, 1)
+        elif l_pad < max_len:
+            # An undersized pad would make plan_rowsplit_structure's ELL
+            # mask silently truncate long rows — wrong C, no error.  The
+            # pattern is concrete here, so validate at the single choke
+            # point every plan request (user kwargs, TuneDB replays, the
+            # engine cache) funnels through.
+            raise ValueError(
+                f"l_pad={l_pad} is smaller than the pattern's longest row "
+                f"({max_len} nonzeroes): the row-split ELL layout would "
+                "silently drop nonzeroes and return a wrong C. Pass "
+                f"l_pad >= {max_len}, or omit l_pad to derive it from the "
+                "pattern.")
     if method == "merge":
         l_pad = None
     return method, t, tl, l_pad

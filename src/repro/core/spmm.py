@@ -1,5 +1,5 @@
 """Public SpMM API: the paper's multi-algorithm with heuristic dispatch,
-now plan-once/execute-many and differentiable.
+now plan-once/execute-many, batched, and differentiable.
 
     C = spmm(A, B)                  # auto: paper §5.4 heuristic
     C = spmm(A, B, method="merge")  # force merge-based  (paper §4.2)
@@ -8,6 +8,8 @@ now plan-once/execute-many and differentiable.
     plan = repro.engine.get_plan(A)          # once per sparsity pattern
     C = spmm(A, B, plan=plan)                # jit-safe, never replans
     C = execute_plan(plan, A.vals, B)        # the explicit-plan core
+    C = execute_plan(plan, A.vals, Bs)       # Bs (batch, k, n): one plan,
+                                             # many problems, one dispatch
 
 With a concrete (non-traced) CSR, ``spmm`` routes through the engine's
 plan cache automatically.  Either way execution is differentiable via
@@ -15,6 +17,15 @@ plan cache automatically.  Either way execution is differentiable via
 transpose (CSC-view) merge plan — equal-nonzero balanced, like the forward
 — and ``dvals`` is a sampled-dense-dense (gather-dot) kernel over the
 pattern (``repro.kernels.sddmm``).
+
+Batching is first-class in two equivalent forms: pass ``B`` with leading
+batch dims (``(..., k, n)``, folded into the kernels' batch grid axis) or
+``jax.vmap`` the 2-D call — the custom-VJP's forward/backward bodies call
+the ``custom_vmap``-wrapped ops (``repro.kernels.ops.*_op``), whose
+explicit vmap rule rewrites a vmapped axis onto that same native batch
+path.  Values are shared across the batch (one frozen pattern, one value
+vector, many dense operands — the serving regime), so the batched VJP
+reduces the values-cotangent over the batch dims.
 """
 from __future__ import annotations
 
@@ -45,12 +56,19 @@ def _is_traced(a: CSR) -> bool:
 # --------------------------------------------------- plan execution core ---
 
 
-def _forward(meta: PlanMeta, fwd: dict, vals, b, interpret, impl):
+def _forward(meta: PlanMeta, fwd: dict, vals, b, interpret, impl, tk, *,
+             vmappable: bool):
     ops = _ops()
     if meta.method == "merge":
-        return ops.merge_execute(fwd, vals, b, m=meta.m,
+        if vmappable:
+            return ops.merge_execute_op(meta.m, tk, interpret, impl)(
+                fwd, vals, b)
+        return ops.merge_execute(fwd, vals, b, m=meta.m, tk=tk,
                                  interpret=interpret, impl=impl)
-    return ops.rowsplit_execute(fwd, vals, b, m=meta.m, tl=meta.tl,
+    if vmappable:
+        return ops.rowsplit_execute_op(meta.m, meta.tl, tk, interpret, impl)(
+            fwd, vals, b)
+    return ops.rowsplit_execute(fwd, vals, b, m=meta.m, tl=meta.tl, tk=tk,
                                 interpret=interpret, impl=impl)
 
 
@@ -60,28 +78,35 @@ def _int_zeros(tree):
         lambda x: np.zeros(x.shape, jax.dtypes.float0), tree)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
-def _execute_vjp(meta, interpret, impl, fwd, bwd, vals, b):
-    return _forward(meta, fwd, vals, b, interpret, impl)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _execute_vjp(meta, interpret, impl, tk, fwd, bwd, vals, b):
+    # The fwd/bwd bodies call the custom_vmap-wrapped ops: JAX vmaps these
+    # bodies (it never differentiates them), so a vmapped batch axis lands
+    # on the kernels' native batch grid instead of tracing into pallas_call.
+    return _forward(meta, fwd, vals, b, interpret, impl, tk, vmappable=True)
 
 
-def _execute_vjp_fwd(meta, interpret, impl, fwd, bwd, vals, b):
-    out = _forward(meta, fwd, vals, b, interpret, impl)
+def _execute_vjp_fwd(meta, interpret, impl, tk, fwd, bwd, vals, b):
+    out = _forward(meta, fwd, vals, b, interpret, impl, tk, vmappable=True)
     return out, (fwd, bwd, vals, b)
 
 
-def _execute_vjp_bwd(meta, interpret, impl, res, dc):
+def _execute_vjp_bwd(meta, interpret, impl, tk, res, dc):
     fwd, bwd, vals, b = res
     ops = _ops()
     # dB = Aᵀ @ dC through the transpose merge plan: the CSC view gets the
-    # same equal-nonzero balancing as the forward pass.
-    db = ops.merge_execute(bwd, vals, dc, m=meta.k, interpret=interpret,
-                           impl=impl).astype(b.dtype)
-    # dvals = (dC · Bᵀ) sampled at the pattern (gather-dot SDDMM).
-    dvals = ops.sddmm(fwd["nz_rows"], fwd["nz_cols"], fwd["nz_valid"],
-                      dc, b, interpret=interpret,
-                      impl=impl).astype(vals.dtype)
-    return _int_zeros(fwd), _int_zeros(bwd), dvals, db
+    # same equal-nonzero balancing as the forward pass (batched like it).
+    db = ops.merge_execute_op(meta.k, tk, interpret, impl)(
+        bwd, vals, dc).astype(b.dtype)
+    # dvals = (dC · Bᵀ) sampled at the pattern (gather-dot SDDMM), reduced
+    # over any explicit batch dims — the values are shared across the batch.
+    # (Under vmap the axis is implicit and JAX itself sums the cotangent
+    # for the unbatched values primal.)
+    dvals = ops.sddmm_op(interpret, impl)(
+        fwd["nz_rows"], fwd["nz_cols"], fwd["nz_valid"], dc, b)
+    if dvals.ndim > 1:
+        dvals = dvals.sum(axis=tuple(range(dvals.ndim - 1)))
+    return (_int_zeros(fwd), _int_zeros(bwd), dvals.astype(vals.dtype), db)
 
 
 _execute_vjp.defvjp(_execute_vjp_fwd, _execute_vjp_bwd)
@@ -89,12 +114,18 @@ _execute_vjp.defvjp(_execute_vjp_fwd, _execute_vjp_bwd)
 
 def execute_plan(plan: SpmmPlan, vals: jax.Array, b: jax.Array, *,
                  interpret: bool | None = None,
-                 impl: str = "pallas") -> jax.Array:
+                 impl: str = "pallas", tk: int | None = None) -> jax.Array:
     """Execute a prebuilt plan: C = A @ B with A's values given per call.
 
     Trace-safe (every static decision was captured at plan build) and
     differentiable in ``vals`` and ``b`` when the plan carries its
     transpose (``build_plan(..., with_transpose=True)``, the default).
+
+    ``b`` may carry leading batch dims — ``(..., k, n) → (..., m, n)`` runs
+    the whole stack through one kernel dispatch with shared values, and
+    ``jax.vmap`` over the 2-D form lowers to the same batched path.  ``tk``
+    caps the K-tile of the streamed B panel (None: whole ``k`` up to
+    ``kernels.merge_spmm.DEFAULT_TK_MAX`` — VMEM-bounded at any ``d_in``).
     """
     # Static shape guards: gathers clamp out-of-bounds indices silently, so
     # a stale plan would otherwise produce garbage instead of an error.
@@ -103,29 +134,58 @@ def execute_plan(plan: SpmmPlan, vals: jax.Array, b: jax.Array, *,
             f"plan expects vals of shape ({plan.meta.nnz_pad},) for pattern "
             f"{plan.meta.shape}, got {vals.shape} — was the plan built for "
             "a different sparsity pattern?")
-    if b.ndim != 2 or b.shape[0] != plan.meta.k:
+    if b.ndim < 2 or b.shape[-2] != plan.meta.k:
         raise ValueError(
-            f"plan expects B of shape ({plan.meta.k}, n) for pattern "
+            f"plan expects B of shape (..., {plan.meta.k}, n) for pattern "
             f"{plan.meta.shape}, got {b.shape}")
     if plan.bwd is None:
-        return _forward(plan.meta, plan.fwd, vals, b, interpret, impl)
-    return _execute_vjp(plan.meta, interpret, impl, plan.fwd, plan.bwd,
+        # Forward-only plan: plain ops (keeps ordinary XLA autodiff for
+        # impl="xla" callers; build with a transpose for vmap support).
+        return _forward(plan.meta, plan.fwd, vals, b, interpret, impl, tk,
+                        vmappable=False)
+    return _execute_vjp(plan.meta, interpret, impl, tk, plan.fwd, plan.bwd,
                         vals, b)
 
 
 # ------------------------------------------------------------ public API ---
 
 
+def _check_plan_overrides(plan: SpmmPlan, method: str, t, l_pad) -> None:
+    """Raise on explicit kwargs that contradict the supplied plan's statics.
+
+    A plan's method/t/l_pad were fixed at build time; silently ignoring a
+    conflicting override would execute something other than what the call
+    asked for (ISSUE 3: the silent-wrong-answer paths).
+    """
+    meta = plan.meta
+    conflicts = []
+    if method != "auto" and method != meta.method:
+        conflicts.append(f"method={method!r} (plan: {meta.method!r})")
+    if t is not None and t != meta.t:
+        conflicts.append(f"t={t} (plan: {meta.t})")
+    if l_pad is not None and l_pad != meta.l_pad:
+        conflicts.append(f"l_pad={l_pad} (plan: {meta.l_pad})")
+    if conflicts:
+        raise ValueError(
+            "spmm() overrides conflict with the supplied plan's static "
+            "decisions: " + "; ".join(conflicts) + ". Rebuild the plan with "
+            "these parameters (repro.core.build_plan / "
+            "repro.engine.get_plan) or drop the overrides.")
+
+
 def spmm(a: CSR, b: jax.Array, *, method: str = "auto",
-         l_pad: int | None = None, t: int = 16,
+         l_pad: int | None = None, t: int | None = None,
          heuristic: Heuristic | None = None,
          interpret: bool | None = None, impl: str = "pallas",
+         tk: int | None = None,
          plan: SpmmPlan | str | None = None) -> jax.Array:
-    """Sparse(CSR) × dense = dense.  ``b`` is (k, n); returns (m, n).
+    """Sparse(CSR) × dense = dense.  ``b`` is (..., k, n); returns (..., m, n).
 
     Dispatch on ``plan``:
 
     * an ``SpmmPlan`` — execute it (jit-safe; ``a`` supplies only values).
+      Explicit ``method``/``t``/``l_pad`` overrides must agree with the
+      plan's statics — conflicts raise instead of being silently ignored.
     * ``None`` (default) with concrete ``a`` — look up / build the
       pattern's plan in the engine cache, then execute.  Repeated calls
       with the same pattern (any values) never replan.
@@ -135,15 +195,23 @@ def spmm(a: CSR, b: jax.Array, *, method: str = "auto",
       ``method`` under trace — the heuristic is a host-side decision.
     """
     if isinstance(plan, SpmmPlan):
-        return execute_plan(plan, a.vals, b, interpret=interpret, impl=impl)
+        _check_plan_overrides(plan, method, t, l_pad)
+        return execute_plan(plan, a.vals, b, interpret=interpret, impl=impl,
+                            tk=tk)
     if plan is None and not _is_traced(a):
         from repro.engine import get_plan
         built = get_plan(a, method=method, t=t, l_pad=l_pad,
                          heuristic=heuristic)
-        return execute_plan(built, a.vals, b, interpret=interpret, impl=impl)
+        return execute_plan(built, a.vals, b, interpret=interpret, impl=impl,
+                            tk=tk)
     if plan not in (None, "inline"):
         raise ValueError(f"plan must be an SpmmPlan, None, or 'inline'; "
                          f"got {plan!r}")
+    if b.ndim != 2:
+        raise ValueError(
+            "the inline (plan-per-call) spmm path takes a 2-D B; batched "
+            f"B {b.shape} needs a prebuilt plan — repro.engine.get_plan(a) "
+            "— whose execution folds the batch into the kernel grid.")
     if method == "auto" and not _is_traced(a):
         method = (heuristic or _DEFAULT_HEURISTIC).choose(a)
     if method == "auto":
@@ -153,8 +221,9 @@ def spmm(a: CSR, b: jax.Array, *, method: str = "auto",
             "(repro.engine.get_plan) — the kernel choice is captured "
             "statically at plan-build time — or pass method= explicitly.")
     if method == "merge":
-        return _ops().merge_spmm(a, b, t=t, interpret=interpret, impl=impl)
+        return _ops().merge_spmm(a, b, t=t, tk=tk, interpret=interpret,
+                                 impl=impl)
     if method == "rowsplit":
-        return _ops().rowsplit_spmm(a, b, l_pad=l_pad, interpret=interpret,
-                                    impl=impl)
+        return _ops().rowsplit_spmm(a, b, l_pad=l_pad, tk=tk,
+                                    interpret=interpret, impl=impl)
     raise ValueError(f"unknown SpMM method: {method!r}")

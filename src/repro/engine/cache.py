@@ -67,6 +67,8 @@ class CacheStats:
     misses: int = 0
     evictions: int = 0
     size: int = 0
+    aliases: int = 0
+    alias_evictions: int = 0
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -75,14 +77,32 @@ class CacheStats:
 class PlanCache:
     """Thread-safe LRU over ``build_plan`` results."""
 
-    def __init__(self, maxsize: int = DEFAULT_MAXSIZE):
+    def __init__(self, maxsize: int = DEFAULT_MAXSIZE,
+                 alias_maxsize: int | None = None):
         self.maxsize = maxsize
+        # The alias map is its own (cheap, key-only) LRU: raw request keys
+        # embed per-request objects' attributes (heuristic thresholds,
+        # TuneDB digests), so a long-lived server cycling those would
+        # otherwise grow it without bound even while the plan LRU stays
+        # capped (ISSUE 3 satellite).  A few aliases per plan is the
+        # steady state; 4x leaves room for method/param spellings.
+        self.alias_maxsize = (4 * maxsize if alias_maxsize is None
+                              else alias_maxsize)
         self._entries: OrderedDict[tuple, SpmmPlan] = OrderedDict()
         # raw (unresolved) request key -> canonical key, so a hit on a
         # repeated request skips resolve_static's host sync entirely.
-        self._aliases: dict[tuple, tuple] = {}
+        self._aliases: OrderedDict[tuple, tuple] = OrderedDict()
         self._lock = threading.Lock()
         self._stats = CacheStats()
+
+    def _alias_insert(self, raw: tuple, key: tuple) -> None:
+        # Callers hold self._lock.
+        self._aliases[raw] = key
+        self._aliases.move_to_end(raw)
+        while len(self._aliases) > self.alias_maxsize:
+            self._aliases.popitem(last=False)
+            self._stats.alias_evictions += 1
+        self._stats.aliases = len(self._aliases)
 
     def get(self, a: CSR, *, method: str = "auto",
             heuristic: Heuristic | None = None, t: int | None = None,
@@ -117,6 +137,7 @@ class PlanCache:
             plan = self._entries.get(canonical) if canonical else None
             if plan is not None:
                 self._entries.move_to_end(canonical)
+                self._aliases.move_to_end(raw)
                 self._stats.hits += 1
                 return plan
         method, t, tl, l_pad = resolve_static(
@@ -128,7 +149,7 @@ class PlanCache:
             plan = self._entries.get(key)
             if plan is not None:
                 self._entries.move_to_end(key)
-                self._aliases[raw] = key
+                self._alias_insert(raw, key)
                 self._stats.hits += 1
                 return plan
         # Build outside the lock — plans are pure functions of the key.
@@ -138,13 +159,14 @@ class PlanCache:
             self._stats.misses += 1
             self._entries[key] = plan
             self._entries.move_to_end(key)
-            self._aliases[raw] = key
+            self._alias_insert(raw, key)
             while len(self._entries) > self.maxsize:
                 evicted, _ = self._entries.popitem(last=False)
-                self._aliases = {r: c for r, c in self._aliases.items()
-                                 if c != evicted}
+                self._aliases = OrderedDict(
+                    (r, c) for r, c in self._aliases.items() if c != evicted)
                 self._stats.evictions += 1
             self._stats.size = len(self._entries)
+            self._stats.aliases = len(self._aliases)
         return plan
 
     # ------------------------------------------------------ maintenance ---

@@ -11,13 +11,27 @@ TPU adaptation of the paper's two-phase decomposition:
   on a core, so a revisited output block simply stays resident in VMEM and
   accumulates, and the fix-up kernel disappears).
 
-* **Phase 2** (``_merge_kernel``): grid ``(n_tiles, chunks)``.  Each step
-  gathers the ``T`` B rows named by the chunk's column indices from a
-  VMEM-resident ``(k, TN)`` panel of B — the TPU analogue of the paper's
-  row-major coalesced loads (lane-contiguous row slices) — multiplies by the
-  chunk's values, and scatter-adds into the ``(TM, TN)`` C tile through a
-  one-hot ``(T, TM)`` matmul on the MXU.  The chunk stream is ordered by row
-  tile, so C tiles are revisited consecutively and flushed exactly once.
+* **Phase 2** (``_merge_kernel``): grid ``(batch, n_tiles, chunks,
+  k_tiles)``.  Each step gathers the ``T`` B rows named by the chunk's
+  column indices from a VMEM-resident ``(TK, TN)`` panel of B — the TPU
+  analogue of the paper's row-major coalesced loads (lane-contiguous row
+  slices) — multiplies by the chunk's values, and scatter-adds into the
+  ``(TM, TN)`` C tile through a one-hot ``(T, TM)`` matmul on the MXU.  The
+  chunk stream is ordered by row tile, so C tiles are revisited
+  consecutively and flushed exactly once.
+
+Two grid axes beyond the paper's decomposition:
+
+* **batch** (leading): one plan executes a whole stack of dense operands
+  ``B (batch, k, n)`` in a single dispatch — the plan-once/execute-many
+  serving regime with the batch folded into the grid instead of a Python
+  loop of launches.
+* **k_tiles** (innermost): the dense operand streams through VMEM in
+  ``(TK, TN)`` panels with the accumulator carried across tiles, so VMEM
+  stays bounded at any ``k`` (``d_in``) instead of pinning the whole
+  ``(k, TN)`` panel.  Column indices outside the resident panel are masked
+  per tile; when ``k <= DEFAULT_TK_MAX`` a single tile covers all of ``k``
+  and the dataflow (and bit pattern) is exactly the unsplit kernel's.
 
 Latency hiding: the paper's ILP (32 independent loads per thread) becomes
 Mosaic's double-buffered DMA pipeline across grid steps plus ``T``
@@ -39,6 +53,27 @@ from repro.core.csr import CSR, rows_from_row_ptr
 TN = 128
 TM = 8
 DEFAULT_T = 16
+# K-tile cap: the B panel streams through VMEM in (TK, TN) blocks.  At the
+# default, a float32 panel is 1024*128*4 = 512 KiB per buffer (~1 MiB double
+# buffered) — bounded regardless of d_in, where the old whole-(k, TN) panel
+# hit 4 MiB at k=8k and overflowed VMEM entirely at Qwen2-72B's d_in=29568.
+DEFAULT_TK_MAX = 1024
+
+
+def resolve_tk(k: int, tk: int | None, *, sub: int = 8) -> tuple[int, int]:
+    """Resolve the K-tile size: returns ``(tk, n_k)``.
+
+    ``tk`` is clamped to a sublane multiple and to the (padded) ``k``;
+    ``None`` picks the whole of ``k`` up to ``DEFAULT_TK_MAX``, so small
+    operands keep the single-panel dataflow bit-for-bit while large ``k``
+    streams in bounded panels.
+    """
+    k_pad = max(sub, sub * (-(-k // sub)))
+    if tk is None:
+        tk = min(k_pad, DEFAULT_TK_MAX)
+    else:
+        tk = min(max(sub, sub * (-(-tk // sub))), k_pad)
+    return tk, -(-k_pad // tk)
 
 
 def plan_merge_structure(a: CSR, *, t: int = DEFAULT_T, tm: int = TM):
@@ -61,6 +96,17 @@ def plan_merge_structure(a: CSR, *, t: int = DEFAULT_T, tm: int = TM):
     """
     m = a.m
     nnz_pad = a.nnz_pad
+    if m == 0:
+        # Degenerate 0-row pattern: no output tiles, no valid nonzeroes.
+        # Execution early-outs before touching these (ops.merge_execute),
+        # but the structure must still be constructible with static shapes.
+        n_chunks = max(1, -(-nnz_pad // t))
+        zeros = jnp.zeros((n_chunks, t), jnp.int32)
+        edge = jnp.zeros((n_chunks,), jnp.int32)
+        return dict(cols=zeros, lrow=zeros,
+                    slot_nz=jnp.full((n_chunks, t), nnz_pad, jnp.int32),
+                    tile=edge, first=edge.at[0].set(1),
+                    last=edge.at[-1].set(1))
     n_tiles_m = -(-m // tm)
     n_chunks = -(-nnz_pad // t) + n_tiles_m
 
@@ -130,18 +176,26 @@ def plan_merge(a: CSR, *, t: int = DEFAULT_T, tm: int = TM):
 
 
 def _merge_kernel(tile_ref, first_ref, last_ref, cols_ref, vals_ref, lrow_ref,
-                  b_ref, o_ref, acc_ref, *, tm: int, acc_dtype):
-    c = pl.program_id(1)
+                  b_ref, o_ref, acc_ref, *, tm: int, tk: int, n_k: int,
+                  acc_dtype):
+    c = pl.program_id(2)
+    kk = pl.program_id(3)
 
-    @pl.when(first_ref[c] == 1)
+    @pl.when((first_ref[c] == 1) & (kk == 0))
     def _zero():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     cols = cols_ref[0]                                   # (t,)
-    vals = vals_ref[0].astype(acc_dtype)                 # (t,)
     lrow = lrow_ref[0]                                   # (t,)
+    # Only the columns whose B row lives in the resident (TK, TN) panel
+    # contribute on this k step; the rest are masked and picked up by the
+    # accumulator carry when their panel streams in.
+    local = cols - kk * tk
+    in_panel = (local >= 0) & (local < tk)
+    vals = jnp.where(in_panel, vals_ref[0], 0).astype(acc_dtype)  # (t,)
     # Row-major coalesced gather of B rows (lane-contiguous slices).
-    bgat = jnp.take(b_ref[...], cols, axis=0).astype(acc_dtype)   # (t, TN)
+    bgat = jnp.take(b_ref[0], jnp.where(in_panel, local, 0),
+                    axis=0).astype(acc_dtype)             # (t, TN)
     prod = vals[:, None] * bgat                           # (t, TN)
     # Scatter-add into the TM-row tile via a one-hot matmul (MXU).
     t = lrow.shape[0]
@@ -150,37 +204,51 @@ def _merge_kernel(tile_ref, first_ref, last_ref, cols_ref, vals_ref, lrow_ref,
     acc_ref[...] += jnp.dot(onehot.astype(acc_dtype).T, prod,
                             preferred_element_type=acc_dtype)
 
-    @pl.when(last_ref[c] == 1)
+    @pl.when((last_ref[c] == 1) & (kk == n_k - 1))
     def _flush():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
 
 
 def merge_spmm_pallas(plan: dict, b: jax.Array, m_pad: int, *,
-                      tm: int = TM, tn: int = TN,
+                      tm: int = TM, tn: int = TN, tk: int | None = None,
                       interpret: bool = False) -> jax.Array:
-    """Phase 2. ``b`` must be (k, n) with n % tn == 0, m_pad % tm == 0."""
-    k, n = b.shape
+    """Phase 2. ``b`` is (batch, k, n), n % tn == 0, m_pad % tm == 0.
+
+    Returns (batch, m_pad, n): the batch rides the leading grid axis (one
+    dispatch for the whole stack) and B streams in (TK, TN) VMEM panels.
+    """
+    batch, k, n = b.shape
     n_chunks, t = plan["cols"].shape
+    tk, n_k = resolve_tk(k, tk)
+    kpad = n_k * tk - k
+    if kpad:
+        b = jnp.pad(b, ((0, 0), (0, kpad), (0, 0)))
     acc_dtype = jnp.float32
-    grid = (n // tn, n_chunks)
+    grid = (batch, n // tn, n_chunks, n_k)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, t), lambda j, c, tile, first, last: (c, 0)),
-            pl.BlockSpec((1, t), lambda j, c, tile, first, last: (c, 0)),
-            pl.BlockSpec((1, t), lambda j, c, tile, first, last: (c, 0)),
-            pl.BlockSpec((k, tn), lambda j, c, tile, first, last: (0, j)),
+            pl.BlockSpec((1, t), lambda bb, j, c, kk, tile, first, last:
+                         (c, 0)),
+            pl.BlockSpec((1, t), lambda bb, j, c, kk, tile, first, last:
+                         (c, 0)),
+            pl.BlockSpec((1, t), lambda bb, j, c, kk, tile, first, last:
+                         (c, 0)),
+            pl.BlockSpec((1, tk, tn), lambda bb, j, c, kk, tile, first, last:
+                         (bb, kk, j)),
         ],
         out_specs=pl.BlockSpec(
-            (tm, tn), lambda j, c, tile, first, last: (tile[c], j)),
+            (1, tm, tn), lambda bb, j, c, kk, tile, first, last:
+            (bb, tile[c], j)),
         scratch_shapes=[pltpu.VMEM((tm, tn), acc_dtype)],
     )
-    kernel = functools.partial(_merge_kernel, tm=tm, acc_dtype=acc_dtype)
+    kernel = functools.partial(_merge_kernel, tm=tm, tk=tk, n_k=n_k,
+                               acc_dtype=acc_dtype)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((m_pad, n), b.dtype),
+        out_shape=jax.ShapeDtypeStruct((batch, m_pad, n), b.dtype),
         interpret=interpret,
     )(plan["tile"], plan["first"], plan["last"],
       plan["cols"], plan["vals"], plan["lrow"], b)

@@ -4,6 +4,17 @@ Every op handles padding to tile multiples, backend selection (interpret
 mode on CPU — the kernel body runs in Python for bit-level validation
 against ref.py; compiled Mosaic on real TPUs), and exposes an XLA fallback
 (``impl="xla"``) built from the same dataflow for A/B benchmarking.
+
+The plan-execute ops (``merge_execute``/``rowsplit_execute``/``sddmm``)
+accept dense operands with arbitrary leading batch dims — ``b (..., k, n)``
+folds into the kernels' leading batch grid axis, one dispatch for the whole
+stack.  ``*_op``/``sddmm_op`` return the same ops wrapped with an explicit
+``jax.custom_batching.custom_vmap`` rule: a vmapped batch axis becomes the
+native stacked axis instead of tracing into ``pallas_call``.  These wrapped
+forms are what ``repro.core.spmm``'s custom-VJP forward/backward bodies
+call, which is what makes ``jax.vmap(execute_plan)`` (and vmap-of-grad /
+grad-of-vmap) first-class; the raw ops stay plain so forward-only XLA
+callers keep ordinary autodiff.
 """
 from __future__ import annotations
 
@@ -36,10 +47,17 @@ def _pad_axis(x, mult, axis):
     return jnp.pad(x, widths)
 
 
-@functools.partial(jax.jit, static_argnames=("t", "interpret", "impl"))
-def merge_spmm(a: CSR, b: jax.Array, *, t: int = _merge.DEFAULT_T,
-               interpret: bool | None = None, impl: str = "pallas"):
+def _lead_fold(x):
+    """Fold leading batch dims of (..., r, n) into one axis: (nb, r, n)."""
+    return x.reshape((-1,) + x.shape[-2:])
+
+
+@functools.partial(jax.jit, static_argnames=("t", "tk", "interpret", "impl"))
+def merge_spmm(a: CSR, b: jax.Array, *, t: int | None = None,
+               tk: int | None = None, interpret: bool | None = None,
+               impl: str = "pallas"):
     """Merge-based SpMM: C = A @ B with equal-nonzero load balancing."""
+    t = _merge.DEFAULT_T if t is None else t
     if impl == "xla":
         return _ref.spmm_merge_ref(a, b, t=t)
     if interpret is None:
@@ -48,20 +66,28 @@ def merge_spmm(a: CSR, b: jax.Array, *, t: int = _merge.DEFAULT_T,
     b2 = _pad_axis(b, _merge.TN, 1)
     plan = _merge.plan_merge(a, t=t)
     m_pad = _merge.TM * (-(-m // _merge.TM))
-    out = _merge.merge_spmm_pallas(plan, b2, m_pad, interpret=interpret)
-    return out[:m, : b.shape[1]]
+    out = _merge.merge_spmm_pallas(plan, b2[None], m_pad, tk=tk,
+                                   interpret=interpret)
+    return out[0, :m, : b.shape[1]]
 
 
 def rowsplit_spmm(a: CSR, b: jax.Array, *, l_pad: int | None = None,
-                  tl: int = _rowsplit.DEFAULT_TL,
+                  tl: int = _rowsplit.DEFAULT_TL, tk: int | None = None,
                   interpret: bool | None = None, impl: str = "pallas"):
     """Row-split SpMM: C = A @ B, one row tile per grid step (ELL-padded).
 
     ``l_pad``: static max row length.  Outside jit it is derived from the
-    concrete row_ptr; under tracing it must be supplied.
+    concrete row_ptr; under tracing it must be supplied.  A supplied
+    ``l_pad`` smaller than the true max row length would silently truncate
+    rows, so it is validated whenever the pattern is concrete.
     """
+    traced = isinstance(a.row_ptr, jax.core.Tracer)
+    max_len = None
+    if not traced:
+        lengths = np.diff(np.asarray(a.row_ptr))
+        max_len = int(lengths.max()) if lengths.size else 0
     if l_pad is None:
-        if isinstance(a.row_ptr, jax.core.Tracer):
+        if traced:
             raise ValueError(
                 "rowsplit_spmm under trace requires a static l_pad (the max "
                 "row length is data-dependent and cannot be derived from a "
@@ -70,16 +96,21 @@ def rowsplit_spmm(a: CSR, b: jax.Array, *, l_pad: int | None = None,
                 "repro.core.plan.build_plan(a) — which captures the static "
                 "l_pad once per sparsity pattern and can be passed through "
                 "jitted code freely.")
-        l_pad = int(np.max(np.diff(np.asarray(a.row_ptr)))) if a.m else 1
-        l_pad = max(l_pad, 1)
-    return _rowsplit_spmm_jit(a, b, l_pad=l_pad, tl=tl, interpret=interpret,
-                              impl=impl)
+        l_pad = max(max_len, 1)
+    elif max_len is not None and l_pad < max_len:
+        raise ValueError(
+            f"l_pad={l_pad} is smaller than the pattern's longest row "
+            f"({max_len} nonzeroes): the ELL layout would silently drop "
+            f"nonzeroes and return a wrong C. Pass l_pad >= {max_len}, or "
+            "omit l_pad to derive it from the pattern.")
+    return _rowsplit_spmm_jit(a, b, l_pad=l_pad, tl=tl, tk=tk,
+                              interpret=interpret, impl=impl)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("l_pad", "tl", "interpret", "impl"))
+                   static_argnames=("l_pad", "tl", "tk", "interpret", "impl"))
 def _rowsplit_spmm_jit(a: CSR, b: jax.Array, *, l_pad: int,
-                       tl: int = _rowsplit.DEFAULT_TL,
+                       tl: int = _rowsplit.DEFAULT_TL, tk: int | None = None,
                        interpret: bool | None = None, impl: str = "pallas"):
     if impl == "xla":
         return _ref.spmm_rowsplit_ref(a, b, tl=tl, l_pad=l_pad)
@@ -87,53 +118,70 @@ def _rowsplit_spmm_jit(a: CSR, b: jax.Array, *, l_pad: int,
         interpret = _interpret_default()
     b2 = _pad_axis(b, _rowsplit.TN, 1)
     plan = _rowsplit.plan_rowsplit(a, l_pad=l_pad, tl=tl)
-    out = _rowsplit.rowsplit_spmm_pallas(plan, b2, tl=tl, interpret=interpret)
-    return out[: a.m, : b.shape[1]]
+    out = _rowsplit.rowsplit_spmm_pallas(plan, b2[None], tl=tl, tk=tk,
+                                         interpret=interpret)
+    return out[0, : a.m, : b.shape[1]]
 
 
-@functools.partial(jax.jit, static_argnames=("m", "interpret", "impl"))
+@functools.partial(jax.jit,
+                   static_argnames=("m", "tk", "interpret", "impl"))
 def merge_execute(structure: dict, vals: jax.Array, b: jax.Array, *, m: int,
-                  interpret: bool | None = None, impl: str = "pallas"):
+                  tk: int | None = None, interpret: bool | None = None,
+                  impl: str = "pallas"):
     """Execute a prebuilt merge structure: C = A @ B with per-call values.
 
     ``structure`` is the pattern-only plan from
     ``merge_spmm.plan_merge_structure`` (built once per sparsity pattern by
     ``repro.core.plan`` / cached by ``repro.engine``); ``vals`` is the
     (nnz_pad,) value vector of the call.  No planning happens here — only a
-    single slot gather plus the phase-2 kernel.
+    single slot gather plus the phase-2 kernel.  ``b`` may carry leading
+    batch dims: (..., k, n) → (..., m, n), one kernel dispatch overall.
     """
+    lead, n = b.shape[:-2], b.shape[-1]
+    if m == 0 or b.shape[-2] == 0:
+        # Degenerate 0-row / 0-col pattern: the product is empty or zero
+        # with no nonzero contributing — skip the kernel entirely.
+        return jnp.zeros(lead + (m, n), b.dtype)
     chunk_vals = _merge.apply_vals(structure, vals)
     if impl == "xla":
         return _ref.merge_execute_ref(structure, chunk_vals, b, m, _merge.TM)
     if interpret is None:
         interpret = _interpret_default()
-    b2 = _pad_axis(b, _merge.TN, 1)
+    b3 = _pad_axis(_lead_fold(b), _merge.TN, 2)
     m_pad = _merge.TM * (-(-m // _merge.TM))
     plan = dict(structure)
     plan["vals"] = chunk_vals
-    out = _merge.merge_spmm_pallas(plan, b2, m_pad, interpret=interpret)
-    return out[:m, : b.shape[1]]
+    out = _merge.merge_spmm_pallas(plan, b3, m_pad, tk=tk,
+                                   interpret=interpret)
+    return out[:, :m, :n].reshape(lead + (m, n))
 
 
-@functools.partial(jax.jit, static_argnames=("m", "tl", "interpret", "impl"))
+@functools.partial(jax.jit,
+                   static_argnames=("m", "tl", "tk", "interpret", "impl"))
 def rowsplit_execute(structure: dict, vals: jax.Array, b: jax.Array, *,
                      m: int, tl: int = _rowsplit.DEFAULT_TL,
-                     interpret: bool | None = None, impl: str = "pallas"):
+                     tk: int | None = None, interpret: bool | None = None,
+                     impl: str = "pallas"):
     """Execute a prebuilt ELL structure: row-split SpMM with per-call values.
 
     The static ``l_pad`` is baked into the structure's (m_pad, L) shape, so
-    this is trace-safe with no l_pad argument.
+    this is trace-safe with no l_pad argument.  ``b`` may carry leading
+    batch dims: (..., k, n) → (..., m, n).
     """
+    lead, n = b.shape[:-2], b.shape[-1]
+    if m == 0 or b.shape[-2] == 0:
+        return jnp.zeros(lead + (m, n), b.dtype)
     ell_vals = _merge.apply_vals(structure, vals)
     if impl == "xla":
         return _ref.rowsplit_execute_ref(structure, ell_vals, b, m)
     if interpret is None:
         interpret = _interpret_default()
-    b2 = _pad_axis(b, _rowsplit.TN, 1)
+    b3 = _pad_axis(_lead_fold(b), _rowsplit.TN, 2)
     plan = dict(structure)
     plan["vals"] = ell_vals
-    out = _rowsplit.rowsplit_spmm_pallas(plan, b2, tl=tl, interpret=interpret)
-    return out[:m, : b.shape[1]]
+    out = _rowsplit.rowsplit_spmm_pallas(plan, b3, tl=tl, tk=tk,
+                                         interpret=interpret)
+    return out[:, :m, :n].reshape(lead + (m, n))
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "impl"))
@@ -144,22 +192,123 @@ def sddmm(rows: jax.Array, cols: jax.Array, valid: jax.Array, dc: jax.Array,
 
     ``rows``/``cols`` are per-nonzero coordinates (in-bounds everywhere;
     padded entries masked off by ``valid``).  This is the values-cotangent
-    kernel of the differentiable SpMM.
+    kernel of the differentiable SpMM.  ``dc``/``b`` may carry matching
+    leading batch dims, kept per element: (..., m, n) × (..., k, n) →
+    (..., nnz_pad); shared-values callers reduce the leading dims.
     """
+    lead = dc.shape[:-2]
+    nnz_pad = rows.shape[0]
+    if nnz_pad == 0 or dc.shape[-2] == 0 or b.shape[-2] == 0:
+        # 0-nnz / 0-row / 0-col patterns: every slot is padding — the
+        # cotangent is identically zero (and the kernel's (p, tq) chunking
+        # has nothing to chunk).
+        return jnp.zeros(lead + (nnz_pad,), dc.dtype)
     if impl == "xla":
         return _ref.sddmm_ref(rows, cols, valid, dc, b)
     if interpret is None:
         interpret = _interpret_default()
-    nnz_pad = rows.shape[0]
     tq = _sddmm.TQ
-    p = max(1, -(-nnz_pad // tq))
+    p = -(-nnz_pad // tq)
     rows2 = _pad_axis(rows, tq, 0).reshape(p, tq)
     cols2 = _pad_axis(cols, tq, 0).reshape(p, tq)
-    dc2 = _pad_axis(dc, _sddmm.TN, 1)
-    b2 = _pad_axis(b, _sddmm.TN, 1)
-    out = _sddmm.sddmm_pallas(rows2, cols2, dc2, b2, interpret=interpret)
-    dvals = out.reshape(-1)[:nnz_pad]
-    return jnp.where(valid, dvals, 0).astype(dc.dtype)
+    dc3 = _pad_axis(_lead_fold(dc), _sddmm.TN, 2)
+    b3 = _pad_axis(_lead_fold(b), _sddmm.TN, 2)
+    out = _sddmm.sddmm_pallas(rows2, cols2, dc3, b3, interpret=interpret)
+    dvals = out.reshape(out.shape[0], -1)[:, :nnz_pad]
+    return jnp.where(valid, dvals.reshape(lead + (nnz_pad,)),
+                     0).astype(dc.dtype)
+
+
+# ---------------------------------------------------- explicit vmap rules ---
+#
+# ``jax.custom_batching.custom_vmap`` wrappers over the plan-execute ops.
+# A vmapped batch axis on the dense operand(s) is rewritten onto the ops'
+# native leading-batch path — i.e. into the kernels' batch grid axis — and
+# any other batching (per-element values, batched structures) falls back to
+# a sequential ``lax.map``, which is always correct.  custom_vmap does not
+# compose with reverse-mode autodiff, so these wrapped forms must only be
+# used where autodiff never differentiates through them: the forward and
+# backward *bodies* of ``repro.core.spmm``'s custom VJP (which JAX vmaps,
+# but never differentiates).
+
+
+def _vmappable(fn, native_when):
+    op = jax.custom_batching.custom_vmap(fn)
+
+    @op.def_vmap
+    def _rule(axis_size, in_batched, *args):
+        if native_when(in_batched):
+            # The batch axis becomes a native leading dim; recursing
+            # through ``op`` keeps any remaining outer vmap axes handled.
+            return op(*args), True
+
+        def one(i):
+            sliced = tuple(
+                jax.tree.map(lambda bt, x: x[i] if bt else x, tb, arg)
+                for tb, arg in zip(in_batched, args))
+            return op(*sliced)
+
+        return jax.lax.map(one, jnp.arange(axis_size)), True
+
+    return op
+
+
+def _structure_free(tree_batched) -> bool:
+    return not any(jax.tree.leaves(tree_batched))
+
+
+# Bounded: keys embed per-pattern statics (m, k), so an unbounded cache
+# would grow with every distinct pattern shape a long-lived server sees.
+# Entries are pure functions of the key — eviction just rebuilds the thin
+# wrapper; the jitted ops underneath keep their stable identity.
+_OP_CACHE_SIZE = 512
+
+
+@functools.lru_cache(maxsize=_OP_CACHE_SIZE)
+def merge_execute_op(m: int, tk: int | None, interpret: bool | None,
+                     impl: str):
+    """``merge_execute`` with an explicit vmap rule (statics closed over)."""
+    fn = lambda structure, vals, b: merge_execute(
+        structure, vals, b, m=m, tk=tk, interpret=interpret, impl=impl)
+
+    def native(in_batched):
+        st, va, bb = in_batched
+        return bb and not va and _structure_free(st)
+
+    return _vmappable(fn, native)
+
+
+@functools.lru_cache(maxsize=_OP_CACHE_SIZE)
+def rowsplit_execute_op(m: int, tl: int, tk: int | None,
+                        interpret: bool | None, impl: str):
+    """``rowsplit_execute`` with an explicit vmap rule."""
+    fn = lambda structure, vals, b: rowsplit_execute(
+        structure, vals, b, m=m, tl=tl, tk=tk, interpret=interpret,
+        impl=impl)
+
+    def native(in_batched):
+        st, va, bb = in_batched
+        return bb and not va and _structure_free(st)
+
+    return _vmappable(fn, native)
+
+
+@functools.lru_cache(maxsize=_OP_CACHE_SIZE)
+def sddmm_op(interpret: bool | None, impl: str):
+    """``sddmm`` with an explicit vmap rule.
+
+    Native when both dense operands batch together (the kernel keeps the
+    axis per element, exactly vmap's semantics); coordinate batching falls
+    back to the sequential map.
+    """
+    fn = lambda rows, cols, valid, dc, b: sddmm(
+        rows, cols, valid, dc, b, interpret=interpret, impl=impl)
+
+    def native(in_batched):
+        rr, cc, vv, dcb, bb = in_batched
+        return dcb and bb and not (rr or cc or vv)
+
+    return _vmappable(fn, native)
 
 
 def moe_group_gemm(x: jax.Array, w: jax.Array, group_sizes: jax.Array, *,

@@ -70,6 +70,22 @@ def spmm_merge_ref(a: CSR, b: jax.Array, t: int = 8) -> jax.Array:
         num_segments=a.m)
 
 
+def _map_leading(one, *stacked):
+    """Apply a 2-D-operand reference over folded leading batch dims.
+
+    ``lax.map`` (scan) rather than vmap/moveaxis: the Pallas kernels
+    serialize the batch grid axis on a core, so the faithful XLA twin
+    iterates batch elements inside one computation too — per-element
+    working set, one dispatch — instead of materializing a batch-wide
+    gathered intermediate.
+    """
+    lead = stacked[0].shape[:-2]
+    flat = [x.reshape((-1,) + x.shape[-2:]) for x in stacked]
+    out = jax.lax.map(one, tuple(flat)) if len(flat) > 1 else \
+        jax.lax.map(one, flat[0])
+    return out.reshape(lead + out.shape[1:])
+
+
 def merge_execute_ref(structure: dict, chunk_vals: jax.Array, b: jax.Array,
                       m: int, tm: int) -> jax.Array:
     """Plan-execute reference for the merge structure (differentiable XLA).
@@ -77,30 +93,53 @@ def merge_execute_ref(structure: dict, chunk_vals: jax.Array, b: jax.Array,
     Same dataflow as ``merge_spmm_pallas`` on a prebuilt pattern structure:
     gather B rows per chunk slot, multiply by the per-call values, scatter
     into C by (tile, lrow).  Unused slots carry value 0 and scatter 0.
+    ``b`` may carry leading batch dims — (..., k, n) → (..., m, n), matching
+    the batched kernel grid (K-tiling is a VMEM-residency concern with no
+    XLA analogue: the compiler owns the streaming here).
     """
-    prods = chunk_vals[..., None] * b[structure["cols"]]       # (C, t, n)
-    rows = structure["tile"][:, None] * tm + structure["lrow"]  # (C, t)
-    m_pad = tm * (-(-m // tm))
-    out = jax.ops.segment_sum(prods.reshape(-1, b.shape[1]),
-                              rows.reshape(-1), num_segments=m_pad)
-    return out[:m]
+    def one(b2):
+        prods = chunk_vals[..., None] * b2[structure["cols"]]   # (C, t, n)
+        rows = structure["tile"][:, None] * tm + structure["lrow"]
+        m_pad = tm * (-(-m // tm))
+        out = jax.ops.segment_sum(prods.reshape(-1, b2.shape[-1]),
+                                  rows.reshape(-1), num_segments=m_pad)
+        return out[:m]
+
+    if b.ndim == 2:
+        return one(b)
+    return _map_leading(one, b)
 
 
 def rowsplit_execute_ref(structure: dict, ell_vals: jax.Array,
                          b: jax.Array, m: int) -> jax.Array:
-    """Plan-execute reference for the ELL structure (differentiable XLA)."""
-    return jnp.einsum("ml,mln->mn", ell_vals, b[structure["cols"]])[:m]
+    """Plan-execute reference for the ELL structure (differentiable XLA).
+
+    Batched like the kernel: ``b (..., k, n) → (..., m, n)``.
+    """
+    def one(b2):
+        return jnp.einsum("ml,mln->mn", ell_vals, b2[structure["cols"]])[:m]
+
+    if b.ndim == 2:
+        return one(b)
+    return _map_leading(one, b)
 
 
 def sddmm_ref(rows: jax.Array, cols: jax.Array, valid: jax.Array,
               dc: jax.Array, b: jax.Array) -> jax.Array:
     """Gather-dot oracle for the sampled dense-dense product.
 
-    ``dvals[p] = dC[rows[p]] · B[cols[p]]`` masked by ``valid`` — the
-    cotangent of the CSR values under C = A @ B.
+    ``dvals[..., p] = dC[..., rows[p], :] · B[..., cols[p], :]`` masked by
+    ``valid`` — the cotangent of the CSR values under C = A @ B.  Leading
+    batch dims are kept per element (shared-values callers reduce them).
     """
-    dots = jnp.sum(dc[rows] * b[cols], axis=-1)
-    return jnp.where(valid, dots, 0).astype(dc.dtype)
+    def one(args):
+        dc2, b2 = args
+        dots = jnp.sum(dc2[rows] * b2[cols], axis=-1)
+        return jnp.where(valid, dots, 0).astype(dc.dtype)
+
+    if dc.ndim == 2:
+        return one((dc, b))
+    return _map_leading(one, dc, b)
 
 
 def moe_group_gemm_ref(x_sorted: jax.Array, w: jax.Array,

@@ -4,7 +4,11 @@ TPU adaptation of the paper's warp-per-row kernel:
 
 * The GPU warp's 32 lanes reading 32 consecutive floats of a row-major B row
   become a ``TN=128``-lane slice of B fetched from a VMEM-resident
-  ``(k, TN)`` panel.
+  ``(TK, TN)`` panel — the dense operand streams through VMEM in K tiles
+  with the accumulator carried across them (grid axis ``k_tiles``,
+  innermost), so VMEM stays bounded at any ``k``; a leading ``batch`` grid
+  axis executes a whole stack of dense operands per dispatch (see
+  ``merge_spmm`` for the shared rationale).
 * "Equal rows per processor" becomes a grid over ``TM``-row tiles of C; each
   row is processed in batches of ``TL`` nonzeroes, ELL-padded to the tile's
   static bound ``L`` — the TPU manifestation of the paper's Type 2 load
@@ -52,7 +56,11 @@ def plan_rowsplit_structure(a: CSR, *, l_pad: int, tl: int = DEFAULT_TL,
     take = a.row_ptr[:-1, None] + idx[None, :]             # (m, l)
     valid = idx[None, :] < lengths[:, None]
     safe = jnp.where(valid, take, 0)
-    cols = jnp.where(valid, a.col_ind[safe], 0)
+    # Sentinel-extended gather so a 0-nnz pattern (empty col_ind) stays
+    # constructible — the appended 0 is what every invalid slot reads.
+    col_ext = jnp.concatenate(
+        [a.col_ind, jnp.zeros((1,), a.col_ind.dtype)])
+    cols = jnp.where(valid, col_ext[safe], 0)
     slot_nz = jnp.where(valid, take, a.nnz_pad).astype(jnp.int32)
     pad_rows = m_pad - m
     cols = jnp.pad(cols, ((0, pad_rows), (0, 0)))
@@ -72,45 +80,64 @@ def plan_rowsplit(a: CSR, *, l_pad: int, tl: int = DEFAULT_TL,
 
 
 def _rowsplit_kernel(cols_ref, vals_ref, b_ref, o_ref, acc_ref, *,
-                     acc_dtype, n_l: int):
-    ll = pl.program_id(2)
+                     acc_dtype, n_l: int, tk: int, n_k: int):
+    ll = pl.program_id(3)
+    kk = pl.program_id(4)
 
-    @pl.when(ll == 0)
+    @pl.when((ll == 0) & (kk == 0))
     def _zero():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     tm, tl = cols_ref.shape
     cols = cols_ref[...].reshape(-1)                       # (tm*tl,)
-    vals = vals_ref[...].reshape(-1).astype(acc_dtype)
-    bgat = jnp.take(b_ref[...], cols, axis=0).astype(acc_dtype)  # (tm*tl, TN)
+    # Mask to the columns whose B row is in the resident (TK, TN) panel;
+    # the rest accumulate when their panel streams in (see merge_spmm).
+    local = cols - kk * tk
+    in_panel = (local >= 0) & (local < tk)
+    vals = jnp.where(in_panel, vals_ref[...].reshape(-1),
+                     0).astype(acc_dtype)
+    bgat = jnp.take(b_ref[0], jnp.where(in_panel, local, 0),
+                    axis=0).astype(acc_dtype)              # (tm*tl, TN)
     prod = vals[:, None] * bgat
     acc_ref[...] += prod.reshape(tm, tl, -1).sum(axis=1)
 
-    @pl.when(ll == n_l - 1)
+    @pl.when((ll == n_l - 1) & (kk == n_k - 1))
     def _flush():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
 
 
 def rowsplit_spmm_pallas(plan: dict, b: jax.Array, *, tm: int = TM,
                          tn: int = TN, tl: int = DEFAULT_TL,
+                         tk: int | None = None,
                          interpret: bool = False) -> jax.Array:
-    """``b`` must be (k, n) with n % tn == 0; plan arrays (m_pad, L)."""
-    k, n = b.shape
+    """``b`` is (batch, k, n) with n % tn == 0; plan arrays (m_pad, L).
+
+    Returns (batch, m_pad, n): batch on the leading grid axis, B streamed
+    through VMEM in (TK, TN) panels (``k_tiles`` innermost, accumulator
+    carried).
+    """
+    from .merge_spmm import resolve_tk
+    batch, k, n = b.shape
     m_pad, l = plan["cols"].shape
+    tk, n_k = resolve_tk(k, tk)
+    kpad = n_k * tk - k
+    if kpad:
+        b = jnp.pad(b, ((0, 0), (0, kpad), (0, 0)))
     acc_dtype = jnp.float32
-    grid = (m_pad // tm, n // tn, l // tl)
+    grid = (batch, m_pad // tm, n // tn, l // tl, n_k)
     kernel = functools.partial(_rowsplit_kernel, acc_dtype=acc_dtype,
-                               n_l=l // tl)
+                               n_l=l // tl, tk=tk, n_k=n_k)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((tm, tl), lambda i, j, ll: (i, ll)),
-            pl.BlockSpec((tm, tl), lambda i, j, ll: (i, ll)),
-            pl.BlockSpec((k, tn), lambda i, j, ll: (0, j)),
+            pl.BlockSpec((tm, tl), lambda bb, i, j, ll, kk: (i, ll)),
+            pl.BlockSpec((tm, tl), lambda bb, i, j, ll, kk: (i, ll)),
+            pl.BlockSpec((1, tk, tn), lambda bb, i, j, ll, kk: (bb, kk, j)),
         ],
-        out_specs=pl.BlockSpec((tm, tn), lambda i, j, ll: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m_pad, n), b.dtype),
+        out_specs=pl.BlockSpec((1, tm, tn),
+                               lambda bb, i, j, ll, kk: (bb, i, j)),
+        out_shape=jax.ShapeDtypeStruct((batch, m_pad, n), b.dtype),
         scratch_shapes=[pltpu.VMEM((tm, tn), acc_dtype)],
         interpret=interpret,
     )(plan["cols"], plan["vals"], b)

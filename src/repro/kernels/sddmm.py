@@ -13,6 +13,12 @@ cost is O(nnz), independent of row distribution, so the backward pass
 inherits the paper's load-balance guarantees), and the reduction over the
 dense axis n runs as an inner grid dimension with a VMEM accumulator.
 
+Batched execution adds a leading ``batch`` grid axis: ``dc (batch, m, n)``
+and ``b (batch, k, n)`` yield per-element dots ``(batch, P, TQ)`` in one
+dispatch.  The caller reduces over the batch when the values are shared
+across it (``repro.core.spmm``'s batched VJP) — keeping the axis here is
+what makes the same kernel serve ``jax.vmap``'s per-element semantics.
+
 Padded nonzeroes must arrive with in-bounds (row, col) = (0, 0); the caller
 masks their outputs (``repro.kernels.ops.sddmm``).
 """
@@ -31,7 +37,7 @@ TQ = 128   # nonzeroes per chunk
 
 def _sddmm_kernel(rows_ref, cols_ref, dc_ref, b_ref, o_ref, acc_ref, *,
                   n_j: int, acc_dtype):
-    j = pl.program_id(1)
+    j = pl.program_id(2)
 
     @pl.when(j == 0)
     def _zero():
@@ -40,38 +46,40 @@ def _sddmm_kernel(rows_ref, cols_ref, dc_ref, b_ref, o_ref, acc_ref, *,
     rows = rows_ref[0]                                    # (TQ,)
     cols = cols_ref[0]                                    # (TQ,)
     # Row-major coalesced gathers of dC and B rows (lane-contiguous slices).
-    dcg = jnp.take(dc_ref[...], rows, axis=0).astype(acc_dtype)   # (TQ, TN)
-    bg = jnp.take(b_ref[...], cols, axis=0).astype(acc_dtype)     # (TQ, TN)
+    dcg = jnp.take(dc_ref[0], rows, axis=0).astype(acc_dtype)     # (TQ, TN)
+    bg = jnp.take(b_ref[0], cols, axis=0).astype(acc_dtype)       # (TQ, TN)
     acc_ref[...] += jnp.sum(dcg * bg, axis=1)[None, :]
 
     @pl.when(j == n_j - 1)
     def _flush():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
 
 
 def sddmm_pallas(rows: jax.Array, cols: jax.Array, dc: jax.Array,
                  b: jax.Array, *, tn: int = TN,
                  interpret: bool = False) -> jax.Array:
     """``rows``/``cols`` are (P, TQ) chunked nonzero coordinates; ``dc`` is
-    (m, n), ``b`` is (k, n), n % tn == 0.  Returns (P, TQ) float32 dots."""
+    (batch, m, n), ``b`` is (batch, k, n), n % tn == 0.  Returns
+    (batch, P, TQ) float32 dots — per batch element; callers with values
+    shared across the batch reduce over axis 0 themselves."""
     p, tq = rows.shape
-    m, n = dc.shape
-    k, _ = b.shape
+    batch, m, n = dc.shape
+    _, k, _ = b.shape
     acc_dtype = jnp.float32
-    grid = (p, n // tn)
+    grid = (batch, p, n // tn)
     kernel = functools.partial(_sddmm_kernel, n_j=n // tn,
                                acc_dtype=acc_dtype)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, tq), lambda i, j: (i, 0)),
-            pl.BlockSpec((1, tq), lambda i, j: (i, 0)),
-            pl.BlockSpec((m, tn), lambda i, j: (0, j)),
-            pl.BlockSpec((k, tn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, tq), lambda bb, i, j: (i, 0)),
+            pl.BlockSpec((1, tq), lambda bb, i, j: (i, 0)),
+            pl.BlockSpec((1, m, tn), lambda bb, i, j: (bb, 0, j)),
+            pl.BlockSpec((1, k, tn), lambda bb, i, j: (bb, 0, j)),
         ],
-        out_specs=pl.BlockSpec((1, tq), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((p, tq), acc_dtype),
+        out_specs=pl.BlockSpec((1, 1, tq), lambda bb, i, j: (bb, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, p, tq), acc_dtype),
         scratch_shapes=[pltpu.VMEM((1, tq), acc_dtype)],
         interpret=interpret,
     )(rows, cols, dc, b)

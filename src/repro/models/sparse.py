@@ -21,9 +21,18 @@ import dataclasses
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import CSR, Heuristic, SpmmPlan, execute_plan, prune_to_csr
+
+# Below this many tokens per call, flattening the leading axes packs the
+# tokens densely into the kernels' TN=128-lane tiles; from here up each
+# batch element already fills its lane tiles, so the batched grid path —
+# B (..., d_in, tokens) folded into the kernel's leading batch axis — wins
+# by skipping the (batch*tokens) reshape/transpose and running the whole
+# stack in one dispatch.
+BATCHED_MIN_TOKENS = 128
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,13 +75,23 @@ class SparseLinear:
         return self.plan.meta.l_pad if self.plan is not None else None
 
     def __call__(self, x: jax.Array, **kw) -> jax.Array:
-        """x (..., d_in) → (..., d_out).  Differentiable in x and vals."""
+        """x (..., d_in) → (..., d_out).  Differentiable in x and vals.
+
+        With 3-D+ activations carrying enough tokens per call
+        (``BATCHED_MIN_TOKENS``), the leading axes ride the engine's
+        batched execution — B (..., d_in, tokens) folds into the kernel
+        grid — instead of being flattened into one wide token axis.
+        """
         layer = self if self.plan is not None else self.with_plan()
+        w = layer.weight
+        if x.ndim >= 3 and x.shape[-2] >= BATCHED_MIN_TOKENS:
+            xt = jnp.swapaxes(x, -1, -2).astype(w.dtype)  # (..., d_in, tok)
+            y = execute_plan(layer.plan, w.vals, xt, **kw)
+            return jnp.swapaxes(y, -1, -2).astype(x.dtype)
         lead = x.shape[:-1]
         xt = x.reshape(-1, x.shape[-1]).T          # (d_in, tokens) = B
-        y = execute_plan(layer.plan, layer.weight.vals,
-                         xt.astype(layer.weight.dtype), **kw)
-        return y.T.reshape(*lead, layer.weight.m).astype(x.dtype)
+        y = execute_plan(layer.plan, w.vals, xt.astype(w.dtype), **kw)
+        return y.T.reshape(*lead, w.m).astype(x.dtype)
 
 
 jax.tree_util.register_pytree_node(

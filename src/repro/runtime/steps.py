@@ -9,6 +9,10 @@ error-feedback gradient compression of the cross-replica payload.
 ``ensure_spmm_plans`` / ``make_sparse_train_step``: the SpMM-engine hooks —
 plans are (re)built through the engine cache once, outside jit, and the
 jitted steps only ever execute them.
+
+``microbatched``: wrap a jitted step so one compiled program serves any
+request batch in fixed-size leading-axis slices — the serving loop's
+dispatch amortizer on top of the engine's batched plan execution.
 """
 from __future__ import annotations
 
@@ -148,6 +152,40 @@ def make_sparse_train_step(sparse_p: dict, *, lr: float = 1e-2,
         return vals, loss
 
     return step, S.mlp_vals(sparse_p)
+
+
+def microbatched(fn, microbatch: int, *, argnums=(0,)):
+    """Run ``fn`` over fixed-size slices of the selected args' leading axis.
+
+    ``fn`` (typically jitted) is called once per ``microbatch``-sized slice
+    of every arg in ``argnums`` (other args pass through whole), and the
+    per-slice outputs are concatenated along axis 0.  Because every slice
+    has the same static shape, a single compiled program serves any request
+    batch that divides into microbatches — the serving loop's way to bound
+    peak memory while the batch axis inside each call still rides the
+    engine's batched SpMM execution.
+    """
+    if microbatch <= 0:
+        raise ValueError(f"microbatch must be positive, got {microbatch}")
+
+    def run(*args):
+        sizes = {args[i].shape[0] for i in argnums}
+        if len(sizes) != 1:
+            raise ValueError(
+                f"microbatched args disagree on the leading axis: {sizes}")
+        (total,) = sizes
+        if total % microbatch:
+            raise ValueError(
+                f"batch {total} does not divide into microbatches of "
+                f"{microbatch}; pad the batch or change --microbatch")
+        outs = []
+        for s in range(0, total, microbatch):
+            sliced = [a[s:s + microbatch] if i in argnums else a
+                      for i, a in enumerate(args)]
+            outs.append(fn(*sliced))
+        return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *outs)
+
+    return run
 
 
 def init_train_state(cfg, key, *, grad_compression: str = "none",

@@ -73,6 +73,33 @@ def test_cache_lru_eviction():
     assert cache.stats().misses == 4
 
 
+def test_alias_map_is_bounded():
+    """Cycling distinct raw request keys (fresh heuristic objects with new
+    thresholds) must not grow the alias map without bound — the long-lived
+    server leak of ISSUE 3."""
+    cache = engine.PlanCache(maxsize=4, alias_maxsize=8)
+    a = _csr(20, npr=(0, 4))                 # short rows: merge either way
+    for i in range(50):
+        cache.get(a, heuristic=Heuristic(threshold=100.0 + i))
+    s = cache.stats()
+    assert s.misses == 1, "distinct thresholds resolved to the same plan"
+    assert len(cache._aliases) <= 8
+    assert s.aliases <= 8
+    assert s.alias_evictions == 50 - 8
+    # aliased fast path still hits after evictions
+    cache.get(a, heuristic=Heuristic(threshold=149.0))
+    assert cache.stats().hits == 50
+
+
+def test_alias_map_pruned_with_canonical_eviction():
+    cache = engine.PlanCache(maxsize=1)
+    a0, a1 = _csr(21), _csr(22)
+    cache.get(a0)
+    cache.get(a1)                            # evicts a0's plan
+    assert cache.stats().evictions == 1
+    assert all(c in cache._entries for c in cache._aliases.values())
+
+
 def test_fingerprint_is_pattern_identity():
     a = _csr(3)
     assert pattern_fingerprint(a) == pattern_fingerprint(_with_vals(a, 9))
