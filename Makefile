@@ -1,9 +1,12 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: ci test smoke bench tune tune-smoke bench-batched-smoke
+.PHONY: ci test smoke examples-smoke bench tune tune-smoke \
+	bench-batched-smoke
 
-ci: test smoke
+# examples-smoke subsumes the quickstart smoke (runs it in full), so ci
+# doesn't run it twice.
+ci: test examples-smoke
 
 # Tier-1 verify (ROADMAP.md)
 test:
@@ -12,6 +15,15 @@ test:
 # Fast interpret-mode smoke of the public SpMM API
 smoke:
 	$(PY) examples/quickstart.py
+
+# Every example end-to-end on CPU (Pallas interpret mode): quickstart in
+# full, the rest via their CI-sized --smoke paths.  Wired into CI so the
+# examples can never silently rot against the API.
+examples-smoke:
+	$(PY) examples/quickstart.py
+	$(PY) examples/moe_spmm_demo.py --smoke
+	$(PY) examples/serve_pruned.py --smoke
+	$(PY) examples/train_tiny_lm.py --smoke
 
 bench:
 	$(PY) -m benchmarks.run

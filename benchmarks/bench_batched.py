@@ -32,7 +32,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import build_plan, execute_plan
+from repro.core import ExecutionConfig, build_plan, execute_plan
 from .common import make_matrix, timeit
 
 
@@ -52,8 +52,8 @@ def run(csv=print):
     for k in cfg["ks"]:
         a = make_matrix(0, cfg["m"], k, nnz_per_row=cfg["npr"])
         plan = build_plan(a, method="merge", with_transpose=False)
-        ex = functools.partial(execute_plan, impl=cfg["impl"],
-                               interpret=cfg["interpret"], tk=cfg["tk"])
+        ex = functools.partial(execute_plan, exec=ExecutionConfig(
+            impl=cfg["impl"], interpret=cfg["interpret"], tk=cfg["tk"]))
         for batch in cfg["batches"]:
             bs = jax.random.normal(jax.random.PRNGKey(1),
                                    (batch, k, cfg["n"]), jnp.float32)

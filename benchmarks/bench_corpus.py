@@ -3,9 +3,11 @@
 The §5.4 claim generalized from Fig. 6's synthetic sweep to the matrix
 corpus (``repro.matrices.suites``; ``REPRO_CORPUS_SUITE`` env overrides
 the default ``paper`` suite — CI smoke uses ``mini``).  Per matrix:
-row-length stats (d, cv, Gini — the Fig. 1 axes), vendor-stand-in /
-merge / row-split timings, and the oracle winner.  Then three selection
-policies are scored against the oracle:
+row-length stats (d, cv, Gini — the Fig. 1 axes), a vendor-stand-in
+timing, and *every registered SpMM method* (``repro.kernels.registry``)
+timed through the inline plan-per-call path — a newly registered method
+shows up here with zero edits.  Then three selection policies are scored
+against the merge/rowsplit oracle:
 
 * the paper's fixed K40c threshold (9.35),
 * a threshold calibrated on *this* sweep's timings,
@@ -23,15 +25,17 @@ import os
 import jax
 import numpy as np
 
-from repro.core import Heuristic, calibrate, spmm
+from repro.core import ExecutionConfig, Heuristic, PlanPolicy, calibrate, \
+    spmm
 from repro.core.plan import pattern_fingerprint
-from repro.kernels import ref
+from repro.kernels import ref, registry
 from repro.matrices import compute_stats, get_suite
 from repro.tune.db import TuneDB, TuneRecord, class_signature
 
 from .common import geomean, make_b, timeit
 
 N = 64
+_XLA = ExecutionConfig(impl="xla")
 
 
 def run(csv=print):
@@ -45,24 +49,35 @@ def run(csv=print):
         s = compute_stats(a)
         b = make_b(7, a.k, N)
         t_vendor = timeit(jax.jit(ref.spmm_gather_ref), a, b)
-        t_mg = timeit(functools.partial(
-            spmm, method="merge", impl="xla", plan="inline"), a, b)
-        t_rs = timeit(functools.partial(
-            spmm, method="rowsplit", impl="xla", plan="inline",
-            l_pad=max(s.max_len, 1)), a, b)
-        winner = "merge" if t_mg < t_rs else "rowsplit"
-        pred = Heuristic().choose(a)
         csv(f"corpus_{spec.name}_vendor,{t_vendor:.1f},"
             f"d={s.d:.1f};cv={s.cv:.2f};gini={s.gini:.2f}")
-        csv(f"corpus_{spec.name}_merge,{t_mg:.1f},"
-            f"{'WIN' if winner == 'merge' else ''}")
-        csv(f"corpus_{spec.name}_rowsplit,{t_rs:.1f},"
-            f"{'WIN' if winner == 'rowsplit' else ''}")
-        csv(f"corpus_{spec.name}_heuristic,0,pred={pred};oracle={winner};"
-            f"{'HIT' if pred == winner else 'MISS'}")
+        # Every registered method, dispatched through the registry — the
+        # per-method l_pad/t defaults come from PlanPolicy.resolve, so a
+        # new method needs no plumbing here.  Resolving once per matrix
+        # outside the timed callable pins the explicit statics, keeping
+        # the auto ladder (TuneDB/heuristic) out of the timed loop; the
+        # per-call parameter validation and structure build that remain
+        # inside are the plan-per-call cost this bench times on purpose.
+        timings = {}
+        for mname in registry.method_names():
+            r = PlanPolicy(method=mname).resolve(a)
+            pol = PlanPolicy(method=r.method, t=r.t, tl=r.tl,
+                             l_pad=r.l_pad)
+            timings[mname] = timeit(functools.partial(
+                spmm, policy=pol, exec=_XLA, plan="inline"), a, b)
+        winner = min(timings, key=timings.get)
+        for mname, t_us in timings.items():
+            csv(f"corpus_{spec.name}_{mname},{t_us:.1f},"
+                f"{'WIN' if mname == winner else ''}")
+        t_mg, t_rs = timings["merge"], timings["rowsplit"]
+        pair_winner = "merge" if t_mg < t_rs else "rowsplit"
+        pred = Heuristic().choose(a)
+        csv(f"corpus_{spec.name}_heuristic,0,pred={pred};"
+            f"oracle={pair_winner};"
+            f"{'HIT' if pred == pair_winner else 'MISS'}")
         recs.append(TuneRecord(
-            method=winner, merge_us=t_mg, rowsplit_us=t_rs, m=s.m, k=s.k,
-            d=s.d, cv=s.cv, n=N, name=spec.name))
+            method=pair_winner, merge_us=t_mg, rowsplit_us=t_rs, m=s.m,
+            k=s.k, d=s.d, cv=s.cv, n=N, name=spec.name, timings=timings))
         fps.append(pattern_fingerprint(a))
         mats.append(a)
 

@@ -14,7 +14,7 @@ import functools
 
 import jax
 
-from repro.core import spmm
+from repro.core import ExecutionConfig, PlanPolicy, spmm
 from repro.kernels import ref
 from .common import geomean, make_b, make_matrix, timeit
 
@@ -33,7 +33,8 @@ def run(csv=print):
         b = make_b(1, k, N)
         t_vendor = timeit(jax.jit(ref.spmm_gather_ref), a, b)
         t_merge = timeit(functools.partial(
-            spmm, method="merge", impl="xla", plan="inline"), a, b)
+            spmm, policy=PlanPolicy(method="merge"),
+            exec=ExecutionConfig(impl="xla"), plan="inline"), a, b)
         gflops = 2 * TOTAL_NNZ * N / t_vendor / 1e3
         csv(f"fig1_vendor_m{m},{t_vendor:.1f},{gflops:.2f}GF")
         gflops_m = 2 * TOTAL_NNZ * N / t_merge / 1e3

@@ -12,7 +12,7 @@ import functools
 
 import jax
 
-from repro.core import spmm
+from repro.core import ExecutionConfig, PlanPolicy, spmm
 from repro.kernels import ref
 from .common import make_b, make_matrix, timeit
 
@@ -30,7 +30,8 @@ def run(csv=print):
         b = make_b(1, k, N)
         t_vendor = timeit(jax.jit(ref.spmm_gather_ref), a, b)
         t_rs = timeit(functools.partial(
-            spmm, method="rowsplit", impl="xla", plan="inline", l_pad=npr), a, b)
+            spmm, policy=PlanPolicy(method="rowsplit", l_pad=npr),
+            exec=ExecutionConfig(impl="xla"), plan="inline"), a, b)
         csv(f"fig4_rowsplit_len{npr},{t_rs:.1f},{t_vendor / t_rs:.2f}x")
 
 

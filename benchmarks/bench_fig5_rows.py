@@ -14,7 +14,7 @@ import functools
 import jax
 import numpy as np
 
-from repro.core import spmm
+from repro.core import ExecutionConfig, PlanPolicy, spmm
 from repro.kernels import ref
 from .common import geomean, make_b, make_matrix, timeit
 
@@ -42,9 +42,12 @@ def _bench_suite(name, mean_len, csv):
         t_vendor = timeit(jax.jit(ref.spmm_gather_ref), a, b)
         l_pad = int(np.max(np.diff(np.asarray(a.row_ptr))))
         t_rs = timeit(functools.partial(
-            spmm, method="rowsplit", impl="xla", plan="inline", l_pad=max(l_pad, 1)), a, b)
-        t_mg = timeit(functools.partial(spmm, method="merge", impl="xla", plan="inline"),
-                      a, b)
+            spmm,
+            policy=PlanPolicy(method="rowsplit", l_pad=max(l_pad, 1)),
+            exec=ExecutionConfig(impl="xla"), plan="inline"), a, b)
+        t_mg = timeit(functools.partial(
+            spmm, policy=PlanPolicy(method="merge"),
+            exec=ExecutionConfig(impl="xla"), plan="inline"), a, b)
         rs_speed.append(t_vendor / t_rs)
         mg_speed.append(t_vendor / t_mg)
         csv(f"{name}_ds{i}_rowsplit,{t_rs:.1f},{t_vendor / t_rs:.2f}x")

@@ -16,7 +16,8 @@ import functools
 import jax
 import numpy as np
 
-from repro.core import Heuristic, calibrate, spmm
+from repro.core import (ExecutionConfig, Heuristic, PlanPolicy,
+                        calibrate, spmm)
 from repro.kernels import ref
 from .common import geomean, make_b, make_matrix, timeit
 
@@ -42,9 +43,12 @@ def run(csv=print):
         l_pad = int(np.max(np.diff(np.asarray(a.row_ptr))))
         t_vendor.append(timeit(jax.jit(ref.spmm_gather_ref), a, b))
         t_rs.append(timeit(functools.partial(
-            spmm, method="rowsplit", impl="xla", plan="inline", l_pad=max(l_pad, 1)), a, b))
+            spmm,
+            policy=PlanPolicy(method="rowsplit", l_pad=max(l_pad, 1)),
+            exec=ExecutionConfig(impl="xla"), plan="inline"), a, b))
         t_mg.append(timeit(functools.partial(
-            spmm, method="merge", impl="xla", plan="inline"), a, b))
+            spmm, policy=PlanPolicy(method="merge"),
+            exec=ExecutionConfig(impl="xla"), plan="inline"), a, b))
         ds.append(float(a.mean_row_length()))
     ds, t_rs, t_mg, t_vendor = map(np.asarray, (ds, t_rs, t_mg, t_vendor))
 

@@ -11,7 +11,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import spmm
+from repro.core import ExecutionConfig, PlanPolicy, spmm
 from .common import make_b, make_matrix, timeit
 
 M = K = 2048
@@ -27,8 +27,9 @@ def run(csv=print):
     crossover = None
     for pct in (0.5, 1, 2, 4, 6, 9, 12, 16, 25):
         a = make_matrix(5, M, K, density=pct / 100)
-        t_sp = timeit(functools.partial(spmm, method="merge", impl="xla", plan="inline"),
-                      a, b)
+        t_sp = timeit(functools.partial(
+            spmm, policy=PlanPolicy(method="merge"),
+            exec=ExecutionConfig(impl="xla"), plan="inline"), a, b)
         csv(f"fig7_spmm_d{pct}%,{t_sp:.1f},{t_gemm / t_sp:.2f}x")
         if crossover is None and t_sp > t_gemm:
             crossover = pct

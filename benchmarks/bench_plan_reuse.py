@@ -20,7 +20,8 @@ from __future__ import annotations
 import functools
 import time
 
-from repro.core import build_plan, execute_plan, spmm
+from repro.core import (ExecutionConfig, PlanPolicy, build_plan,
+                        execute_plan, spmm)
 from .common import make_b, make_matrix, timeit
 
 N = 64
@@ -44,10 +45,12 @@ def run(csv=print):
         plan = build_plan(a, method=method)
         t_plan = (time.perf_counter() - t0) * 1e6
 
-        warm_fn = functools.partial(execute_plan, impl="xla")
+        warm_fn = functools.partial(execute_plan,
+                                    exec=ExecutionConfig(impl="xla"))
         t_warm = timeit(warm_fn, plan, a.vals, b)
         t_inline = timeit(functools.partial(
-            spmm, method=method, impl="xla", plan="inline"), a, b)
+            spmm, policy=PlanPolicy(method=method),
+            exec=ExecutionConfig(impl="xla"), plan="inline"), a, b)
         t_cold = t_plan + t_warm
 
         csv(f"plan_{name}_build,{t_plan:.1f},once_per_pattern")

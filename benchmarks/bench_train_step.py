@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import engine
+from repro.core import ExecutionConfig
 from repro.models import sparse as S
 from repro.runtime import steps as R
 from .common import timeit
@@ -23,6 +24,7 @@ from .common import timeit
 BATCH = 64
 D = 512
 FF = 1024
+_XLA = ExecutionConfig(impl="xla")
 
 
 def _sparse_mlp(seed: int, keep: float):
@@ -48,7 +50,7 @@ def run(csv=print):
         def fwd_only(vals, xx):
             layers = S.mlp_with_vals(sp, vals)
             return S.sparse_mlp_apply(
-                {k: functools.partial(sl, impl="xla")
+                {k: functools.partial(sl, exec=_XLA)
                  for k, sl in layers.items()}, xx, None)
 
         jfwd = jax.jit(fwd_only)

@@ -5,8 +5,9 @@ shows that the sort-based (merge) dispatch produces the same result as the
 dense einsum baseline while doing equal-tokens-per-block work — the
 paper's equal-nonzeros-per-chunk principle applied to experts.
 
-    PYTHONPATH=src python examples/moe_spmm_demo.py
+    PYTHONPATH=src python examples/moe_spmm_demo.py [--smoke]
 """
+import argparse
 import dataclasses
 
 import jax
@@ -16,6 +17,12 @@ import numpy as np
 from repro.configs import get_smoke_config
 from repro.models import moe as MOE
 
+ap = argparse.ArgumentParser()
+ap.add_argument("--smoke", action="store_true",
+                help="CI-sized run: fewer tokens per batch")
+args = ap.parse_args()
+seq = 16 if args.smoke else 64
+
 cfg = dataclasses.replace(get_smoke_config("olmoe-1b-7b"),
                           d_model=128, d_ff=256, num_experts=16, top_k=2,
                           compute_dtype="float32")
@@ -23,7 +30,7 @@ p = MOE.init_moe(jax.random.PRNGKey(0), cfg)
 # skew the router: experts 0/1 are "hot" (the paper's long rows)
 p["router"] = p["router"].at[:, 0].add(3.0).at[:, 1].add(2.0)
 
-x = jax.random.normal(jax.random.PRNGKey(1), (4, 64, cfg.d_model))
+x = jax.random.normal(jax.random.PRNGKey(1), (4, seq, cfg.d_model))
 xt = x.reshape(-1, cfg.d_model)
 gates, experts, probs = MOE.route(p, xt, cfg)
 counts = np.bincount(np.asarray(experts).ravel(), minlength=cfg.num_experts)

@@ -1,44 +1,60 @@
-"""Quickstart: the paper's SpMM in five minutes.
+"""Quickstart: the paper's SpMM in five minutes, through the v1 API.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import CSR, Heuristic, from_dense, random_csr, spmm
-from repro.kernels import ref
+import repro
+from repro import ExecutionConfig, PlanPolicy, SparseMatrix
+from repro.core import Heuristic, random_csr
+from repro.kernels import ref, registry
 
-# 1. Build a sparse matrix in CSR (the paper's input format — no
-#    conversion step, Algorithm 1 consumes row_ptr/col_ind/vals directly).
+# 1. Build a sparse matrix (CSR underneath — the paper's input format, no
+#    conversion step) with the SparseMatrix frontend.
 rng = np.random.default_rng(0)
 dense = rng.standard_normal((64, 96)) * (rng.random((64, 96)) < 0.1)
-a = from_dense(dense.astype(np.float32))
-print(f"A: {a.shape}, nnz={int(a.nnz())}, "
-      f"mean row length d={float(a.mean_row_length()):.2f}")
+A = SparseMatrix.from_dense(dense.astype(np.float32))
+print(f"A: {A.shape}, nnz={int(A.nnz())}, "
+      f"mean row length d={float(A.data.mean_row_length()):.2f}")
 
 # 2. A tall-skinny dense B (n ≪ m — the paper's SpMM regime).
 b = jax.random.normal(jax.random.PRNGKey(1), (96, 64))
 
-# 3. Multiply three ways — row-split (§4.1), merge-based (§4.2), and
-#    'auto' (the §5.4 heuristic: d < 9.35 → merge).
-c_rowsplit = spmm(a, b, method="rowsplit")
-c_merge = spmm(a, b, method="merge")
-c_auto = spmm(a, b)  # picks merge here (d ≈ 9.6? check below)
-print("heuristic picked:", Heuristic().choose(a))
+# 3. Multiply. `A @ B` plans once through the engine cache ('auto': the
+#    TuneDB ladder, then the §5.4 heuristic d < 9.35 → merge); an explicit
+#    PlanPolicy forces any registered method — including the row-grouped
+#    variant that registered itself without touching a single dispatch
+#    site (repro/kernels/registry.py).
+c_auto = A @ b
+print("registered methods:", ", ".join(registry.method_names()))
+print("heuristic picked:", Heuristic().choose(A.data))
+want = np.asarray(ref.spmm_dense_ref(A.data, b))
+np.testing.assert_allclose(np.asarray(c_auto), want, rtol=2e-5, atol=2e-5)
+print("auto      matches dense oracle ✓")
 
-# 4. All agree with the dense oracle.
-want = np.asarray(ref.spmm_dense_ref(a, b))
-for name, got in [("rowsplit", c_rowsplit), ("merge", c_merge),
-                  ("auto", c_auto)]:
-    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5, atol=2e-5)
-    print(f"{name:9s} matches dense oracle ✓")
+for method in registry.method_names():
+    c = repro.spmm(A.data, b, PlanPolicy(method=method),
+                   ExecutionConfig(impl="xla"))
+    np.testing.assert_allclose(np.asarray(c), want, rtol=2e-5, atol=2e-5)
+    print(f"{method:9s} matches dense oracle ✓")
+
+# 4. Plan once, execute many: attach the plan, jit, swap values freely —
+#    the pattern (and therefore the plan) is frozen.
+A = A.plan(PlanPolicy(method="merge"))
+fast = jax.jit(lambda mtx, bb: mtx @ bb)
+np.testing.assert_allclose(np.asarray(fast(A, b)), want,
+                           rtol=2e-5, atol=2e-5)
+A2 = A.with_vals(2.0 * A.vals)
+np.testing.assert_allclose(np.asarray(fast(A2, b)), 2 * want,
+                           rtol=2e-5, atol=2e-5)
+print(f"plan-once/execute-many under jit ✓ (method={A.method})")
 
 # 5. Irregular matrices are where the merge kernel shines (Type 1/2 load
 #    imbalance, Fig. 1): every chunk gets exactly T nonzeroes.
 irregular = random_csr(jax.random.PRNGKey(2), 256, 128, nnz_per_row=(0, 24))
 b2 = jax.random.normal(jax.random.PRNGKey(3), (128, 32))
-c2 = spmm(irregular, b2, method="merge")
+c2 = repro.spmm(irregular, b2, PlanPolicy(method="merge"))
 np.testing.assert_allclose(np.asarray(c2),
                            np.asarray(ref.spmm_dense_ref(irregular, b2)),
                            rtol=2e-5, atol=2e-5)

@@ -1,11 +1,13 @@
-"""Pruned-FFN serving via the paper's SpMM (use case §1 [1]).
+"""Pruned-FFN serving via the paper's SpMM (use case §1 [1]), v1 API.
 
-Magnitude-prunes a small LM's MLP weights to CSR and serves the forward
-pass through ``repro.core.spmm`` — the activation matrix is the paper's
-tall-skinny dense B.  Compares pruned vs. dense outputs and reports
-agreement + the kernel each layer's heuristic picked.
+Magnitude-prunes a small LM's MLP weights into ``SparseLinear`` layers
+(each carrying a ``SparseMatrix`` + engine-cached plan) and serves the
+forward pass through the plan-once/execute-many engine — the activation
+matrix is the paper's tall-skinny dense B.  Compares pruned vs. dense
+outputs and reports agreement + the kernel each layer's policy picked.
 
     PYTHONPATH=src python examples/serve_pruned.py --keep 0.25
+    PYTHONPATH=src python examples/serve_pruned.py --smoke   # CI-sized
 """
 import argparse
 
@@ -13,13 +15,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import PlanPolicy
 from repro.configs import get_smoke_config
 from repro.models import layers as L
 from repro.models import model as M
 from repro.models.sparse import prune_mlp, sparse_mlp_apply
 
 
-def forward_with_pruned_mlps(params, cfg, tokens, keep):
+def forward_with_pruned_mlps(params, cfg, tokens, keep, policy=None):
     """Python-loop forward (layers unstacked) with SparseLinear MLPs."""
     h = M.embed_inputs(params, cfg, {"tokens": tokens})
     kinds = []
@@ -32,7 +35,7 @@ def forward_with_pruned_mlps(params, cfg, tokens, keep):
                 attn, _ = L.attention_apply(lp["attn"], hn, cfg)
                 h = h + attn
                 hn2 = L.norm_apply(lp["ln2"], h, cfg.norm)
-                sparse_p = prune_mlp(lp["mlp"], keep)
+                sparse_p = prune_mlp(lp["mlp"], keep, policy=policy)
                 kinds.append({k: v.method for k, v in sparse_p.items()})
                 h = h + sparse_mlp_apply(sparse_p, hn2, cfg)
     h = L.norm_apply(params["final_norm"], h, cfg.norm)
@@ -46,7 +49,14 @@ def main():
     ap.add_argument("--keep", type=float, default=0.25)
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--seq", type=int, default=16)
+    ap.add_argument("--method", default="auto",
+                    help="SpMM method policy for every pruned layer "
+                    "(any registered method; default: auto)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: tiny batch/sequence")
     args = ap.parse_args()
+    if args.smoke:
+        args.batch, args.seq = 1, 8
 
     cfg = get_smoke_config("llama3.2-1b")
     params = M.init_params(cfg, jax.random.PRNGKey(0))
@@ -60,8 +70,9 @@ def main():
     dense_logits = h.astype(jnp.float32) @ M.unembed_matrix(
         params, cfg).T.astype(jnp.float32)
 
-    pruned_logits, kinds = forward_with_pruned_mlps(params, cfg, tokens,
-                                                    args.keep)
+    policy = PlanPolicy(method=args.method)
+    pruned_logits, kinds = forward_with_pruned_mlps(
+        params, cfg, tokens, args.keep, policy=policy)
     d_top = np.asarray(jnp.argmax(dense_logits[:, -1], -1))
     p_top = np.asarray(jnp.argmax(pruned_logits[:, -1], -1))
     agree = float((d_top == p_top).mean())

@@ -19,7 +19,15 @@ def main():
     ap.add_argument("--steps", type=int, default=60)
     ap.add_argument("--preset", choices=["tiny", "100m"], default="tiny")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_tiny_lm")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: a few steps, tiny batch/sequence")
     args = ap.parse_args()
+
+    if args.smoke:
+        return train_mod.main([
+            "--arch", "llama3.2-1b", "--smoke", "--steps", "3",
+            "--global-batch", "2", "--seq-len", "32",
+            "--log-every", "1"])
 
     if args.preset == "100m":
         # ~100M params: 12L × 768d llama-family

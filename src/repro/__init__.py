@@ -1,2 +1,35 @@
-"""repro: merge-spmm (Yang, Buluç, Owens, Euro-Par 2018) on TPU in JAX."""
+"""repro: merge-spmm (Yang, Buluç, Owens, Euro-Par 2018) on TPU in JAX.
+
+The v1 public surface — everything a user needs for plan-once/execute-many
+sparse matmul — is re-exported here:
+
+    import repro
+
+    A = repro.SparseMatrix.from_dense(w)        # CSR + lazily attached plan
+    C = A @ B                                   # engine-cached planning
+    C = repro.spmm(a_csr, B,
+                   repro.PlanPolicy(method="merge"),
+                   repro.ExecutionConfig(impl="xla"))
+    plan = repro.get_plan(a_csr)                # explicit plan handle
+    C = repro.execute_plan(plan, a_csr.vals, B)
+
+``tests/test_api.py`` snapshots this surface: a public name appearing or
+disappearing unannounced fails CI.
+"""
 __version__ = "1.0.0"
+
+from repro.core import (CSR, ExecutionConfig, PlanPolicy, SparseMatrix,
+                        SpmmPlan, execute_plan, spmm)
+from repro.engine import get_plan
+
+__all__ = [
+    "CSR",
+    "ExecutionConfig",
+    "PlanPolicy",
+    "SparseMatrix",
+    "SpmmPlan",
+    "__version__",
+    "execute_plan",
+    "get_plan",
+    "spmm",
+]

@@ -1,12 +1,17 @@
+from .config import (DEFAULT_TUNEDB, ExecutionConfig, PlanPolicy,
+                     ResolvedPlan)
 from .csr import CSR, from_dense, prune_to_csr, random_csr
 from .heuristic import Heuristic, PAPER_THRESHOLD, calibrate
+from .matrix import SparseMatrix
 from .partition import chunk_segments, partition_spmm
 from .plan import PlanMeta, SpmmPlan, build_plan, pattern_fingerprint
 from .spmm import execute_plan, spmm
 
 __all__ = [
+    "DEFAULT_TUNEDB", "ExecutionConfig", "PlanPolicy", "ResolvedPlan",
     "CSR", "from_dense", "prune_to_csr", "random_csr",
     "Heuristic", "PAPER_THRESHOLD", "calibrate",
+    "SparseMatrix",
     "chunk_segments", "partition_spmm",
     "PlanMeta", "SpmmPlan", "build_plan", "pattern_fingerprint",
     "execute_plan", "spmm",

@@ -1,0 +1,177 @@
+"""``SparseMatrix``: the v1 user-facing sparse-matrix frontend.
+
+A thin, pytree-registered wrapper pairing a CSR pattern+values with its
+lazily attached execution plan:
+
+    A = SparseMatrix.from_dense(w)            # or .from_csr(csr)
+    C = A @ B                                 # plans via the engine cache
+    A = A.plan(PlanPolicy(method="merge"))    # pin the plan explicitly
+    C = jax.jit(lambda A, B: A @ B)(A, B)     # jit-safe once planned
+    A2 = A.with_vals(new_vals)                # same pattern, same plan
+
+``A @ B`` with a concrete, un-planned matrix resolves through the engine
+cache (so repeated multiplies never replan); under jit the plan must be
+attached beforehand — plans are host-side artifacts.  ``with_vals`` is
+the sparse-fine-tuning parameterization: the pattern (and therefore the
+plan) is frozen while values are the degrees of freedom, which is why the
+plan survives the value swap.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+
+from .config import ExecutionConfig, PlanPolicy
+from .csr import CSR, from_dense as _csr_from_dense, prune_to_csr
+from .plan import SpmmPlan
+from .spmm import _is_traced, execute_plan
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseMatrix:
+    """CSR pattern + values + (lazily attached) execution plan."""
+
+    data: CSR
+    spmm_plan: Optional[SpmmPlan] = None
+
+    def __post_init__(self):
+        p = self.spmm_plan
+        if p is not None and (p.meta.shape != self.data.shape or
+                              p.meta.nnz_pad != self.data.nnz_pad):
+            raise ValueError(
+                f"plan was built for pattern {p.meta.shape} "
+                f"(nnz_pad={p.meta.nnz_pad}) but the matrix is "
+                f"{self.data.shape} (nnz_pad={self.data.nnz_pad})")
+
+    # ------------------------------------------------------ constructors ---
+
+    @classmethod
+    def from_csr(cls, csr: CSR,
+                 policy: Optional[PlanPolicy] = None) -> "SparseMatrix":
+        """Wrap a CSR; with ``policy`` given, attach its plan eagerly."""
+        mtx = cls(csr)
+        return mtx.plan(policy) if policy is not None else mtx
+
+    @classmethod
+    def from_dense(cls, dense, nnz_pad: Optional[int] = None,
+                   policy: Optional[PlanPolicy] = None) -> "SparseMatrix":
+        return cls.from_csr(_csr_from_dense(dense, nnz_pad), policy)
+
+    @classmethod
+    def prune(cls, w, keep_fraction: float,
+              policy: Optional[PlanPolicy] = None) -> "SparseMatrix":
+        """Magnitude-prune a dense weight (top ``keep_fraction`` per row)."""
+        return cls.from_csr(prune_to_csr(w, keep_fraction), policy)
+
+    # ----------------------------------------------------------- pattern ---
+
+    @property
+    def shape(self):
+        return self.data.shape
+
+    @property
+    def m(self) -> int:
+        return self.data.m
+
+    @property
+    def k(self) -> int:
+        return self.data.k
+
+    @property
+    def vals(self) -> jax.Array:
+        return self.data.vals
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    @property
+    def nnz_pad(self) -> int:
+        return self.data.nnz_pad
+
+    def nnz(self):
+        return self.data.nnz()
+
+    @property
+    def method(self) -> Optional[str]:
+        """The planned kernel method, or None while un-planned."""
+        return self.spmm_plan.meta.method if self.spmm_plan else None
+
+    def to_dense(self) -> jax.Array:
+        return self.data.to_dense()
+
+    # ------------------------------------------------------------- plans ---
+
+    def plan(self, policy: Optional[PlanPolicy] = None) -> "SparseMatrix":
+        """Attach the engine-cached plan for this pattern (host-side).
+
+        Identity-cheap when the pattern's plan is already cached; the
+        returned matrix is jit-safe (``A @ B`` under trace executes the
+        attached plan and never replans).
+        """
+        from repro.engine import get_plan
+        return dataclasses.replace(
+            self, spmm_plan=get_plan(self.data,
+                                     policy=policy or PlanPolicy()))
+
+    def plan_like(self, meta) -> "SparseMatrix":
+        """Re-plan replaying an existing plan's full statics.
+
+        Preserves the method *and* tuned parameters (a TuneDB-tuned
+        ``l_pad`` survives a checkpoint restore).  If a pattern-derived
+        parameter no longer fits this matrix's pattern — pattern surgery
+        lengthened a row past the old pad — fall back to the method
+        alone and re-derive the rest, as a fresh plan request would.
+        """
+        try:
+            return self.plan(PlanPolicy.from_meta(meta))
+        except ValueError:
+            return self.plan(PlanPolicy(
+                method=meta.method, with_transpose=meta.has_transpose))
+
+    def with_vals(self, vals: jax.Array) -> "SparseMatrix":
+        """Rebind values onto the frozen pattern — the plan survives."""
+        return dataclasses.replace(
+            self, data=dataclasses.replace(self.data, vals=vals))
+
+    # --------------------------------------------------------- execution ---
+
+    def matmul(self, b: jax.Array, exec: Optional[ExecutionConfig] = None,
+               **legacy) -> jax.Array:
+        """C = A @ B (``b`` (..., k, n) → (..., m, n)), differentiable.
+
+        ``legacy`` forwards pre-v1 ``impl``/``interpret``/``tk`` kwargs to
+        the ``execute_plan`` deprecation shims.
+        """
+        plan = self.spmm_plan
+        if plan is None:
+            if _is_traced(self.data):
+                raise ValueError(
+                    "A @ B under jit needs the plan attached beforehand: "
+                    "call A = A.plan() (or engine.get_plan) outside jit — "
+                    "SparseMatrix is a pytree, so the planned matrix "
+                    "passes through jit boundaries unchanged.")
+            from repro.engine import get_plan
+            plan = get_plan(self.data)
+        return execute_plan(plan, self.data.vals, b, exec, **legacy)
+
+    def __matmul__(self, b) -> jax.Array:
+        return self.matmul(b)
+
+
+def _unflatten(aux, children):
+    # Bypass __post_init__: transformations may unflatten with placeholder
+    # leaves that carry no shape metadata.
+    sm = object.__new__(SparseMatrix)
+    object.__setattr__(sm, "data", children[0])
+    object.__setattr__(sm, "spmm_plan", children[1])
+    return sm
+
+
+jax.tree_util.register_pytree_node(
+    SparseMatrix,
+    lambda sm: ((sm.data, sm.spmm_plan), ()),
+    _unflatten,
+)

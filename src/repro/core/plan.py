@@ -7,10 +7,14 @@ the lifetime of the model — even that planning cost should be paid once,
 not once per jitted call.  ``SpmmPlan`` captures everything derived from
 the pattern:
 
-* the forward execute structure (merge chunk layout or row-split ELL
-  layout, including the static ``l_pad`` for row-split),
-* the kernel choice (the §5.4 heuristic evaluated *statically at plan-build
-  time*, so jitted code never host-syncs on a method decision),
+* the forward execute structure — built by the resolved method's
+  registered ``build_structure`` hook (``repro.kernels.registry``): merge
+  chunk layout, row-split ELL layout (with its static ``l_pad``),
+  row-grouped per-bucket ELL blocks, or whatever a registered method
+  defines (method-specific statics land in ``PlanMeta.extra``),
+* the kernel choice (``PlanPolicy.resolve``: the TuneDB ladder and the
+  §5.4 heuristic evaluated *statically at plan-build time*, so jitted
+  code never host-syncs on a method decision),
 * per-nonzero (row, col) coordinates for the values-cotangent SDDMM, and
 * a *transpose plan*: the same merge-based equal-nonzero balancing applied
   to the CSC view of A, so the backward ``dB = Aᵀ @ dC`` inherits the
@@ -43,13 +47,15 @@ from .heuristic import Heuristic
 class PlanMeta:
     """Static (hashable) metadata of an SpmmPlan — safe as a jit constant."""
 
-    method: str                  # "merge" | "rowsplit"
+    method: str                  # a registered method name (e.g. "merge")
     shape: Tuple[int, int]       # (m, k) of A
     nnz_pad: int                 # static nonzero capacity
     t: int                       # merge: nonzeroes per chunk
     tl: int                      # rowsplit: nonzeroes per row batch
     l_pad: Optional[int]         # rowsplit: static max row length
     has_transpose: bool          # backward (CSC-view) plan present
+    extra: tuple = ()            # method-specific statics (hashable), e.g.
+                                 # rowgroup's ((m_g, l_g), ...) group table
 
     @property
     def m(self) -> int:
@@ -131,88 +137,74 @@ def _compose_slots(slot_nz: jax.Array, perm: jax.Array,
     return perm_ext[slot_nz]
 
 
+def _policy_from_kwargs(policy, method, heuristic, t, tl, l_pad,
+                        with_transpose, tunedb):
+    """Unify the explicit-kwarg and PlanPolicy spellings of a request."""
+    from .config import PlanPolicy
+
+    if policy is not None:
+        if (method, heuristic, t, tl, l_pad, tunedb) != \
+                ("auto", None, None, None, None, None) or not with_transpose:
+            raise ValueError(
+                "pass either policy= or the explicit method/heuristic/t/tl/"
+                "l_pad/tunedb/with_transpose kwargs, not both")
+        return policy
+    return PlanPolicy(method=method, heuristic=heuristic, t=t, tl=tl,
+                      l_pad=l_pad, tunedb=tunedb,
+                      with_transpose=with_transpose)
+
+
 def resolve_static(a: CSR, *, method: str = "auto",
                    heuristic: Heuristic | None = None,
                    t: int | None = None, tl: int | None = None,
-                   l_pad: int | None = None, tunedb=None):
+                   l_pad: int | None = None, tunedb=None, policy=None):
     """Pin down every pattern-static decision of a plan request.
 
-    Returns ``(method, t, tl, l_pad)`` fully resolved: ``auto`` resolves
-    the method — through the empirical ``tunedb`` when given (exact
-    pattern hit, then binned pattern-class hit, each replaying measured
-    winners; see ``repro.tune.db``), then the §5.4 analytic heuristic
-    (DB-calibrated threshold when available) — an omitted rowsplit
-    ``l_pad`` becomes the pattern's max row length, omitted tile sizes
-    become kernel defaults, and merge normalizes ``l_pad`` to None.  All
-    host-side, never inside jit.  Single source of truth for
+    Legacy spelling of ``PlanPolicy.resolve`` (``repro.core.config``):
+    returns ``(method, t, tl, l_pad)`` fully resolved — ``auto`` goes
+    through the TuneDB ladder (exact → class → calibrated threshold) and
+    then the method registry's heuristic cost hooks; per-method parameter
+    defaults and validation (e.g. the rowsplit ``l_pad`` silent-truncation
+    guard) come from each method's registered ``resolve_params`` hook.
+    All host-side, never inside jit.  Single source of truth for
     ``build_plan`` and the engine cache key — they can never disagree.
     """
-    merge_k, rowsplit_k = _kernels()
-    _require_concrete(a, "resolve_static")
-    if method == "auto" and tunedb is not None:
-        rec = tunedb.lookup_exact(pattern_fingerprint(a))
-        if rec is not None:
-            # Exact hit: replay the measured winner and its tuned params.
-            method = rec.method
-            t = rec.t if t is None else t
-            l_pad = rec.l_pad if l_pad is None else l_pad
-        else:
-            cls_method, _ = tunedb.resolve(a)
-            if cls_method is not None:
-                method = cls_method
-            elif heuristic is None:
-                heuristic = tunedb.heuristic()   # calibrated threshold
-    heuristic = heuristic or Heuristic()
-    t = merge_k.DEFAULT_T if t is None else t
-    tl = rowsplit_k.DEFAULT_TL if tl is None else tl
-    if method == "auto":
-        method = heuristic.choose(a)
-    if method not in ("merge", "rowsplit"):
-        raise ValueError(f"unknown SpMM method: {method!r}")
-    if method == "rowsplit":
-        lengths = np.diff(np.asarray(a.row_ptr))
-        max_len = int(lengths.max()) if lengths.size else 0
-        if l_pad is None:
-            l_pad = max(max_len, 1)
-        elif l_pad < max_len:
-            # An undersized pad would make plan_rowsplit_structure's ELL
-            # mask silently truncate long rows — wrong C, no error.  The
-            # pattern is concrete here, so validate at the single choke
-            # point every plan request (user kwargs, TuneDB replays, the
-            # engine cache) funnels through.
-            raise ValueError(
-                f"l_pad={l_pad} is smaller than the pattern's longest row "
-                f"({max_len} nonzeroes): the row-split ELL layout would "
-                "silently drop nonzeroes and return a wrong C. Pass "
-                f"l_pad >= {max_len}, or omit l_pad to derive it from the "
-                "pattern.")
-    if method == "merge":
-        l_pad = None
-    return method, t, tl, l_pad
+    policy = _policy_from_kwargs(policy, method, heuristic, t, tl, l_pad,
+                                 True, tunedb)
+    r = policy.resolve(a)
+    return r.method, r.t, r.tl, r.l_pad
 
 
 def build_plan(a: CSR, *, method: str = "auto",
                heuristic: Heuristic | None = None,
                t: int | None = None, tl: int | None = None,
                l_pad: int | None = None,
-               with_transpose: bool = True, tunedb=None) -> SpmmPlan:
+               with_transpose: bool = True, tunedb=None,
+               policy=None, _resolved=None) -> SpmmPlan:
     """Build an SpmmPlan from a concrete CSR (once per sparsity pattern).
 
-    ``method="auto"`` resolves the kernel choice here — via the empirical
-    ``tunedb`` when given, else the paper's §5.4 heuristic — a static
-    decision captured in the plan, so execution never host-syncs on it.
-    ``with_transpose`` additionally builds the CSC-view merge plan that
-    powers the ``dB`` backward pass; forward-only callers can skip it.
+    The request — a ``PlanPolicy`` or the equivalent explicit kwargs —
+    resolves through ``PlanPolicy.resolve`` (TuneDB ladder, registry cost
+    hooks, per-method parameter validation), a static decision captured in
+    the plan so execution never host-syncs on it.  The plan structure
+    itself comes from the resolved method's registered ``build_structure``
+    hook.  ``with_transpose`` additionally builds the CSC-view merge plan
+    that powers the ``dB`` backward pass; forward-only callers can skip it.
     """
-    merge_k, rowsplit_k = _kernels()
+    from repro.kernels import registry
+
+    merge_k, _ = _kernels()
     _require_concrete(a, "build_plan")
-    method, t, tl, l_pad = resolve_static(
-        a, method=method, heuristic=heuristic, t=t, tl=tl, l_pad=l_pad,
-        tunedb=tunedb)
-    if method == "merge":
-        fwd = dict(merge_k.plan_merge_structure(a, t=t))
-    else:
-        fwd = dict(rowsplit_k.plan_rowsplit_structure(a, l_pad=l_pad, tl=tl))
+    policy = _policy_from_kwargs(policy, method, heuristic, t, tl, l_pad,
+                                 with_transpose, tunedb)
+    # ``_resolved``: a ResolvedPlan the caller (the engine cache) already
+    # computed for this exact request — skips re-running the ladder and
+    # per-method derivation (e.g. rowgroup's host-side bucketing).
+    r = _resolved if _resolved is not None else policy.resolve(a)
+    meta = PlanMeta(method=r.method, shape=a.shape, nnz_pad=a.nnz_pad,
+                    t=r.t, tl=r.tl, l_pad=r.l_pad,
+                    has_transpose=policy.with_transpose, extra=r.extra)
+    fwd = dict(registry.get_method(r.method).build_structure(a, meta))
 
     # Per-nonzero coordinates for the SDDMM values-cotangent (in-bounds
     # everywhere; validity carried separately).
@@ -226,15 +218,14 @@ def build_plan(a: CSR, *, method: str = "auto",
     fwd["nz_valid"] = jnp.asarray(np.arange(nnz_pad) < nnz)
 
     bwd = None
-    if with_transpose:
+    if policy.with_transpose:
         a_t, perm = transpose_pattern(a)
-        bwd = dict(merge_k.plan_merge_structure(a_t, t=t))
+        # The backward dB = Aᵀ @ dC always runs merge-based: equal-nonzero
+        # balancing on the CSC view, independent of the forward method.
+        bwd = dict(merge_k.plan_merge_structure(a_t, t=r.t))
         # Backward slots index *original* vals: compose chunk slots with the
         # transpose permutation once, at build time.
         bwd["slot_nz"] = _compose_slots(bwd["slot_nz"], perm, nnz_pad)
-
-    meta = PlanMeta(method=method, shape=a.shape, nnz_pad=nnz_pad, t=t,
-                    tl=tl, l_pad=l_pad, has_transpose=with_transpose)
     return SpmmPlan(fwd=fwd, bwd=bwd, meta=meta)
 
 

@@ -1,15 +1,26 @@
-"""Public SpMM API: the paper's multi-algorithm with heuristic dispatch,
-now plan-once/execute-many, batched, and differentiable.
+"""Public SpMM API (v1): registry-dispatched, plan-once/execute-many,
+batched, and differentiable.
 
-    C = spmm(A, B)                  # auto: paper §5.4 heuristic
-    C = spmm(A, B, method="merge")  # force merge-based  (paper §4.2)
-    C = spmm(A, B, method="rowsplit", l_pad=64)  # force row-split (§4.1)
+    C = spmm(A, B)                            # auto: TuneDB ladder → §5.4
+    C = spmm(A, B, PlanPolicy(method="merge"))         # force a method
+    C = spmm(A, B, exec=ExecutionConfig(impl="xla"))   # pick the backend
 
-    plan = repro.engine.get_plan(A)          # once per sparsity pattern
-    C = spmm(A, B, plan=plan)                # jit-safe, never replans
-    C = execute_plan(plan, A.vals, B)        # the explicit-plan core
-    C = execute_plan(plan, A.vals, Bs)       # Bs (batch, k, n): one plan,
-                                             # many problems, one dispatch
+    plan = repro.engine.get_plan(A)           # once per sparsity pattern
+    C = spmm(A, B, plan=plan)                 # jit-safe, never replans
+    C = execute_plan(plan, A.vals, B)         # the explicit-plan core
+    C = execute_plan(plan, A.vals, Bs)        # Bs (batch, k, n): one plan,
+                                              # many problems, one dispatch
+
+The two halves of the old kwarg sprawl are split by lifetime:
+``PlanPolicy`` (method/t/l_pad/heuristic/tunedb — decided once per
+pattern, host-side, hashed into the engine cache key) and
+``ExecutionConfig`` (impl/interpret/tk — per call, trace-safe).  The
+pre-v1 kwargs survive as deprecation shims for one release.  Method
+dispatch — including the inline plan-per-call path — goes through the
+method registry (``repro.kernels.registry``), and ``method="auto"``
+resolves through one ``PlanPolicy.resolve`` for both the planned and the
+inline path, so the two can never pick different kernels for the same
+matrix.
 
 With a concrete (non-traced) CSR, ``spmm`` routes through the engine's
 plan cache automatically.  Either way execution is differentiable via
@@ -21,11 +32,11 @@ pattern (``repro.kernels.sddmm``).
 Batching is first-class in two equivalent forms: pass ``B`` with leading
 batch dims (``(..., k, n)``, folded into the kernels' batch grid axis) or
 ``jax.vmap`` the 2-D call — the custom-VJP's forward/backward bodies call
-the ``custom_vmap``-wrapped ops (``repro.kernels.ops.*_op``), whose
-explicit vmap rule rewrites a vmapped axis onto that same native batch
-path.  Values are shared across the batch (one frozen pattern, one value
-vector, many dense operands — the serving regime), so the batched VJP
-reduces the values-cotangent over the batch dims.
+``custom_vmap``-wrapped ops (``registry.execute_op``), whose explicit vmap
+rule rewrites a vmapped axis onto that same native batch path.  Values are
+shared across the batch (one frozen pattern, one value vector, many dense
+operands — the serving regime), so the batched VJP reduces the
+values-cotangent over the batch dims.
 """
 from __future__ import annotations
 
@@ -34,11 +45,10 @@ import functools
 import jax
 import numpy as np
 
+from .config import (ExecutionConfig, PlanPolicy, _UNSET, coalesce_exec,
+                     coalesce_policy)
 from .csr import CSR
-from .heuristic import Heuristic
 from .plan import SpmmPlan, PlanMeta
-
-_DEFAULT_HEURISTIC = Heuristic()
 
 
 def _ops():
@@ -46,6 +56,11 @@ def _ops():
     # eager import here would be circular
     from repro.kernels import ops
     return ops
+
+
+def _registry():
+    from repro.kernels import registry
+    return registry
 
 
 def _is_traced(a: CSR) -> bool:
@@ -58,18 +73,11 @@ def _is_traced(a: CSR) -> bool:
 
 def _forward(meta: PlanMeta, fwd: dict, vals, b, interpret, impl, tk, *,
              vmappable: bool):
-    ops = _ops()
-    if meta.method == "merge":
-        if vmappable:
-            return ops.merge_execute_op(meta.m, tk, interpret, impl)(
-                fwd, vals, b)
-        return ops.merge_execute(fwd, vals, b, m=meta.m, tk=tk,
-                                 interpret=interpret, impl=impl)
+    registry = _registry()
     if vmappable:
-        return ops.rowsplit_execute_op(meta.m, meta.tl, tk, interpret, impl)(
-            fwd, vals, b)
-    return ops.rowsplit_execute(fwd, vals, b, m=meta.m, tl=meta.tl, tk=tk,
-                                interpret=interpret, impl=impl)
+        return registry.execute_op(meta, tk, interpret, impl)(fwd, vals, b)
+    return registry.get_method(meta.method).execute(
+        meta, fwd, vals, b, tk=tk, interpret=interpret, impl=impl)
 
 
 def _int_zeros(tree):
@@ -112,21 +120,24 @@ def _execute_vjp_bwd(meta, interpret, impl, tk, res, dc):
 _execute_vjp.defvjp(_execute_vjp_fwd, _execute_vjp_bwd)
 
 
-def execute_plan(plan: SpmmPlan, vals: jax.Array, b: jax.Array, *,
-                 interpret: bool | None = None,
-                 impl: str = "pallas", tk: int | None = None) -> jax.Array:
+def execute_plan(plan: SpmmPlan, vals: jax.Array, b: jax.Array,
+                 exec: ExecutionConfig | None = None, *,
+                 interpret=_UNSET, impl=_UNSET, tk=_UNSET) -> jax.Array:
     """Execute a prebuilt plan: C = A @ B with A's values given per call.
 
     Trace-safe (every static decision was captured at plan build) and
     differentiable in ``vals`` and ``b`` when the plan carries its
     transpose (``build_plan(..., with_transpose=True)``, the default).
 
-    ``b`` may carry leading batch dims — ``(..., k, n) → (..., m, n)`` runs
-    the whole stack through one kernel dispatch with shared values, and
-    ``jax.vmap`` over the 2-D form lowers to the same batched path.  ``tk``
-    caps the K-tile of the streamed B panel (None: whole ``k`` up to
-    ``kernels.merge_spmm.DEFAULT_TK_MAX`` — VMEM-bounded at any ``d_in``).
+    ``exec`` is the per-call :class:`ExecutionConfig` (implementation,
+    interpret mode, K-tile cap); the bare ``interpret``/``impl``/``tk``
+    kwargs are pre-v1 shims that warn once.  ``b`` may carry leading batch
+    dims — ``(..., k, n) → (..., m, n)`` runs the whole stack through one
+    kernel dispatch with shared values, and ``jax.vmap`` over the 2-D form
+    lowers to the same batched path.
     """
+    exec = coalesce_exec("execute_plan", exec, impl=impl,
+                         interpret=interpret, tk=tk)
     # Static shape guards: gathers clamp out-of-bounds indices silently, so
     # a stale plan would otherwise produce garbage instead of an error.
     if vals.shape != (plan.meta.nnz_pad,):
@@ -141,17 +152,17 @@ def execute_plan(plan: SpmmPlan, vals: jax.Array, b: jax.Array, *,
     if plan.bwd is None:
         # Forward-only plan: plain ops (keeps ordinary XLA autodiff for
         # impl="xla" callers; build with a transpose for vmap support).
-        return _forward(plan.meta, plan.fwd, vals, b, interpret, impl, tk,
-                        vmappable=False)
-    return _execute_vjp(plan.meta, interpret, impl, tk, plan.fwd, plan.bwd,
-                        vals, b)
+        return _forward(plan.meta, plan.fwd, vals, b, exec.interpret,
+                        exec.impl, exec.tk, vmappable=False)
+    return _execute_vjp(plan.meta, exec.interpret, exec.impl, exec.tk,
+                        plan.fwd, plan.bwd, vals, b)
 
 
 # ------------------------------------------------------------ public API ---
 
 
-def _check_plan_overrides(plan: SpmmPlan, method: str, t, l_pad) -> None:
-    """Raise on explicit kwargs that contradict the supplied plan's statics.
+def _check_plan_overrides(plan: SpmmPlan, policy: PlanPolicy) -> None:
+    """Raise on an explicit policy that contradicts the supplied plan.
 
     A plan's method/t/l_pad were fixed at build time; silently ignoring a
     conflicting override would execute something other than what the call
@@ -159,12 +170,14 @@ def _check_plan_overrides(plan: SpmmPlan, method: str, t, l_pad) -> None:
     """
     meta = plan.meta
     conflicts = []
-    if method != "auto" and method != meta.method:
-        conflicts.append(f"method={method!r} (plan: {meta.method!r})")
-    if t is not None and t != meta.t:
-        conflicts.append(f"t={t} (plan: {meta.t})")
-    if l_pad is not None and l_pad != meta.l_pad:
-        conflicts.append(f"l_pad={l_pad} (plan: {meta.l_pad})")
+    if policy.method != "auto" and policy.method != meta.method:
+        conflicts.append(f"method={policy.method!r} (plan: {meta.method!r})")
+    if policy.t is not None and policy.t != meta.t:
+        conflicts.append(f"t={policy.t} (plan: {meta.t})")
+    if policy.tl is not None and policy.tl != meta.tl:
+        conflicts.append(f"tl={policy.tl} (plan: {meta.tl})")
+    if policy.l_pad is not None and policy.l_pad != meta.l_pad:
+        conflicts.append(f"l_pad={policy.l_pad} (plan: {meta.l_pad})")
     if conflicts:
         raise ValueError(
             "spmm() overrides conflict with the supplied plan's static "
@@ -173,37 +186,47 @@ def _check_plan_overrides(plan: SpmmPlan, method: str, t, l_pad) -> None:
             "repro.engine.get_plan) or drop the overrides.")
 
 
-def spmm(a: CSR, b: jax.Array, *, method: str = "auto",
-         l_pad: int | None = None, t: int | None = None,
-         heuristic: Heuristic | None = None,
-         interpret: bool | None = None, impl: str = "pallas",
-         tk: int | None = None,
-         plan: SpmmPlan | str | None = None) -> jax.Array:
+def spmm(a: CSR, b: jax.Array, policy: PlanPolicy | None = None,
+         exec: ExecutionConfig | None = None, *,
+         plan: SpmmPlan | str | None = None,
+         method=_UNSET, l_pad=_UNSET, t=_UNSET, heuristic=_UNSET,
+         interpret=_UNSET, impl=_UNSET, tk=_UNSET) -> jax.Array:
     """Sparse(CSR) × dense = dense.  ``b`` is (..., k, n); returns (..., m, n).
+
+    ``policy`` (a :class:`PlanPolicy`) holds every pattern-static decision
+    — method, static kernel parameters, heuristic/TuneDB — and ``exec``
+    (an :class:`ExecutionConfig`) the per-call backend knobs.  The bare
+    ``method``/``l_pad``/``t``/``heuristic``/``interpret``/``impl``/``tk``
+    kwargs are pre-v1 shims: they still work (warning once per process)
+    but raise when combined with ``policy``/``exec``.
 
     Dispatch on ``plan``:
 
     * an ``SpmmPlan`` — execute it (jit-safe; ``a`` supplies only values).
-      Explicit ``method``/``t``/``l_pad`` overrides must agree with the
-      plan's statics — conflicts raise instead of being silently ignored.
+      An explicit ``policy`` must agree with the plan's statics —
+      conflicts raise instead of being silently ignored.
     * ``None`` (default) with concrete ``a`` — look up / build the
       pattern's plan in the engine cache, then execute.  Repeated calls
       with the same pattern (any values) never replan.
     * ``None`` with traced ``a``, or the string ``"inline"`` — plan inside
       the traced computation, every call (the paper's original per-call
-      regime; benchmarks time it deliberately).  Requires an explicit
-      ``method`` under trace — the heuristic is a host-side decision.
+      regime; benchmarks time it deliberately).  With a concrete ``a``
+      the method and its parameters resolve through the same
+      ``PlanPolicy.resolve`` as the planned path (TuneDB ladder included);
+      under trace an explicit method is required — resolution is a
+      host-side decision.
     """
+    policy = coalesce_policy("spmm", policy, method=method, t=t,
+                             l_pad=l_pad, heuristic=heuristic)
+    exec = coalesce_exec("spmm", exec, impl=impl, interpret=interpret,
+                         tk=tk)
     if isinstance(plan, SpmmPlan):
-        _check_plan_overrides(plan, method, t, l_pad)
-        return execute_plan(plan, a.vals, b, interpret=interpret, impl=impl,
-                            tk=tk)
+        _check_plan_overrides(plan, policy)
+        return execute_plan(plan, a.vals, b, exec)
     if plan is None and not _is_traced(a):
         from repro.engine import get_plan
-        built = get_plan(a, method=method, t=t, l_pad=l_pad,
-                         heuristic=heuristic)
-        return execute_plan(built, a.vals, b, interpret=interpret, impl=impl,
-                            tk=tk)
+        built = get_plan(a, policy=policy)
+        return execute_plan(built, a.vals, b, exec)
     if plan not in (None, "inline"):
         raise ValueError(f"plan must be an SpmmPlan, None, or 'inline'; "
                          f"got {plan!r}")
@@ -212,18 +235,28 @@ def spmm(a: CSR, b: jax.Array, *, method: str = "auto",
             "the inline (plan-per-call) spmm path takes a 2-D B; batched "
             f"B {b.shape} needs a prebuilt plan — repro.engine.get_plan(a) "
             "— whose execution folds the batch into the kernel grid.")
-    if method == "auto" and not _is_traced(a):
-        method = (heuristic or _DEFAULT_HEURISTIC).choose(a)
-    if method == "auto":
+    registry = _registry()
+    m_name, t_val, tl_val, l_val = (policy.method, policy.t, policy.tl,
+                                    policy.l_pad)
+    extra = None
+    if not _is_traced(a):
+        # One resolution for both regimes: the inline path consults the
+        # same TuneDB ladder / heuristic / parameter validation as the
+        # planned path, so the two can never pick different kernels for
+        # the same matrix.
+        r = policy.resolve(a)
+        m_name, t_val, tl_val, l_val = r.method, r.t, r.tl, r.l_pad
+        extra = r.extra
+    elif m_name == "auto":
         raise ValueError(
             "spmm(method='auto') on a traced CSR would need a host-side "
             "heuristic decision per call. Build a plan outside jit "
             "(repro.engine.get_plan) — the kernel choice is captured "
-            "statically at plan-build time — or pass method= explicitly.")
-    if method == "merge":
-        return _ops().merge_spmm(a, b, t=t, tk=tk, interpret=interpret,
-                                 impl=impl)
-    if method == "rowsplit":
-        return _ops().rowsplit_spmm(a, b, l_pad=l_pad, tk=tk,
-                                    interpret=interpret, impl=impl)
-    raise ValueError(f"unknown SpMM method: {method!r}")
+            "statically at plan-build time — or pass an explicit method.")
+    spec = registry.get_method(m_name)
+    if spec.inline is None:
+        raise ValueError(
+            f"SpMM method {m_name!r} has no inline (plan-per-call) form; "
+            "build a plan instead: repro.engine.get_plan(a, policy=...)")
+    return spec.inline(a, b, t=t_val, tl=tl_val, l_pad=l_val, extra=extra,
+                       tk=exec.tk, interpret=exec.interpret, impl=exec.impl)

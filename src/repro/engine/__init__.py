@@ -1,14 +1,16 @@
 """Plan-once / execute-many SpMM engine.
 
     plan = repro.engine.get_plan(a)            # cached per pattern
-    c = repro.core.spmm(a, b, plan=plan)       # never replans, jit-safe
+    plan = repro.engine.get_plan(a, repro.PlanPolicy(method="rowgroup"))
+    c = repro.spmm(a, b, plan=plan)            # never replans, jit-safe
 
     engine.load_tunedb("tune.json")            # measured kernel selection
     plan = repro.engine.get_plan(a)            # exact/class/threshold
 
-See ``repro.core.plan`` for what a plan holds, ``engine.cache`` for the
-LRU keyed on pattern fingerprints, and ``repro.tune`` for building the
-TuneDB that replaces the analytic heuristic with measurements.
+See ``repro.core.plan`` for what a plan holds, ``repro.core.config`` for
+``PlanPolicy`` (the plan request object), ``engine.cache`` for the LRU
+keyed on pattern fingerprints, and ``repro.tune`` for building the TuneDB
+that replaces the analytic heuristic with measurements.
 """
 from .cache import (CacheStats, PlanCache, cache_stats, clear_cache,
                     current_tunedb, default_cache, get_plan, load_tunedb,

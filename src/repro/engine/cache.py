@@ -19,15 +19,15 @@ import dataclasses
 import threading
 from collections import OrderedDict
 
+from repro.core.config import (DEFAULT_TUNEDB, PlanPolicy, _UNSET,
+                               _warn_deprecated)
 from repro.core.csr import CSR
-from repro.core.heuristic import Heuristic
-from repro.core.plan import (SpmmPlan, build_plan, pattern_fingerprint,
-                             resolve_static)
+from repro.core.plan import SpmmPlan, build_plan, pattern_fingerprint
 
 DEFAULT_MAXSIZE = 256
 
-# Sentinel: "no tunedb argument given — use the process default".
-_USE_DEFAULT = object()
+# Legacy sentinel: "no tunedb argument given — use the process default".
+_USE_DEFAULT = DEFAULT_TUNEDB
 
 # Process-wide empirical tuning database (repro.tune.TuneDB).  When set,
 # every "auto" plan request resolves its method through measurements
@@ -104,34 +104,55 @@ class PlanCache:
             self._stats.alias_evictions += 1
         self._stats.aliases = len(self._aliases)
 
-    def get(self, a: CSR, *, method: str = "auto",
-            heuristic: Heuristic | None = None, t: int | None = None,
-            tl: int | None = None, l_pad: int | None = None,
-            with_transpose: bool = True,
+    def get(self, a: CSR, policy: PlanPolicy | None = None, *,
+            method=_UNSET, heuristic=_UNSET, t=_UNSET, tl=_UNSET,
+            l_pad=_UNSET, with_transpose=_UNSET,
             tunedb=_USE_DEFAULT) -> SpmmPlan:
         """Cached ``build_plan`` — the engine's plan-once entry point.
 
-        Canonical keys pin down the static decisions through the same
-        ``resolve_static`` that ``build_plan`` uses, so "auto" and its
+        The request is a :class:`PlanPolicy` (the bare kwargs remain as a
+        pre-v1 spelling and fold into one; mixing both raises).  Canonical
+        keys pin down the static decisions through the same
+        ``PlanPolicy.resolve`` that ``build_plan`` uses, so "auto" and its
         resolved form share one entry and key/plan can never disagree.
         A raw-request alias map makes repeated identical requests O(1):
         neither the heuristic's host read nor the l_pad scan reruns on a
         hit (the fingerprint itself is memoized per CSR object).
 
-        ``tunedb`` (default: the process-wide DB from ``set_tunedb``)
-        resolves "auto" methods from measurements; its content digest is
-        part of the raw key, so swapping databases can never serve a plan
-        resolved against the old one (explicit ``tunedb=None`` opts out).
+        ``policy.tunedb`` (default: the process-wide DB from
+        ``set_tunedb``) resolves "auto" methods from measurements; its
+        content digest is part of the raw key, so swapping databases can
+        never serve a plan resolved against the old one (explicit
+        ``tunedb=None`` opts out).
         """
-        if tunedb is _USE_DEFAULT:
-            tunedb = _default_tunedb
-        if method == "auto":
-            hkey = (heuristic.threshold if heuristic is not None else None,
-                    tunedb.digest() if tunedb is not None else None)
+        legacy = {k: v for k, v in dict(
+            method=method, heuristic=heuristic, t=t, tl=tl, l_pad=l_pad,
+            with_transpose=with_transpose).items() if v is not _UNSET}
+        if tunedb is not _USE_DEFAULT:
+            legacy["tunedb"] = tunedb
+        if legacy:
+            if policy is not None:
+                raise ValueError(
+                    "PlanCache.get: pass either policy= or the bare kwargs "
+                    f"{sorted(legacy)}, not both")
+            for k in legacy:
+                _warn_deprecated(
+                    f"PlanCache.get({k}=...)",
+                    f"pass policy=PlanPolicy({k}=...) "
+                    "(see README.md: Migrating to API v1)", stacklevel=3)
+            policy = PlanPolicy(**legacy)
+        elif policy is None:
+            policy = PlanPolicy()
+        db = policy.resolved_tunedb()
+        if policy.method == "auto":
+            hkey = (policy.heuristic.threshold
+                    if policy.heuristic is not None else None,
+                    db.digest() if db is not None else None)
         else:
             hkey = None
-        raw = (pattern_fingerprint(a), a.shape, a.nnz_pad, method, hkey,
-               t, tl, l_pad, with_transpose)
+        raw = (pattern_fingerprint(a), a.shape, a.nnz_pad, policy.method,
+               hkey, policy.t, policy.tl, policy.l_pad,
+               policy.with_transpose)
         with self._lock:
             canonical = self._aliases.get(raw)
             plan = self._entries.get(canonical) if canonical else None
@@ -140,11 +161,9 @@ class PlanCache:
                 self._aliases.move_to_end(raw)
                 self._stats.hits += 1
                 return plan
-        method, t, tl, l_pad = resolve_static(
-            a, method=method, heuristic=heuristic, t=t, tl=tl, l_pad=l_pad,
-            tunedb=tunedb)
-        key = (raw[0], a.shape, a.nnz_pad, method, t, tl, l_pad,
-               with_transpose)
+        r = policy.resolve(a)
+        key = (raw[0], a.shape, a.nnz_pad, r.method, r.t, r.tl, r.l_pad,
+               policy.with_transpose)
         with self._lock:
             plan = self._entries.get(key)
             if plan is not None:
@@ -153,8 +172,8 @@ class PlanCache:
                 self._stats.hits += 1
                 return plan
         # Build outside the lock — plans are pure functions of the key.
-        plan = build_plan(a, method=method, t=t, tl=tl, l_pad=l_pad,
-                          with_transpose=with_transpose)
+        plan = build_plan(a, method=r.method, t=r.t, tl=r.tl, l_pad=r.l_pad,
+                          with_transpose=policy.with_transpose, _resolved=r)
         with self._lock:
             self._stats.misses += 1
             self._entries[key] = plan
@@ -193,9 +212,9 @@ def default_cache() -> PlanCache:
     return _default_cache
 
 
-def get_plan(a: CSR, **kw) -> SpmmPlan:
+def get_plan(a: CSR, policy: PlanPolicy | None = None, **kw) -> SpmmPlan:
     """Module-level convenience over the process-wide default cache."""
-    return _default_cache.get(a, **kw)
+    return _default_cache.get(a, policy, **kw)
 
 
 def cache_stats() -> CacheStats:

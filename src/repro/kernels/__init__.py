@@ -1,5 +1,10 @@
 # Submodules only — the jit'd wrappers live in ops (kernels.ops.merge_spmm
 # etc.); re-exporting them here would shadow the kernel modules themselves.
-from . import merge_spmm, moe_gemm, ops, ref, rowsplit_spmm, sddmm
+# Importing registry/rowgroup_spmm here is what registers the built-in and
+# row-grouped methods: `from repro.kernels import registry` always sees a
+# fully populated method table.
+from . import (merge_spmm, moe_gemm, ops, ref, registry, rowgroup_spmm,
+               rowsplit_spmm, sddmm)
 
-__all__ = ["merge_spmm", "moe_gemm", "ops", "ref", "rowsplit_spmm", "sddmm"]
+__all__ = ["merge_spmm", "moe_gemm", "ops", "ref", "registry",
+           "rowgroup_spmm", "rowsplit_spmm", "sddmm"]

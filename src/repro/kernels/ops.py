@@ -8,13 +8,14 @@ against ref.py; compiled Mosaic on real TPUs), and exposes an XLA fallback
 The plan-execute ops (``merge_execute``/``rowsplit_execute``/``sddmm``)
 accept dense operands with arbitrary leading batch dims — ``b (..., k, n)``
 folds into the kernels' leading batch grid axis, one dispatch for the whole
-stack.  ``*_op``/``sddmm_op`` return the same ops wrapped with an explicit
-``jax.custom_batching.custom_vmap`` rule: a vmapped batch axis becomes the
-native stacked axis instead of tracing into ``pallas_call``.  These wrapped
-forms are what ``repro.core.spmm``'s custom-VJP forward/backward bodies
-call, which is what makes ``jax.vmap(execute_plan)`` (and vmap-of-grad /
-grad-of-vmap) first-class; the raw ops stay plain so forward-only XLA
-callers keep ordinary autodiff.
+stack.  The forward's vmap wrapping is generic now — the method registry's
+``registry.execute_op`` wraps any registered method's execute in an
+explicit ``jax.custom_batching.custom_vmap`` rule (vmapped batch axis →
+native stacked axis instead of tracing into ``pallas_call``); this module
+keeps only the wrapped ops the custom-VJP *backward* body needs
+(``merge_execute_op`` for the transpose dB plan, ``sddmm_op`` for the
+values cotangent).  The raw ops stay plain so forward-only XLA callers
+keep ordinary autodiff.
 """
 from __future__ import annotations
 
@@ -270,21 +271,6 @@ def merge_execute_op(m: int, tk: int | None, interpret: bool | None,
     """``merge_execute`` with an explicit vmap rule (statics closed over)."""
     fn = lambda structure, vals, b: merge_execute(
         structure, vals, b, m=m, tk=tk, interpret=interpret, impl=impl)
-
-    def native(in_batched):
-        st, va, bb = in_batched
-        return bb and not va and _structure_free(st)
-
-    return _vmappable(fn, native)
-
-
-@functools.lru_cache(maxsize=_OP_CACHE_SIZE)
-def rowsplit_execute_op(m: int, tl: int, tk: int | None,
-                        interpret: bool | None, impl: str):
-    """``rowsplit_execute`` with an explicit vmap rule."""
-    fn = lambda structure, vals, b: rowsplit_execute(
-        structure, vals, b, m=m, tl=tl, tk=tk, interpret=interpret,
-        impl=impl)
 
     def native(in_batched):
         st, va, bb = in_batched

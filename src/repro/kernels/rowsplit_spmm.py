@@ -39,6 +39,34 @@ TM = 8
 DEFAULT_TL = 16
 
 
+def ell_slots(a: CSR, rows: jax.Array, l: int, *, tm: int = TM) -> dict:
+    """ELL slot block ``{cols, slot_nz}`` for a row subset, padded to tm.
+
+    ``rows`` (r,) int32 selects the rows; each is laid out over ``l``
+    slots.  Invalid slots carry ``slot_nz == nnz_pad`` — the sentinel
+    that reads the appended zero in ``merge_spmm.apply_vals`` — and the
+    column gather is sentinel-extended so a 0-nnz pattern (empty
+    ``col_ind``) stays constructible.  Shared by the whole-matrix
+    row-split structure and the per-bucket row-grouped structure
+    (``rowgroup_spmm``) so the subtle slot/sentinel contract lives once.
+    """
+    lengths = jnp.diff(a.row_ptr)
+    idx = jnp.arange(l, dtype=jnp.int32)
+    take = a.row_ptr[rows][:, None] + idx[None, :]         # (r, l)
+    valid = idx[None, :] < lengths[rows][:, None]
+    safe = jnp.where(valid, take, 0)
+    col_ext = jnp.concatenate(
+        [a.col_ind, jnp.zeros((1,), a.col_ind.dtype)])
+    cols = jnp.where(valid, col_ext[safe], 0)
+    slot_nz = jnp.where(valid, take, a.nnz_pad).astype(jnp.int32)
+    r = rows.shape[0]
+    pad_rows = tm * (-(-r // tm)) - r
+    cols = jnp.pad(cols, ((0, pad_rows), (0, 0)))
+    slot_nz = jnp.pad(slot_nz, ((0, pad_rows), (0, 0)),
+                      constant_values=a.nnz_pad)
+    return dict(cols=cols, slot_nz=slot_nz)
+
+
 def plan_rowsplit_structure(a: CSR, *, l_pad: int, tl: int = DEFAULT_TL,
                             tm: int = TM):
     """Phase 0, pattern-only: ELL slot structure (m_pad, L), L = l_pad↑tl.
@@ -48,25 +76,9 @@ def plan_rowsplit_structure(a: CSR, *, l_pad: int, tl: int = DEFAULT_TL,
     ``slot_nz`` (see ``merge_spmm.apply_vals``) — the plan-once/execute-many
     split of ``repro.core.plan``.
     """
-    m = a.m
-    m_pad = tm * (-(-m // tm))
     l = max(tl, tl * (-(-l_pad // tl)))
-    lengths = jnp.diff(a.row_ptr)
-    idx = jnp.arange(l, dtype=jnp.int32)
-    take = a.row_ptr[:-1, None] + idx[None, :]             # (m, l)
-    valid = idx[None, :] < lengths[:, None]
-    safe = jnp.where(valid, take, 0)
-    # Sentinel-extended gather so a 0-nnz pattern (empty col_ind) stays
-    # constructible — the appended 0 is what every invalid slot reads.
-    col_ext = jnp.concatenate(
-        [a.col_ind, jnp.zeros((1,), a.col_ind.dtype)])
-    cols = jnp.where(valid, col_ext[safe], 0)
-    slot_nz = jnp.where(valid, take, a.nnz_pad).astype(jnp.int32)
-    pad_rows = m_pad - m
-    cols = jnp.pad(cols, ((0, pad_rows), (0, 0)))
-    slot_nz = jnp.pad(slot_nz, ((0, pad_rows), (0, 0)),
-                      constant_values=a.nnz_pad)
-    return dict(cols=cols, slot_nz=slot_nz)
+    rows = jnp.arange(a.m, dtype=jnp.int32)
+    return ell_slots(a, rows, l, tm=tm)
 
 
 def plan_rowsplit(a: CSR, *, l_pad: int, tl: int = DEFAULT_TL,

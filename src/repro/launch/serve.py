@@ -55,17 +55,18 @@ def check_prunable(cfg):
             "to prune)")
 
 
-def prune_ffn_blocks(params, cfg, keep: float):
+def prune_ffn_blocks(params, cfg, keep: float, policy=None):
     """Unstack each block's params and prune its MLP once, building each
     pattern's plan through the engine cache — plans are reused by every
-    subsequent jitted call."""
+    subsequent jitted call.  ``policy`` (a ``repro.PlanPolicy``) pins the
+    plan request, e.g. a forced kernel method from ``--spmm-method``."""
     blocks = []
     for si, (pattern, count) in enumerate(cfg.segments):
         for ci in range(count):
             for pi, btype in enumerate(pattern):
                 lp = jax.tree.map(lambda x: x[ci],
                                   params["segments"][si][pi])
-                lp["mlp"] = S.prune_mlp(lp["mlp"], keep)
+                lp["mlp"] = S.prune_mlp(lp["mlp"], keep, policy=policy)
                 blocks.append(lp)
     return blocks
 
@@ -97,12 +98,13 @@ def make_pruned_forward(cfg):
     return fwd
 
 
-def serve_pruned(cfg, params, prompt, keep: float, *, microbatch: int = 0):
+def serve_pruned(cfg, params, prompt, keep: float, *, microbatch: int = 0,
+                 policy=None):
     from repro import engine
 
     check_prunable(cfg)
     t0 = time.perf_counter()
-    blocks = prune_ffn_blocks(params, cfg, keep)
+    blocks = prune_ffn_blocks(params, cfg, keep, policy=policy)
     t_plan = time.perf_counter() - t0
     stats = engine.cache_stats()
     methods = {k: v.method for k, v in blocks[0]["mlp"].items()}
@@ -147,8 +149,14 @@ def main(argv=None):
                     "the SpMM kernel grid")
     ap.add_argument("--tunedb", default="", metavar="PATH",
                     help="TuneDB JSON (python -m repro.tune) — pruned-FFN "
-                    "plans resolve merge/rowsplit from measurements "
+                    "plans resolve their method from measurements "
                     "instead of the paper's fixed threshold")
+    from repro.kernels import registry
+    ap.add_argument("--spmm-method", default="auto",
+                    choices=("auto",) + registry.method_names(),
+                    help="force the SpMM kernel method for pruned-FFN "
+                    "plans (any registered method; 'auto' resolves "
+                    "through the TuneDB ladder + heuristic)")
     args = ap.parse_args(argv)
 
     if args.tunedb:
@@ -166,8 +174,10 @@ def main(argv=None):
     prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                 cfg.vocab_size)
     if args.prune_ffn > 0.0:
+        from repro.core import PlanPolicy
+        policy = PlanPolicy(method=args.spmm_method)
         logits = serve_pruned(cfg, params, prompt, args.prune_ffn,
-                              microbatch=args.microbatch)
+                              microbatch=args.microbatch, policy=policy)
         print(f"pruned-FFN logits {logits.shape}; "
               f"argmax@last {jnp.argmax(logits[:, -1], -1)}")
         return 0

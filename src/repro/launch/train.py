@@ -46,6 +46,10 @@ def main(argv=None):
                     help="TuneDB JSON (python -m repro.tune) — SparseLinear "
                     "plan (re)builds resolve their kernel method from "
                     "measurements instead of the analytic heuristic")
+    ap.add_argument("--spmm-method", default="", metavar="METHOD",
+                    help="force the SpMM kernel method for sparse-layer "
+                    "plan rebuilds (any method registered in "
+                    "repro.kernels.registry; default: auto)")
     args = ap.parse_args(argv)
 
     if args.tunedb:
@@ -75,9 +79,14 @@ def main(argv=None):
             if restored is not None:
                 state, start_step = restored, step
                 print(f"[train] resumed from step {step}")
-    # Route any SparseLinear layers through the SpMM engine: plans are
+    # Route any sparse layers/matrices through the SpMM engine: plans are
     # (re)built once here, outside jit — the jitted step never replans.
-    state["params"] = R.ensure_spmm_plans(state["params"])
+    spmm_policy = None
+    if args.spmm_method:
+        from repro.core import PlanPolicy
+        spmm_policy = PlanPolicy(method=args.spmm_method)
+    state["params"] = R.ensure_spmm_plans(state["params"],
+                                          policy=spmm_policy)
 
     data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
                           global_batch=args.global_batch, seed=args.seed,

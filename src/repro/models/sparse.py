@@ -24,7 +24,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import CSR, Heuristic, SpmmPlan, execute_plan, prune_to_csr
+from repro.core import (CSR, ExecutionConfig, Heuristic, PlanPolicy,
+                        SparseMatrix, SpmmPlan)
+from repro.core.config import _UNSET, _warn_deprecated
 
 # Below this many tokens per call, flattening the leading axes packs the
 # tokens densely into the kernels' TN=128-lane tiles; from here up each
@@ -35,6 +37,20 @@ from repro.core import CSR, Heuristic, SpmmPlan, execute_plan, prune_to_csr
 BATCHED_MIN_TOKENS = 128
 
 
+def _legacy_heuristic(context: str, heuristic, policy):
+    """Fold the pre-v1 ``heuristic=`` kwarg into a policy (warn once)."""
+    if heuristic is _UNSET:
+        return policy
+    if policy is not None:
+        raise ValueError(f"{context}: pass either policy= or the legacy "
+                         "heuristic=, not both")
+    _warn_deprecated(
+        f"{context}(heuristic=...)",
+        "pass policy=PlanPolicy(heuristic=...) "
+        "(see README.md: Migrating to API v1)", stacklevel=4)
+    return PlanPolicy(heuristic=heuristic)
+
+
 @dataclasses.dataclass(frozen=True)
 class SparseLinear:
     weight: CSR                    # (d_out, d_in)
@@ -42,29 +58,48 @@ class SparseLinear:
 
     @classmethod
     def from_dense(cls, w: jax.Array, keep_fraction: float,
-                   heuristic: Optional[Heuristic] = None) -> "SparseLinear":
+                   heuristic: Optional[Heuristic] = _UNSET, *,
+                   policy: Optional[PlanPolicy] = None) -> "SparseLinear":
         """Prune w (d_in, d_out) — stored transposed as (d_out, d_in).
 
-        ``heuristic=None`` (default) lets the engine resolve the kernel
-        method through the full ladder — TuneDB exact/class hits, then a
-        DB-calibrated threshold — instead of pinning the analytic default.
+        ``policy`` pins the plan request (method, static params, TuneDB);
+        the default lets the engine resolve the kernel method through the
+        full ladder — TuneDB exact/class hits, then a DB-calibrated
+        threshold — instead of pinning the analytic default.
+        (``heuristic`` is the pre-v1 spelling of
+        ``policy=PlanPolicy(heuristic=...)``; it warns once.)
         """
-        csr = prune_to_csr(np.asarray(w).T, keep_fraction)
-        from repro import engine
-        return cls(csr, engine.get_plan(csr, heuristic=heuristic))
+        policy = _legacy_heuristic("SparseLinear.from_dense", heuristic,
+                                   policy)
+        if policy is None:
+            policy = PlanPolicy()
+        mtx = SparseMatrix.prune(np.asarray(w).T, keep_fraction, policy)
+        return cls(mtx.data, mtx.spmm_plan)
 
-    def with_plan(self,
-                  heuristic: Optional[Heuristic] = None) -> "SparseLinear":
+    @property
+    def matrix(self) -> SparseMatrix:
+        """This layer's weight as the v1 ``SparseMatrix`` frontend."""
+        return SparseMatrix(self.weight, self.plan)
+
+    def with_plan(self, heuristic: Optional[Heuristic] = _UNSET, *,
+                  policy: Optional[PlanPolicy] = None) -> "SparseLinear":
         """(Re)attach the engine-cached plan for this weight's pattern.
 
         Identity-cheap when the plan is already cached — use after
         checkpoint restore or pattern surgery, outside jit.
         """
-        from repro import engine
-        method = self.plan.meta.method if self.plan is not None else "auto"
-        return dataclasses.replace(
-            self, plan=engine.get_plan(self.weight, method=method,
-                                       heuristic=heuristic))
+        policy = _legacy_heuristic("SparseLinear.with_plan", heuristic,
+                                   policy)
+        if policy is None and self.plan is not None:
+            # Replay the existing plan's full statics (method and tuned
+            # t/tl/l_pad), not just its method — a TuneDB-tuned l_pad
+            # must survive a re-plan after checkpoint restore.  After
+            # pattern surgery that outgrows a pattern-derived parameter,
+            # plan_like falls back to the method alone and re-derives.
+            mtx = SparseMatrix(self.weight).plan_like(self.plan.meta)
+        else:
+            mtx = SparseMatrix(self.weight).plan(policy or PlanPolicy())
+        return dataclasses.replace(self, plan=mtx.spmm_plan)
 
     @property
     def method(self) -> str:
@@ -74,23 +109,28 @@ class SparseLinear:
     def l_pad(self) -> Optional[int]:
         return self.plan.meta.l_pad if self.plan is not None else None
 
-    def __call__(self, x: jax.Array, **kw) -> jax.Array:
+    def __call__(self, x: jax.Array,
+                 exec: Optional[ExecutionConfig] = None, **kw) -> jax.Array:
         """x (..., d_in) → (..., d_out).  Differentiable in x and vals.
 
-        With 3-D+ activations carrying enough tokens per call
-        (``BATCHED_MIN_TOKENS``), the leading axes ride the engine's
-        batched execution — B (..., d_in, tokens) folds into the kernel
-        grid — instead of being flattened into one wide token axis.
+        ``exec`` is the per-call :class:`ExecutionConfig` (bare
+        ``impl``/``interpret``/``tk`` kwargs fold into one through the
+        ``execute_plan`` shims).  With 3-D+ activations carrying enough
+        tokens per call (``BATCHED_MIN_TOKENS``), the leading axes ride
+        the engine's batched execution — B (..., d_in, tokens) folds into
+        the kernel grid — instead of being flattened into one wide token
+        axis.
         """
         layer = self if self.plan is not None else self.with_plan()
+        mtx = layer.matrix
         w = layer.weight
         if x.ndim >= 3 and x.shape[-2] >= BATCHED_MIN_TOKENS:
             xt = jnp.swapaxes(x, -1, -2).astype(w.dtype)  # (..., d_in, tok)
-            y = execute_plan(layer.plan, w.vals, xt, **kw)
+            y = mtx.matmul(xt, exec, **kw)
             return jnp.swapaxes(y, -1, -2).astype(x.dtype)
         lead = x.shape[:-1]
         xt = x.reshape(-1, x.shape[-1]).T          # (d_in, tokens) = B
-        y = execute_plan(layer.plan, w.vals, xt.astype(w.dtype), **kw)
+        y = mtx.matmul(xt.astype(w.dtype), exec, **kw)
         return y.T.reshape(*lead, w.m).astype(x.dtype)
 
 
@@ -101,13 +141,16 @@ jax.tree_util.register_pytree_node(
 )
 
 
-def prune_mlp(mlp_params: dict, keep_fraction: float) -> dict:
+def prune_mlp(mlp_params: dict, keep_fraction: float,
+              policy: Optional[PlanPolicy] = None) -> dict:
     """Convert a dense MLP param dict (w1/w2[/w3]) to SparseLinear layers.
 
+    ``policy`` pins every layer's plan request (e.g.
+    ``PlanPolicy(method="rowgroup")`` from ``serve --spmm-method``).
     Plans come from the engine cache, so repeated pruning with the same
     masks (e.g. rebuilding layers each serving epoch) replans nothing.
     """
-    return {name: SparseLinear.from_dense(w, keep_fraction)
+    return {name: SparseLinear.from_dense(w, keep_fraction, policy=policy)
             for name, w in mlp_params.items()}
 
 

@@ -110,18 +110,33 @@ def make_decode_step(cfg):
     return decode_step
 
 
-def ensure_spmm_plans(tree):
-    """(Re)attach engine-cached SpmmPlans to every SparseLinear in a tree.
+def ensure_spmm_plans(tree, policy=None):
+    """(Re)attach engine-cached SpmmPlans to every sparse leaf in a tree.
 
+    Covers both ``SparseLinear`` layers and bare ``SparseMatrix`` leaves.
     Call once, outside jit, after init / checkpoint restore / pattern
     surgery — the engine cache makes it free when plans already exist, and
-    it is the identity for trees without SparseLinear leaves.  Jitted steps
-    then receive prebuilt plans and never replan (verified by the cache-hit
-    counter test in tests/test_engine.py).
+    it is the identity for trees without sparse leaves.  Jitted steps then
+    receive prebuilt plans and never replan (verified by the cache-hit
+    counter test in tests/test_engine.py).  ``policy`` (a
+    ``repro.PlanPolicy``) pins the plan request for every leaf.
     """
-    is_sl = lambda x: isinstance(x, S.SparseLinear)
-    return jax.tree.map(lambda x: x.with_plan() if is_sl(x) else x, tree,
-                        is_leaf=is_sl)
+    from repro.core import SparseMatrix
+
+    def attach(x):
+        if isinstance(x, S.SparseLinear):
+            return x.with_plan(policy=policy)
+        if policy is None and x.spmm_plan is not None:
+            # Replay the existing plan's full statics (method AND tuned
+            # t/tl/l_pad — mirrors the SparseLinear branch) instead of
+            # re-resolving "auto" to defaults; falls back to the method
+            # alone if pattern surgery outgrew a derived parameter.
+            return x.plan_like(x.spmm_plan.meta)
+        return x.plan(policy)
+
+    is_sparse = lambda x: isinstance(x, (S.SparseLinear, SparseMatrix))
+    return jax.tree.map(lambda x: attach(x) if is_sparse(x) else x, tree,
+                        is_leaf=is_sparse)
 
 
 def make_sparse_train_step(sparse_p: dict, *, lr: float = 1e-2,
@@ -136,12 +151,15 @@ def make_sparse_train_step(sparse_p: dict, *, lr: float = 1e-2,
     the cached plans, ``dB`` through the transpose merge plans, ``dvals``
     through the SDDMM kernel.
     """
+    from repro.core import ExecutionConfig
+
     sparse_p = ensure_spmm_plans(sparse_p)
+    run = ExecutionConfig(impl=impl, interpret=interpret)
 
     def loss_fn(vals, x, y):
         layers = S.mlp_with_vals(sparse_p, vals)
         pred = S.sparse_mlp_apply(
-            {k: functools.partial(sl, impl=impl, interpret=interpret)
+            {k: functools.partial(sl, exec=run)
              for k, sl in layers.items()}, x, None)
         return jnp.mean((pred - y) ** 2)
 

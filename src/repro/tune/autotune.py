@@ -1,22 +1,27 @@
-"""Empirical autotuner: measure merge vs. row-split, record the winner.
+"""Empirical autotuner: measure every registered method, record the winner.
 
 What gets timed is the *steady state the engine actually runs*: a plan is
 built once per (method, candidate) outside the timed region, then
 ``execute_plan`` is jitted and timed — the plan-once/execute-many regime,
 not the paper's per-call planning (benchmarks time that separately).
-Beyond the method, static-parameter candidates ride along: row-split
-``l_pad`` pads (pattern max, padded-up tiles) and merge chunk sizes ``t``
-— the winner's parameters are recorded so exact-pattern TuneDB hits replay
-them at plan build.
+
+The method list and each method's static-parameter candidates (row-split
+``l_pad`` pads, merge chunk sizes ``t``) come from the method registry
+(``repro.kernels.registry``) — a newly registered method is tuned with
+zero edits here.  The winner's method and parameters are recorded so
+exact-pattern TuneDB hits replay them at plan build; per-method best
+timings land in ``TuneRecord.timings``.
 """
 from __future__ import annotations
 
-from typing import Callable, Iterable, Optional, Sequence
+import math
+from typing import Callable, Iterable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.config import ExecutionConfig
 from repro.core.csr import CSR
 from repro.core.plan import build_plan, pattern_fingerprint
 from repro.core.spmm import execute_plan
@@ -28,62 +33,43 @@ from .timing import timeit
 
 
 def _time_plan(a: CSR, b, *, method: str, impl: str, warmup: int,
-               repeat: int, t: int | None = None,
-               l_pad: int | None = None) -> float:
-    plan = build_plan(a, method=method, t=t, l_pad=l_pad,
-                      with_transpose=False)
-    fn = jax.jit(lambda vals, bb: execute_plan(plan, vals, bb, impl=impl))
+               repeat: int, **cand) -> float:
+    plan = build_plan(a, method=method, with_transpose=False, **cand)
+    run = ExecutionConfig(impl=impl)
+    fn = jax.jit(lambda vals, bb: execute_plan(plan, vals, bb, run))
     return timeit(fn, a.vals, b, warmup=warmup, repeat=repeat)
-
-
-def _l_pad_candidates(a: CSR, wide: bool) -> Sequence[Optional[int]]:
-    lengths = np.diff(np.asarray(a.row_ptr))
-    lmax = max(int(lengths.max()) if lengths.size else 1, 1)
-    cands = [lmax]
-    if wide:
-        up8 = -(-lmax // 8) * 8
-        if up8 != lmax:
-            cands.append(up8)      # tile-aligned ELL rows
-    return cands
-
-
-def _t_candidates(wide: bool) -> Sequence[Optional[int]]:
-    from repro.kernels import merge_spmm
-
-    cands = [merge_spmm.DEFAULT_T]
-    if wide:
-        cands += [c for c in (8, 32) if c != merge_spmm.DEFAULT_T]
-    return cands
 
 
 def tune_pattern(a: CSR, *, n: int = 64, impl: str = "xla",
                  warmup: int = 2, repeat: int = 5, wide: bool = False,
                  name: str = "", seed: int = 0) -> TuneRecord:
-    """Time both methods (over candidates) on a concrete pattern."""
+    """Time every registered method (over its candidates) on a pattern."""
+    from repro.kernels import registry
+
     rng = np.random.default_rng(seed)
     b = jnp.asarray(rng.standard_normal((a.k, n)), a.dtype)
 
-    merge_us, best_t = np.inf, None
-    for t in _t_candidates(wide):
-        us = _time_plan(a, b, method="merge", impl=impl, warmup=warmup,
-                        repeat=repeat, t=t)
-        if us < merge_us:
-            merge_us, best_t = us, t
-
-    rowsplit_us, best_l_pad = np.inf, None
-    for l_pad in _l_pad_candidates(a, wide):
-        us = _time_plan(a, b, method="rowsplit", impl=impl, warmup=warmup,
-                        repeat=repeat, l_pad=l_pad)
-        if us < rowsplit_us:
-            rowsplit_us, best_l_pad = us, l_pad
+    timings: dict[str, float] = {}
+    best_kw: dict[str, dict] = {}
+    for mname in registry.method_names():
+        spec = registry.get_method(mname)
+        best, bkw = math.inf, {}
+        for cand in spec.tune_candidates(a, wide):
+            us = _time_plan(a, b, method=mname, impl=impl, warmup=warmup,
+                            repeat=repeat, **cand)
+            if us < best:
+                best, bkw = us, dict(cand)
+        timings[mname] = float(best)
+        best_kw[mname] = bkw
 
     s = compute_stats(a)
-    method = "merge" if merge_us < rowsplit_us else "rowsplit"
-    return TuneRecord(method=method, merge_us=float(merge_us),
-                      rowsplit_us=float(rowsplit_us), m=s.m, k=s.k,
+    method = min(timings, key=timings.get)
+    return TuneRecord(method=method, merge_us=timings["merge"],
+                      rowsplit_us=timings["rowsplit"], m=s.m, k=s.k,
                       d=s.d, cv=s.cv, n=n,
-                      l_pad=best_l_pad if method == "rowsplit" else None,
-                      t=best_t if method == "merge" else None, name=name)
+                      l_pad=best_kw[method].get("l_pad"),
+                      t=best_kw[method].get("t"), name=name,
+                      timings=timings)
 
 
 def tune_suite(specs: Iterable[MatrixSpec], db: TuneDB, *, n: int = 64,
@@ -101,9 +87,10 @@ def tune_suite(specs: Iterable[MatrixSpec], db: TuneDB, *, n: int = 64,
         rec = tune_pattern(a, n=n, impl=impl, warmup=warmup,
                            repeat=repeat, wide=wide, name=spec.name)
         db.record(fp, rec)
+        others = "; ".join(f"{m} {us:.0f}us"
+                           for m, us in sorted((rec.timings or {}).items()))
         log(f"{spec.name}: d={rec.d:.1f} cv={rec.cv:.2f} -> {rec.method} "
-            f"(merge {rec.merge_us:.0f}us vs rowsplit "
-            f"{rec.rowsplit_us:.0f}us)")
+            f"({others})")
     if len(db):
         thr, acc = db.calibrate_threshold()
         log(f"calibrated threshold={thr:.2f} "

@@ -27,12 +27,14 @@ from .db import TuneDB, backend_key
 
 def _report(db: TuneDB) -> None:
     print(f"# TuneDB backend={db.backend} entries={len(db)}")
-    print("name,m,k,d,cv,method,merge_us,rowsplit_us,speedup")
+    print("name,m,k,d,cv,method,merge_us,rowsplit_us,speedup,timings")
     for rec in sorted(db.entries.values(), key=lambda r: r.name):
         lo, hi = sorted((rec.merge_us, rec.rowsplit_us))
+        extras = ";".join(f"{m}={us:.0f}" for m, us in
+                          sorted((rec.timings or {}).items()))
         print(f"{rec.name or '?'},{rec.m},{rec.k},{rec.d:.2f},"
               f"{rec.cv:.2f},{rec.method},{rec.merge_us:.0f},"
-              f"{rec.rowsplit_us:.0f},{hi / max(lo, 1e-9):.2f}x")
+              f"{rec.rowsplit_us:.0f},{hi / max(lo, 1e-9):.2f}x,{extras}")
     if db.threshold is not None:
         print(f"# calibrated_threshold={db.threshold:.3f} "
               f"accuracy={db.threshold_accuracy * 100:.1f}%")

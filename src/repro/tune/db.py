@@ -72,9 +72,17 @@ def class_signature(m: int, k: int, d: float, cv: float) -> str:
 
 @dataclasses.dataclass
 class TuneRecord:
-    """Measured outcome for one sparsity pattern on one backend."""
+    """Measured outcome for one sparsity pattern on one backend.
 
-    method: str                  # winner: "merge" | "rowsplit"
+    ``method`` is the overall winner across every registered method (it
+    may name a registered non-core method, e.g. ``"rowgroup"``; exact
+    TuneDB hits replay it).  ``merge_us``/``rowsplit_us`` always hold the
+    core pair's timings — they anchor the class aggregates and the
+    threshold calibration, which are inherently two-way.  ``timings``
+    carries the full per-method best timings (absent in pre-v1 files).
+    """
+
+    method: str                  # overall winner (a registered method name)
     merge_us: float
     rowsplit_us: float
     m: int
@@ -85,12 +93,14 @@ class TuneRecord:
     l_pad: Optional[int] = None  # winning rowsplit pad (None: pattern max)
     t: Optional[int] = None      # winning merge chunk size (None: default)
     name: str = ""               # corpus spec name, for reports
+    timings: Optional[Dict[str, float]] = None  # per-method best, in us
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
 
     @property
     def oracle(self) -> str:
+        """Winner of the core merge/rowsplit pair (calibration target)."""
         return "merge" if self.merge_us < self.rowsplit_us else "rowsplit"
 
     @property
@@ -164,6 +174,13 @@ class TuneDB:
             return Heuristic(threshold=self.threshold)
         return Heuristic()
 
+    def lookup_class_for(self, a: CSR) -> Optional[str]:
+        """Class-rung lookup for a concrete pattern (no exact check)."""
+        from repro.matrices.stats import compute_stats
+
+        s = compute_stats(a)
+        return self.lookup_class(class_signature(s.m, s.k, s.d, s.cv))
+
     def resolve(self, a: CSR) -> Tuple[Optional[str], str]:
         """Method for a concrete pattern: ``(method, source)``.
 
@@ -174,10 +191,7 @@ class TuneDB:
         rec = self.lookup_exact(pattern_fingerprint(a))
         if rec is not None:
             return rec.method, "exact"
-        from repro.matrices.stats import compute_stats
-
-        s = compute_stats(a)
-        cls = self.lookup_class(class_signature(s.m, s.k, s.d, s.cv))
+        cls = self.lookup_class_for(a)
         if cls is not None:
             return cls, "class"
         return None, "miss"

@@ -1,0 +1,558 @@
+"""API v1 surface: snapshot, deprecation shims, method registry,
+SparseMatrix frontend, and the unified inline/planned resolution.
+
+The snapshot test is the contract: a public name appearing or
+disappearing unannounced fails here first.  The shim tests prove every
+pre-v1 call form still returns bit-identical results while warning once;
+the registry tests prove method dispatch is a registration, not an
+if/elif edit (the ``rowgroup`` method exercises every dispatch surface
+without any core change).
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro import (CSR, ExecutionConfig, PlanPolicy, SparseMatrix,
+                   execute_plan, get_plan, spmm)
+from repro.core import build_plan, random_csr
+from repro.core.config import reset_deprecation_warnings
+from repro.core.plan import pattern_fingerprint
+from repro.engine.cache import PlanCache
+from repro.kernels import ref, registry
+from repro.tune.db import TuneDB, TuneRecord
+
+
+def _csr(seed=0, m=32, k=24, npr=(0, 8)):
+    return random_csr(jax.random.PRNGKey(seed), m, k, nnz_per_row=npr)
+
+
+def _b(a, n=8, seed=1):
+    return jax.random.normal(jax.random.PRNGKey(seed), (a.k, n))
+
+
+XLA = ExecutionConfig(impl="xla")
+
+
+# ------------------------------------------------------------- snapshot ---
+
+
+EXPECTED_API = {
+    "CSR",
+    "ExecutionConfig",
+    "PlanPolicy",
+    "SparseMatrix",
+    "SpmmPlan",
+    "__version__",
+    "execute_plan",
+    "get_plan",
+    "spmm",
+}
+
+
+def test_api_surface_snapshot():
+    """The v1 surface is frozen: update EXPECTED_API *deliberately* (and
+    the README migration table) when the public API changes."""
+    assert set(repro.__all__) == EXPECTED_API
+    for name in EXPECTED_API:
+        assert getattr(repro, name) is not None
+
+
+# ----------------------------------------------------- deprecation shims ---
+
+
+@pytest.fixture
+def fresh_warnings():
+    reset_deprecation_warnings()
+    yield
+    reset_deprecation_warnings()
+
+
+def test_legacy_spmm_kwargs_warn_once_and_match(fresh_warnings):
+    a = _csr(0)
+    b = _b(a)
+    want = np.asarray(spmm(a, b, PlanPolicy(method="merge"), XLA))
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        got = spmm(a, b, method="merge", impl="xla")
+    assert {str(x.message).split(" is deprecated")[0] for x in w} == \
+        {"spmm(method=...)", "spmm(impl=...)"}
+    # bit-identical to the v1 spelling
+    np.testing.assert_array_equal(np.asarray(got), want)
+    # ...and each spelling warns only once per process
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        spmm(a, b, method="merge", impl="xla")
+    assert not [x for x in w if issubclass(x.category, DeprecationWarning)]
+
+
+def test_legacy_execute_plan_kwargs_match_exec(fresh_warnings):
+    a = _csr(1)
+    b = _b(a)
+    plan = build_plan(a, method="rowsplit")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        old = execute_plan(plan, a.vals, b, impl="xla")
+    assert any("execute_plan(impl=...)" in str(x.message) for x in w)
+    new = execute_plan(plan, a.vals, b, XLA)
+    np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+
+
+@pytest.mark.parametrize("method", ["merge", "rowsplit", "rowgroup"])
+def test_every_pre_v1_call_form_bit_identical(fresh_warnings, method):
+    """Acceptance: pre-v1 spellings return bit-identical results to v1."""
+    a = _csr(2, m=40, k=32, npr=(0, 10))
+    b = _b(a, n=16)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        pairs = [
+            (spmm(a, b, method=method, impl="xla"),
+             spmm(a, b, PlanPolicy(method=method), XLA)),
+            (spmm(a, b, method=method, impl="xla", plan="inline"),
+             spmm(a, b, PlanPolicy(method=method), XLA, plan="inline")),
+        ]
+        plan = build_plan(a, method=method)
+        pairs.append((execute_plan(plan, a.vals, b, impl="xla"),
+                      execute_plan(plan, a.vals, b, XLA)))
+    for old, new in pairs:
+        np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+
+
+def test_legacy_kwargs_conflict_with_policy_raises():
+    a = _csr(3)
+    b = _b(a)
+    with pytest.raises(ValueError, match="not both"):
+        spmm(a, b, PlanPolicy(method="merge"), method="rowsplit")
+    with pytest.raises(ValueError, match="not both"):
+        spmm(a, b, exec=XLA, impl="pallas")
+    plan = build_plan(a, method="merge")
+    with pytest.raises(ValueError, match="not both"):
+        execute_plan(plan, a.vals, b, XLA, impl="xla")
+    with pytest.raises(ValueError, match="not both"):
+        PlanCache().get(a, PlanPolicy(method="merge"), method="merge")
+
+
+def test_plan_policy_conflicts_with_supplied_plan_raise():
+    a = _csr(4)
+    b = _b(a)
+    plan = build_plan(a, method="merge")
+    with pytest.raises(ValueError, match="conflict"):
+        spmm(a, b, PlanPolicy(method="rowsplit"), plan=plan)
+    got = spmm(a, b, PlanPolicy(method="merge"), XLA, plan=plan)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.spmm_dense_ref(a, b)),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------- method registry ---
+
+
+def test_unknown_method_error_lists_registered_names():
+    a = _csr(5)
+    b = _b(a)
+    for fn in (lambda: spmm(a, b, PlanPolicy(method="bogus")),
+               lambda: build_plan(a, method="bogus"),
+               lambda: get_plan(a, PlanPolicy(method="bogus"))):
+        with pytest.raises(ValueError) as ei:
+            fn()
+        msg = str(ei.value)
+        assert "unknown SpMM method" in msg and "'bogus'" in msg
+        for name in registry.method_names():
+            assert name in msg
+
+
+def test_registry_rejects_duplicate_registration():
+    spec = registry.get_method("merge")
+    with pytest.raises(ValueError, match="already registered"):
+        registry.register_method(spec)
+    registry.register_method(spec, override=True)   # tests may swap specs
+
+
+def test_choose_auto_matches_paper_heuristic():
+    from repro.core import Heuristic
+    for seed in range(6):
+        a = _csr(30 + seed, npr=(0, 4 + 8 * (seed % 2)))
+        assert registry.choose_auto(a, Heuristic()) == \
+            Heuristic().choose(a)
+
+
+# -------------------------------------------- rowgroup via registry only ---
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_rowgroup_matches_dense_oracle(impl):
+    a = _csr(6, m=48, k=40, npr=(0, 12))
+    b = _b(a, n=16)
+    want = np.asarray(ref.spmm_dense_ref(a, b))
+    got = spmm(a, b, PlanPolicy(method="rowgroup"),
+               ExecutionConfig(impl=impl))
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5, atol=2e-5)
+
+
+def test_rowgroup_through_engine_cache_and_jit():
+    cache = PlanCache()
+    a = _csr(7, m=40, k=32, npr=(0, 10))
+    b = _b(a)
+    plan = cache.get(a, PlanPolicy(method="rowgroup"))
+    assert plan.meta.method == "rowgroup" and plan.meta.extra
+    assert cache.get(a, PlanPolicy(method="rowgroup")) is plan
+    got = jax.jit(lambda p, v, bb: execute_plan(p, v, bb, XLA))(
+        plan, a.vals, b)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.spmm_dense_ref(a, b)),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_rowgroup_grad_and_vmap():
+    a = _csr(8, m=24, k=20, npr=(0, 6))
+    plan = build_plan(a, method="rowgroup")
+    bs = jax.random.normal(jax.random.PRNGKey(9), (3, a.k, 8))
+    dense = jnp.asarray(a.to_dense())
+
+    def loss(vals, b):
+        return jnp.sum(execute_plan(plan, vals, b, XLA) ** 2)
+
+    gv, gb = jax.grad(loss, argnums=(0, 1))(a.vals, bs)
+    gd = jax.grad(lambda b: jnp.sum((dense @ b) ** 2))(bs)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(gd),
+                               rtol=1e-4, atol=1e-4)
+    # values-cotangent vs the dense oracle, compared through the pattern
+    gvd = jax.grad(lambda d: jnp.sum(jnp.einsum("mk,bkn->bmn",
+                                                d, bs) ** 2))(dense)
+    got_gv = np.asarray(dataclasses.replace(a, vals=gv).to_dense())
+    mask = np.asarray(a.to_dense()) != 0
+    np.testing.assert_allclose(got_gv[mask], np.asarray(gvd)[mask],
+                               rtol=1e-4, atol=1e-4)
+    got = jax.vmap(lambda b: execute_plan(plan, a.vals, b, XLA))(bs)
+    want = jnp.einsum("mk,bkn->bmn", dense, bs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_rowgroup_rejects_global_l_pad():
+    a = _csr(10)
+    with pytest.raises(ValueError, match="per row group"):
+        build_plan(a, method="rowgroup", l_pad=64)
+
+
+def test_rowgroup_inline_under_trace_raises():
+    a = _csr(11)
+    b = _b(a)
+    with pytest.raises(ValueError, match="host-side"):
+        jax.jit(lambda aa, bb: spmm(aa, bb, PlanPolicy(method="rowgroup"),
+                                    plan="inline"))(a, b)
+
+
+def test_rowgroup_tunedb_exact_replay():
+    """An exact TuneDB record naming rowgroup drives the auto ladder."""
+    a = _csr(12, npr=(0, 6))
+    from repro.matrices import compute_stats
+    s = compute_stats(a)
+    db = TuneDB(backend="test")
+    db.record(pattern_fingerprint(a),
+              TuneRecord(method="rowgroup", merge_us=30.0, rowsplit_us=20.0,
+                         m=s.m, k=s.k, d=s.d, cv=s.cv, n=8,
+                         timings={"merge": 30.0, "rowsplit": 20.0,
+                                  "rowgroup": 10.0}))
+    plan = PlanCache().get(a, PlanPolicy(tunedb=db))
+    assert plan.meta.method == "rowgroup"
+
+
+def test_tune_pattern_times_all_registered_methods():
+    from repro.tune import tune_pattern
+    a = _csr(13, m=16, k=16, npr=(0, 4))
+    rec = tune_pattern(a, n=4, warmup=0, repeat=1)
+    assert set(rec.timings) == set(registry.method_names())
+    assert rec.method == min(rec.timings, key=rec.timings.get)
+
+
+# ------------------------------------------------- SparseMatrix frontend ---
+
+
+def test_sparse_matrix_matmul_matches_dense():
+    a = _csr(14, m=40, k=32, npr=(0, 10))
+    b = _b(a, n=16)
+    A = SparseMatrix.from_csr(a)
+    want = np.asarray(ref.spmm_dense_ref(a, b))
+    np.testing.assert_allclose(np.asarray(A @ b), want, rtol=2e-5,
+                               atol=2e-5)
+    assert A.spmm_plan is None               # lazily planned via the cache
+    planned = A.plan(PlanPolicy(method="rowsplit"))
+    assert planned.method == "rowsplit"
+    np.testing.assert_allclose(np.asarray(planned @ b), want, rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_sparse_matrix_from_dense_and_with_vals():
+    rng = np.random.default_rng(0)
+    dense = rng.standard_normal((24, 16)) * (rng.random((24, 16)) < 0.3)
+    A = SparseMatrix.from_dense(dense.astype(np.float32)).plan()
+    b = jax.random.normal(jax.random.PRNGKey(15), (16, 8))
+    np.testing.assert_allclose(np.asarray(A @ b),
+                               dense.astype(np.float32) @ np.asarray(b),
+                               rtol=2e-5, atol=2e-5)
+    A2 = A.with_vals(2.0 * A.vals)
+    assert A2.spmm_plan is A.spmm_plan       # pattern frozen: plan survives
+    np.testing.assert_allclose(np.asarray(A2 @ b), 2 * np.asarray(A @ b),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sparse_matrix_is_jit_safe_pytree():
+    A = SparseMatrix.from_csr(_csr(16)).plan()
+    b = _b(A.data)
+
+    @jax.jit
+    def f(mtx, bb):
+        return mtx @ bb
+
+    from repro import engine
+    misses0 = engine.cache_stats().misses
+    y1 = f(A, b)
+    y2 = f(A.with_vals(2.0 * A.vals), b)
+    assert engine.cache_stats().misses == misses0, "jit replanned"
+    np.testing.assert_allclose(np.asarray(y2), 2 * np.asarray(y1),
+                               rtol=1e-5, atol=1e-5)
+    leaves = jax.tree.leaves(A)
+    assert all(isinstance(x, jax.Array) for x in leaves)
+
+
+def test_sparse_matrix_unplanned_under_jit_raises():
+    A = SparseMatrix.from_csr(_csr(17))
+    b = _b(A.data)
+    with pytest.raises(ValueError, match="outside jit"):
+        jax.jit(lambda m, bb: m @ bb)(A, b)
+
+
+def test_sparse_matrix_plan_shape_mismatch_raises():
+    plan = build_plan(_csr(18, m=16, k=16, npr=(0, 4)))
+    with pytest.raises(ValueError, match="built for pattern"):
+        SparseMatrix(_csr(19, m=8, k=8, npr=(0, 2)), plan)
+
+
+def test_sparse_matrix_grad_flows_to_vals():
+    A = SparseMatrix.from_csr(_csr(20, m=16, k=12, npr=(1, 4))).plan()
+    b = _b(A.data, n=4)
+
+    def loss(vals):
+        return jnp.sum((A.with_vals(vals).matmul(b, XLA)) ** 2)
+
+    g = jax.grad(loss)(A.vals)
+    dense = jnp.asarray(A.to_dense())
+    gd = jax.grad(lambda d: jnp.sum((d @ b) ** 2))(dense)
+    # compare through the pattern: scatter sparse grads densely
+    got = np.asarray(A.with_vals(g).to_dense())
+    rows = np.asarray(A.data.col_ind)  # noqa: F841 (pattern sanity below)
+    mask = np.asarray(A.to_dense()) != 0
+    np.testing.assert_allclose(got[mask], np.asarray(gd)[mask],
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------- unified inline/planned resolve ---
+
+
+def test_inline_and_planned_paths_resolve_identically():
+    """The pre-v1 bug: the inline path resolved method='auto' through the
+    module-global heuristic, bypassing the TuneDB ladder the planned path
+    used — the same matrix could run different kernels depending on the
+    calling convention.  Both now funnel through PlanPolicy.resolve."""
+    from repro import engine
+    from repro.core import Heuristic
+
+    a = _csr(21, m=64, k=512, npr=30)        # d=30: analytic → rowsplit
+    b = _b(a)
+    from repro.matrices import compute_stats
+    s = compute_stats(a)
+    db = TuneDB(backend="test")
+    db.record(pattern_fingerprint(a),
+              TuneRecord(method="merge", merge_us=10.0, rowsplit_us=20.0,
+                         m=s.m, k=s.k, d=s.d, cv=s.cv, n=8))
+    assert Heuristic().choose(a) == "rowsplit"
+
+    calls = []
+    spec = registry.get_method("merge")
+    counted = dataclasses.replace(
+        spec, inline=lambda *args, **kw: calls.append("merge")
+        or spec.inline(*args, **kw))
+    registry.register_method(counted, override=True)
+    try:
+        engine.set_tunedb(db)
+        # planned path: TuneDB exact hit → merge
+        assert get_plan(a).meta.method == "merge"
+        # inline path must resolve through the same ladder → merge too
+        spmm(a, b, exec=XLA, plan="inline")
+        assert calls == ["merge"]
+    finally:
+        engine.set_tunedb(None)
+        registry.register_method(spec, override=True)
+
+
+def test_inline_explicit_l_pad_still_validated():
+    a = random_csr(jax.random.PRNGKey(22), 8, 32, nnz_per_row=16)
+    b = _b(a)
+    with pytest.raises(ValueError, match="silently drop"):
+        spmm(a, b, PlanPolicy(method="rowsplit", l_pad=8), plan="inline")
+
+
+def test_inline_honors_policy_tl():
+    """The inline path must receive the resolved tl, not recompute its
+    own default — for rowgroup, tl shapes the group pads themselves."""
+    a = _csr(23, m=24, k=20, npr=(0, 6))
+    b = _b(a)
+    want = np.asarray(ref.spmm_dense_ref(a, b))
+    for method in ("rowsplit", "rowgroup"):
+        got = spmm(a, b, PlanPolicy(method=method, tl=8), XLA,
+                   plan="inline")
+        np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5,
+                                   atol=2e-5, err_msg=method)
+    plan = build_plan(a, method="rowgroup", tl=8)
+    assert plan.meta.tl == 8
+    assert all(l % 8 == 0 for _, l in plan.meta.extra)
+
+
+def test_unregistered_tunedb_method_degrades_not_crashes():
+    """A stale DB naming a method this process doesn't have must degrade
+    to the heuristic rung (with a warning), not crash every plan."""
+    a = _csr(24)
+    from repro.matrices import compute_stats
+    s = compute_stats(a)
+    db = TuneDB(backend="test")
+    db.record(pattern_fingerprint(a),
+              TuneRecord(method="plugin_method", merge_us=1.0,
+                         rowsplit_us=2.0, m=s.m, k=s.k, d=s.d, cv=s.cv,
+                         n=8))
+    with pytest.warns(UserWarning, match="unregistered method"):
+        plan = build_plan(a, tunedb=db)
+    assert plan.meta.method in registry.method_names()
+    # ...and the class rung still gets consulted: a twin pattern in the
+    # same (m, k, d, cv) class with a valid record drives the choice,
+    # even though the exact record is broken.
+    twin = _csr(124)            # different seed, same family/shape
+    s2 = compute_stats(twin)
+    db.record(pattern_fingerprint(twin),
+              TuneRecord(method="rowsplit", merge_us=9.0, rowsplit_us=1.0,
+                         m=s2.m, k=s2.k, d=s2.d, cv=s2.cv, n=8))
+    cls_method = db.lookup_class_for(a)
+    if cls_method is not None:       # twin landed in a's binned class
+        with pytest.warns(UserWarning, match="unregistered method"):
+            plan2 = build_plan(a, tunedb=db)
+        assert plan2.meta.method == cls_method
+
+
+def test_ensure_spmm_plans_preserves_pinned_sparse_matrix_method():
+    from repro.runtime import steps as R
+    A = SparseMatrix.from_csr(_csr(25)).plan(PlanPolicy(method="rowgroup"))
+    tree = {"w": A, "dense": jnp.ones(3)}
+    out = R.ensure_spmm_plans(tree)
+    assert out["w"].method == "rowgroup"
+    # an explicit policy still overrides
+    out2 = R.ensure_spmm_plans(tree, policy=PlanPolicy(method="merge"))
+    assert out2["w"].method == "merge"
+    # un-planned matrices get planned
+    out3 = R.ensure_spmm_plans({"w": SparseMatrix.from_csr(_csr(25))})
+    assert out3["w"].spmm_plan is not None
+
+
+def test_sparse_linear_rejects_policy_heuristic_mix():
+    from repro.core import Heuristic
+    from repro.models.sparse import SparseLinear
+    w = jnp.asarray(np.random.default_rng(0).standard_normal((16, 24)),
+                    jnp.float32)
+    with pytest.raises(ValueError, match="not both"):
+        SparseLinear.from_dense(w, 0.3, heuristic=Heuristic(),
+                                policy=PlanPolicy())
+    sl = SparseLinear.from_dense(w, 0.3)
+    with pytest.raises(ValueError, match="not both"):
+        sl.with_plan(heuristic=Heuristic(), policy=PlanPolicy())
+
+
+def test_plan_cache_legacy_kwargs_warn(fresh_warnings):
+    a = _csr(26)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        PlanCache().get(a, method="merge")
+    assert any("PlanCache.get(method=...)" in str(x.message) for x in w)
+
+
+def test_auto_with_l_pad_survives_rowgroup_exact_record():
+    """An 'auto' request carrying a global l_pad must not crash when the
+    TuneDB exact record replays a method that rejects l_pad — it falls
+    back to the analytic choice (the caller never chose rowgroup)."""
+    a = _csr(27, npr=(0, 6))
+    from repro.matrices import compute_stats
+    s = compute_stats(a)
+    lmax = int(np.diff(np.asarray(a.row_ptr)).max())
+    db = TuneDB(backend="test")
+    db.record(pattern_fingerprint(a),
+              TuneRecord(method="rowgroup", merge_us=2.0, rowsplit_us=3.0,
+                         m=s.m, k=s.k, d=s.d, cv=s.cv, n=8))
+    # without the user l_pad the record replays fine
+    assert build_plan(a, tunedb=db).meta.method == "rowgroup"
+    plan = build_plan(a, tunedb=db, l_pad=lmax + 2)
+    assert plan.meta.method in ("merge", "rowsplit")
+    # explicit rowgroup + l_pad still raises: the user asked for it
+    with pytest.raises(ValueError, match="per row group"):
+        build_plan(a, method="rowgroup", l_pad=lmax + 2)
+
+
+def test_plan_override_tl_conflict_raises():
+    a = _csr(28)
+    b = _b(a)
+    plan = build_plan(a, method="rowsplit")
+    with pytest.raises(ValueError, match="conflict"):
+        spmm(a, b, PlanPolicy(tl=plan.meta.tl + 8), plan=plan)
+    got = spmm(a, b, PlanPolicy(tl=plan.meta.tl), XLA, plan=plan)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.spmm_dense_ref(a, b)),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_replan_after_pattern_surgery_rederives_l_pad():
+    """Replaying plan statics must not break pattern surgery: when the
+    new pattern outgrows the old l_pad, re-derive instead of raising."""
+    from repro.models.sparse import SparseLinear
+    from repro.runtime import steps as R
+
+    short = random_csr(jax.random.PRNGKey(40), 8, 64, nnz_per_row=4,
+                       pad_to=128)
+    long_ = random_csr(jax.random.PRNGKey(41), 8, 64, nnz_per_row=16,
+                       pad_to=128)
+    sl = SparseLinear(short, None).with_plan(
+        policy=PlanPolicy(method="rowsplit"))
+    assert sl.plan.meta.l_pad == 4
+    surgered = dataclasses.replace(sl, weight=long_, plan=sl.plan)
+    refixed = surgered.with_plan()
+    assert refixed.plan.meta.method == "rowsplit"
+    assert refixed.plan.meta.l_pad == 16
+    # same through ensure_spmm_plans on a bare SparseMatrix leaf
+    A = SparseMatrix(short).plan(PlanPolicy(method="rowsplit"))
+    out = R.ensure_spmm_plans({"w": dataclasses.replace(A, data=long_)})
+    assert out["w"].spmm_plan.meta.l_pad == 16
+
+
+def test_replan_preserves_tuned_statics():
+    """Re-attaching plans (checkpoint restore path) must replay the full
+    tuned statics — method AND t/tl/l_pad — not just the method."""
+    from repro.models.sparse import SparseLinear
+    from repro.runtime import steps as R
+
+    a = _csr(29, npr=(0, 6))
+    lmax = int(np.diff(np.asarray(a.row_ptr)).max())
+    tuned = PlanPolicy(method="rowsplit", l_pad=lmax + 8)
+    A = SparseMatrix.from_csr(a).plan(tuned)
+    assert A.spmm_plan.meta.l_pad == lmax + 8
+    out = R.ensure_spmm_plans({"w": A})
+    assert out["w"].spmm_plan.meta.l_pad == lmax + 8
+
+    w = jnp.asarray(np.random.default_rng(1).standard_normal((16, 24)),
+                    jnp.float32)
+    sl = SparseLinear.from_dense(w, 0.3, policy=PlanPolicy(
+        method="rowsplit", l_pad=8))
+    stripped = dataclasses.replace(sl, plan=None)
+    refixed = R.ensure_spmm_plans({"w": dataclasses.replace(
+        sl, plan=sl.plan)})["w"]
+    assert refixed.plan.meta == sl.plan.meta
+    assert stripped.with_plan().plan is not None
