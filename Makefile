@@ -1,16 +1,27 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: ci test smoke examples-smoke bench tune tune-smoke \
-	bench-batched-smoke
+.PHONY: ci test test-sharded smoke examples-smoke bench tune tune-smoke \
+	bench-batched-smoke bench-sharded-smoke
 
 # examples-smoke subsumes the quickstart smoke (runs it in full), so ci
 # doesn't run it twice.
 ci: test examples-smoke
 
-# Tier-1 verify (ROADMAP.md)
+# Tier-1 verify (ROADMAP.md).  DeprecationWarnings are errors: first-party
+# code and tests must use the v1 policy=/exec= spellings (the shim tests
+# in tests/test_api.py exercise the legacy forms under pytest.warns).
 test:
-	$(PY) -m pytest -x -q
+	$(PY) -m pytest -x -q -W error::DeprecationWarning
+
+# Sharded SpMM tests on a forced 8-device CPU substrate (tests/conftest.py
+# turns REPRO_FORCE_DEVICES into XLA_FLAGS before jax initializes).  The
+# plain `make test` run covers the same tests via a subprocess wrapper;
+# this target runs them directly, with the mesh visible to every test.
+test-sharded:
+	REPRO_FORCE_DEVICES=8 $(PY) -m pytest -x -q \
+	    -W error::DeprecationWarning \
+	    tests/test_distributed_spmm.py tests/test_shard_property.py
 
 # Fast interpret-mode smoke of the public SpMM API
 smoke:
@@ -49,3 +60,11 @@ bench-batched-smoke:
 	REPRO_BENCH_BATCHED=smoke $(PY) -m benchmarks.run batched \
 	    > artifacts/bench_batched.csv
 	cat artifacts/bench_batched.csv
+
+# CI smoke: shard-count sweep + nnz-vs-row balance on a forced 8-device
+# CPU mesh (bench_sharded forces the device count itself when run as a
+# module), CSV lands in artifacts/
+bench-sharded-smoke:
+	mkdir -p artifacts
+	$(PY) -m benchmarks.bench_sharded > artifacts/bench_sharded.csv
+	cat artifacts/bench_sharded.csv

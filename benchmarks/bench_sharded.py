@@ -1,0 +1,113 @@
+"""Device-sharded SpMM: shard-count sweep + nnz- vs row-balanced cuts.
+
+Two questions about ``repro.distributed.spmm``:
+
+* **Scaling**: warm sharded execution across shard counts vs. the
+  single-device engine baseline.  With one real device (the default CPU
+  container) shards execute as the per-shard loop — the row reports the
+  sharding *overhead* floor; with forced devices (run this module
+  directly: it forces 8 CPU devices before importing jax, like ``make
+  test-sharded``) the uniform path is one ``shard_map`` program and the
+  row reports actual multi-device scaling.  ``derived`` is
+  speedup-vs-baseline.
+* **Balance**: the paper's §4 argument at device granularity — cutting an
+  imbalanced matrix into equal-*row* shards leaves one device holding a
+  multiple of the ideal nonzero load, while the equal-*nnz* cuts of
+  ``shard_csr_by_nnz`` stay within one max-row-length of ideal.
+  ``derived`` is the max-shard-nnz / ideal imbalance factor (1.0 =
+  perfect).
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+if __name__ == "__main__":          # standalone: force a multi-device CPU
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=8").strip()
+
+import jax
+import numpy as np
+
+from repro.core import ExecutionConfig, PlanPolicy, ShardSpec
+from repro.engine import PlanCache
+
+from .common import make_b, make_matrix, timeit
+
+N = 64
+M = 2048
+SHARD_COUNTS = (1, 2, 4, 8)
+
+
+def _cases():
+    yield "uniform_d32", make_matrix(0, M, M, nnz_per_row=32)
+    yield "irregular_d16", make_matrix(1, M, M, nnz_per_row=(0, 32))
+    yield "skewed_head", _skewed(2)
+
+
+def _skewed(seed):
+    """A few dense head rows over a sparse tail — the row-balance killer."""
+    import jax.numpy as jnp
+
+    from repro.core.csr import from_dense
+    rng = np.random.default_rng(seed)
+    dense = np.zeros((M, M), np.float32)
+    for r in range(8):                        # 8 rows with ~M/4 nnz each
+        cols = rng.choice(M, M // 4, replace=False)
+        dense[r, cols] = rng.standard_normal(M // 4)
+    tail = rng.random((M, M)) < (4.0 / M)     # d≈4 tail
+    dense[8:][tail[8:]] = 1.0
+    return from_dense(dense)
+
+
+def _mesh(n):
+    if n > jax.device_count():
+        return None
+    return jax.sharding.Mesh(np.array(jax.devices()[:n]), ("data",))
+
+
+def _row_balanced_max_nnz(a, n):
+    """max shard nnz when cutting into equal-row shards (the strawman)."""
+    rp = np.asarray(a.row_ptr)
+    cuts = np.linspace(0, a.m, n + 1).astype(np.int64)
+    return max(int(rp[cuts[i + 1]] - rp[cuts[i]]) for i in range(n))
+
+
+def run(csv=print):
+    from repro.core import execute_plan
+    from repro.distributed.spmm import shard_csr_by_nnz
+
+    csv("name,us_per_call,derived")
+    exec_cfg = ExecutionConfig(impl="xla")
+    for name, a in _cases():
+        b = make_b(7, a.k, N)
+        cache = PlanCache()
+        base_plan = cache.get(a, PlanPolicy())
+        t_base = timeit(jax.jit(lambda v, bb: execute_plan(
+            base_plan, v, bb, exec_cfg)), a.vals, b)
+        csv(f"{name}_base,{t_base:.1f},1.00")
+        for n in SHARD_COUNTS:
+            mesh = _mesh(n)
+            spec = (ShardSpec(mesh=mesh) if mesh is not None
+                    else ShardSpec(n=n))
+            plan = cache.get(a, PlanPolicy(shards=spec))
+            mode = ("spmd" if plan.meta.spmd_mesh() is not None else "loop")
+            t = timeit(jax.jit(lambda v, bb, p=plan: p.execute(v, bb,
+                                                               exec_cfg)),
+                       a.vals, b)
+            csv(f"{name}_shards{n}_{mode},{t:.1f},{t_base / t:.2f}")
+        # balance: equal-nnz cuts vs equal-row cuts, as max/ideal factors
+        nnz = int(np.asarray(a.row_ptr)[-1])
+        for n in SHARD_COUNTS[1:]:
+            ideal = nnz / n
+            nnz_bal = max(shard_csr_by_nnz(a, n).nnz_per_shard()) / ideal
+            row_bal = _row_balanced_max_nnz(a, n) / ideal
+            csv(f"{name}_balance{n}_nnz,0.0,{nnz_bal:.2f}")
+            csv(f"{name}_balance{n}_rows,0.0,{row_bal:.2f}")
+
+
+if __name__ == "__main__":
+    run()
+    sys.exit(0)

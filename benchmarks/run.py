@@ -12,7 +12,7 @@ import sys
 def main() -> None:
     from . import (bench_batched, bench_corpus, bench_fig1_imbalance,
                    bench_fig4_aspect, bench_fig5_rows, bench_fig6_heuristic,
-                   bench_fig7_density, bench_plan_reuse,
+                   bench_fig7_density, bench_plan_reuse, bench_sharded,
                    bench_table1_analysis, bench_train_step,
                    bench_moe_balance)
     mods = [
@@ -25,6 +25,7 @@ def main() -> None:
         ("moe", bench_moe_balance),
         ("plan", bench_plan_reuse),
         ("batched", bench_batched),
+        ("sharded", bench_sharded),
         ("train", bench_train_step),
         ("corpus", bench_corpus),
     ]

@@ -18,14 +18,15 @@ disappearing unannounced fails CI.
 """
 __version__ = "1.0.0"
 
-from repro.core import (CSR, ExecutionConfig, PlanPolicy, SparseMatrix,
-                        SpmmPlan, execute_plan, spmm)
+from repro.core import (CSR, ExecutionConfig, PlanPolicy, ShardSpec,
+                        SparseMatrix, SpmmPlan, execute_plan, spmm)
 from repro.engine import get_plan
 
 __all__ = [
     "CSR",
     "ExecutionConfig",
     "PlanPolicy",
+    "ShardSpec",
     "SparseMatrix",
     "SpmmPlan",
     "__version__",

@@ -1,5 +1,5 @@
 from .config import (DEFAULT_TUNEDB, ExecutionConfig, PlanPolicy,
-                     ResolvedPlan)
+                     ResolvedPlan, ShardSpec)
 from .csr import CSR, from_dense, prune_to_csr, random_csr
 from .heuristic import Heuristic, PAPER_THRESHOLD, calibrate
 from .matrix import SparseMatrix
@@ -9,6 +9,7 @@ from .spmm import execute_plan, spmm
 
 __all__ = [
     "DEFAULT_TUNEDB", "ExecutionConfig", "PlanPolicy", "ResolvedPlan",
+    "ShardSpec",
     "CSR", "from_dense", "prune_to_csr", "random_csr",
     "Heuristic", "PAPER_THRESHOLD", "calibrate",
     "SparseMatrix",

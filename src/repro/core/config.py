@@ -54,6 +54,63 @@ class _DefaultTuneDB:
 DEFAULT_TUNEDB = _DefaultTuneDB()
 
 
+@dataclasses.dataclass(frozen=True)
+class ShardSpec:
+    """How to shard an SpMM over devices (``PlanPolicy.shards``).
+
+    ``n`` is the shard count (defaults to ``mesh.shape[axis]`` when a mesh
+    is given); ``dim`` picks the nnz-balanced cut direction — ``"rows"``
+    (data parallel: per-device row blocks, row-concatenated C) or
+    ``"cols"`` (tensor parallel: per-device column slices of A against row
+    blocks of B, partial sums all-reduced).  ``mesh`` is optional: without
+    one, execution runs the per-shard loop on whatever devices hold the
+    data (numerically identical); with one whose ``axis`` size matches
+    ``n``, uniform plans execute as a single ``shard_map`` program.
+    Hashable — a ShardSpec is part of the engine's plan-cache key.
+    """
+
+    n: Optional[int] = None
+    dim: str = "rows"
+    axis: Optional[str] = None        # default: "data" (rows) / "model"
+    mesh: Any = None                  # jax.sharding.Mesh | None
+
+    def __post_init__(self):
+        if self.dim not in ("rows", "cols"):
+            raise ValueError(
+                f"ShardSpec.dim must be 'rows' or 'cols', got {self.dim!r}")
+        if self.n is None and self.mesh is None:
+            raise ValueError("ShardSpec needs n= (shard count) or mesh=")
+        if self.n is not None and self.n < 1:
+            raise ValueError(f"ShardSpec.n must be >= 1, got {self.n}")
+        if self.axis is None:
+            object.__setattr__(
+                self, "axis", "model" if self.dim == "cols" else "data")
+        if self.mesh is not None:
+            if self.axis not in self.mesh.axis_names:
+                raise ValueError(
+                    f"ShardSpec axis {self.axis!r} is not an axis of the "
+                    f"mesh (axes: {self.mesh.axis_names})")
+            axis_size = self.mesh.shape[self.axis]
+            if self.n is not None and self.n != axis_size:
+                raise ValueError(
+                    f"ShardSpec n={self.n} conflicts with mesh axis "
+                    f"{self.axis!r} of size {axis_size}; drop n= to take "
+                    "the axis size, or pass a matching mesh")
+
+    def resolved_n(self) -> int:
+        return self.n if self.n is not None else self.mesh.shape[self.axis]
+
+
+def _as_shard_spec(shards) -> Optional[ShardSpec]:
+    if shards is None or isinstance(shards, ShardSpec):
+        return shards
+    if isinstance(shards, int):
+        return ShardSpec(n=shards)
+    raise TypeError(
+        f"PlanPolicy.shards must be a ShardSpec, an int shard count, or "
+        f"None; got {type(shards).__name__}")
+
+
 class ResolvedPlan(NamedTuple):
     """A fully pinned-down plan request (every static decision made)."""
 
@@ -83,6 +140,10 @@ class PlanPolicy:
     heuristic: Optional[Heuristic] = None
     tunedb: Any = DEFAULT_TUNEDB       # TuneDB | None (opt out) | default
     with_transpose: bool = True        # build the backward (CSC) plan
+    shards: Optional[ShardSpec] = None  # device sharding (int = n shards)
+
+    def __post_init__(self):
+        object.__setattr__(self, "shards", _as_shard_spec(self.shards))
 
     @classmethod
     def from_meta(cls, meta) -> "PlanPolicy":
@@ -113,6 +174,13 @@ class PlanPolicy:
 
         from .plan import _require_concrete, pattern_fingerprint
 
+        if self.shards is not None:
+            raise ValueError(
+                "PlanPolicy.resolve() pins down the statics of ONE "
+                "pattern; a sharded policy resolves per shard — each "
+                "shard's local stats pick its own method — inside "
+                "repro.distributed.spmm.build_sharded_plan (or via "
+                "engine.get_plan, which dispatches on shards=).")
         _require_concrete(a, "PlanPolicy.resolve")
         method, t, l_pad = self.method, self.t, self.l_pad
         heuristic = self.heuristic

@@ -125,11 +125,49 @@ class SparseMatrix:
         lengthened a row past the old pad — fall back to the method
         alone and re-derive the rest, as a fresh plan request would.
         """
+        if hasattr(meta, "local_metas"):   # sharded plan: replay the layout
+            from .config import ShardSpec
+            spec = ShardSpec(n=meta.n_shards, dim=meta.dim, axis=meta.axis,
+                             mesh=meta.mesh)
+            if meta.uniform:
+                lm = meta.local_metas[0]
+                try:
+                    return self.plan(PlanPolicy(
+                        method=lm.method, t=lm.t, tl=lm.tl, l_pad=lm.l_pad,
+                        with_transpose=lm.has_transpose, shards=spec))
+                except ValueError:
+                    pass
+            return self.plan(PlanPolicy(
+                shards=spec, with_transpose=meta.has_transpose))
         try:
             return self.plan(PlanPolicy.from_meta(meta))
         except ValueError:
             return self.plan(PlanPolicy(
                 method=meta.method, with_transpose=meta.has_transpose))
+
+    def shard(self, mesh=None, *, n: Optional[int] = None,
+              dim: str = "rows", axis: Optional[str] = None,
+              policy: Optional[PlanPolicy] = None) -> "SparseMatrix":
+        """Attach a device-sharded plan: nnz-balanced shards, one local
+        plan per shard (``repro.distributed.spmm``).
+
+        ``mesh`` (a ``jax.sharding.Mesh``) makes uniform-method plans
+        execute as a single ``shard_map`` program over ``axis``
+        (``"data"`` for row shards, ``"model"`` for the tensor-parallel
+        column shards); without one, ``n`` logical shards execute as a
+        per-shard loop — numerically identical.  ``policy`` pins the
+        per-shard plan requests (method, params, TuneDB); each shard
+        still resolves "auto" against its own local stats.
+        """
+        from .config import ShardSpec
+        spec = ShardSpec(n=n, dim=dim, axis=axis, mesh=mesh)
+        base = policy if policy is not None else PlanPolicy()
+        if base.shards is not None:
+            raise ValueError(
+                "SparseMatrix.shard: pass the shard layout via "
+                "mesh/n/dim/axis, not inside policy.shards — the two "
+                "spellings cannot be mixed")
+        return self.plan(dataclasses.replace(base, shards=spec))
 
     def with_vals(self, vals: jax.Array) -> "SparseMatrix":
         """Rebind values onto the frozen pattern — the plan survives."""
@@ -155,6 +193,9 @@ class SparseMatrix:
                     "passes through jit boundaries unchanged.")
             from repro.engine import get_plan
             plan = get_plan(self.data)
+        if not isinstance(plan, SpmmPlan):     # device-sharded plan
+            from repro.distributed.spmm import execute_sharded
+            return execute_sharded(plan, self.data.vals, b, exec, **legacy)
         return execute_plan(plan, self.data.vals, b, exec, **legacy)
 
     def __matmul__(self, b) -> jax.Array:

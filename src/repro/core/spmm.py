@@ -37,6 +37,11 @@ rule rewrites a vmapped axis onto that same native batch path.  Values are
 shared across the batch (one frozen pattern, one value vector, many dense
 operands — the serving regime), so the batched VJP reduces the
 values-cotangent over the batch dims.
+
+Device sharding rides the same dispatch: a ``PlanPolicy`` with ``shards=``
+set resolves to a ``repro.distributed.spmm.ShardedSpmmPlan`` — nnz-balanced
+row (or column) shards, one local plan per shard — and both ``spmm`` and
+``A @ B`` execute it transparently.
 """
 from __future__ import annotations
 
@@ -178,12 +183,49 @@ def _check_plan_overrides(plan: SpmmPlan, policy: PlanPolicy) -> None:
         conflicts.append(f"tl={policy.tl} (plan: {meta.tl})")
     if policy.l_pad is not None and policy.l_pad != meta.l_pad:
         conflicts.append(f"l_pad={policy.l_pad} (plan: {meta.l_pad})")
+    if policy.shards is not None:
+        conflicts.append(f"shards={policy.shards} (plan: unsharded — build "
+                         "a sharded plan via engine.get_plan or "
+                         "SparseMatrix.shard)")
     if conflicts:
         raise ValueError(
             "spmm() overrides conflict with the supplied plan's static "
             "decisions: " + "; ".join(conflicts) + ". Rebuild the plan with "
             "these parameters (repro.core.build_plan / "
             "repro.engine.get_plan) or drop the overrides.")
+
+
+def _check_sharded_overrides(plan, policy: PlanPolicy) -> None:
+    """Raise on an explicit policy contradicting a sharded plan's statics."""
+    meta = plan.meta
+    conflicts = []
+    if policy.shards is not None:
+        spec = policy.shards
+        if spec.resolved_n() != meta.n_shards:
+            conflicts.append(f"shards n={spec.resolved_n()} "
+                             f"(plan: {meta.n_shards})")
+        if spec.dim != meta.dim:
+            conflicts.append(f"shards dim={spec.dim!r} (plan: {meta.dim!r})")
+    if policy.method != "auto":
+        mismatched = sorted({lm.method for lm in meta.local_metas
+                             if lm.method != policy.method})
+        if mismatched:
+            conflicts.append(f"method={policy.method!r} (plan shards use "
+                             f"{mismatched})")
+    for name in ("t", "tl", "l_pad"):
+        want = getattr(policy, name)
+        if want is None:
+            continue
+        got = sorted({getattr(lm, name) for lm in meta.local_metas},
+                     key=lambda x: (x is None, x))
+        if got != [want]:
+            conflicts.append(f"{name}={want} (plan shards: {got})")
+    if conflicts:
+        raise ValueError(
+            "spmm() overrides conflict with the supplied sharded plan's "
+            "static decisions: " + "; ".join(conflicts) + ". Rebuild the "
+            "sharded plan with these parameters (engine.get_plan with a "
+            "shards= policy) or drop the overrides.")
 
 
 def spmm(a: CSR, b: jax.Array, policy: PlanPolicy | None = None,
@@ -223,13 +265,26 @@ def spmm(a: CSR, b: jax.Array, policy: PlanPolicy | None = None,
     if isinstance(plan, SpmmPlan):
         _check_plan_overrides(plan, policy)
         return execute_plan(plan, a.vals, b, exec)
+    if plan is not None and not isinstance(plan, str):
+        from repro.distributed.spmm import ShardedSpmmPlan
+        if isinstance(plan, ShardedSpmmPlan):
+            _check_sharded_overrides(plan, policy)
+            return plan.execute(a.vals, b, exec)
     if plan is None and not _is_traced(a):
         from repro.engine import get_plan
         built = get_plan(a, policy=policy)
-        return execute_plan(built, a.vals, b, exec)
+        if isinstance(built, SpmmPlan):
+            return execute_plan(built, a.vals, b, exec)
+        return built.execute(a.vals, b, exec)
     if plan not in (None, "inline"):
-        raise ValueError(f"plan must be an SpmmPlan, None, or 'inline'; "
-                         f"got {plan!r}")
+        raise ValueError(f"plan must be an SpmmPlan, a ShardedSpmmPlan, "
+                         f"None, or 'inline'; got {plan!r}")
+    if policy.shards is not None:
+        raise ValueError(
+            "the inline (plan-per-call) spmm path cannot shard: sharding "
+            "is a host-side plan decision. Build the sharded plan outside "
+            "jit (repro.engine.get_plan with a shards= policy, or "
+            "SparseMatrix.shard) and pass it through the jitted function.")
     if b.ndim != 2:
         raise ValueError(
             "the inline (plan-per-call) spmm path takes a 2-D B; batched "

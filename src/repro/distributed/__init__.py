@@ -1,3 +1,3 @@
-from . import elastic, fault, sharding
+from . import elastic, fault, sharding, spmm
 
-__all__ = ["elastic", "fault", "sharding"]
+__all__ = ["elastic", "fault", "sharding", "spmm"]

@@ -143,6 +143,8 @@ class PlanCache:
             policy = PlanPolicy(**legacy)
         elif policy is None:
             policy = PlanPolicy()
+        if policy.shards is not None:
+            return self._get_sharded(a, policy)
         db = policy.resolved_tunedb()
         if policy.method == "auto":
             hkey = (policy.heuristic.threshold
@@ -186,6 +188,52 @@ class PlanCache:
                 self._stats.evictions += 1
             self._stats.size = len(self._entries)
             self._stats.aliases = len(self._aliases)
+        return plan
+
+    def _get_sharded(self, a: CSR, policy: PlanPolicy):
+        """Cached sharded-plan build (``policy.shards`` set).
+
+        The sharded plan is one cache entry keyed on the *global* pattern
+        plus the full shard spec (count, dim, axis, mesh), while every
+        per-shard local plan lands as its own entry keyed on the shard's
+        fingerprint (``build_sharded_plan`` funnels them back through
+        ``get``).  Because the shard spec is in the key, re-sharding the
+        same matrix over a different mesh size builds a sibling entry —
+        it can never poison, nor be served from, the old one.
+        """
+        spec = policy.shards
+        db = policy.resolved_tunedb()
+        if policy.method == "auto":
+            hkey = (policy.heuristic.threshold
+                    if policy.heuristic is not None else None,
+                    db.digest() if db is not None else None)
+        else:
+            hkey = None
+        key = (pattern_fingerprint(a), a.shape, a.nnz_pad, "sharded",
+               spec.resolved_n(), spec.dim, spec.axis, spec.mesh,
+               policy.method, hkey, policy.t, policy.tl, policy.l_pad,
+               policy.with_transpose)
+        with self._lock:
+            plan = self._entries.get(key)
+            if plan is not None:
+                self._entries.move_to_end(key)
+                self._stats.hits += 1
+                return plan
+        # Build outside the lock; the per-shard plans recurse through
+        # self.get (each takes the lock for its own entry).
+        from repro.distributed.spmm import build_sharded_plan
+
+        plan = build_sharded_plan(a, policy, cache=self)
+        with self._lock:
+            self._stats.misses += 1
+            self._entries[key] = plan
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.maxsize:
+                evicted, _ = self._entries.popitem(last=False)
+                self._aliases = OrderedDict(
+                    (r, c) for r, c in self._aliases.items() if c != evicted)
+                self._stats.evictions += 1
+            self._stats.size = len(self._entries)
         return plan
 
     # ------------------------------------------------------ maintenance ---

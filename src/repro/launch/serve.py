@@ -151,6 +151,12 @@ def main(argv=None):
                     help="TuneDB JSON (python -m repro.tune) — pruned-FFN "
                     "plans resolve their method from measurements "
                     "instead of the paper's fixed threshold")
+    ap.add_argument("--mesh", type=int, default=0, metavar="N",
+                    help="shard every pruned-FFN weight over a N-device "
+                    "data mesh: nnz-balanced row shards, one local plan "
+                    "per shard, executed as a single shard_map program "
+                    "(CPU dev boxes: XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=N)")
     from repro.kernels import registry
     ap.add_argument("--spmm-method", default="auto",
                     choices=("auto",) + registry.method_names(),
@@ -174,8 +180,24 @@ def main(argv=None):
     prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                 cfg.vocab_size)
     if args.prune_ffn > 0.0:
-        from repro.core import PlanPolicy
+        import dataclasses
+
+        from repro.core import PlanPolicy, ShardSpec
         policy = PlanPolicy(method=args.spmm_method)
+        if args.mesh:
+            import numpy as np
+            from jax.sharding import Mesh
+            ndev = len(jax.devices())
+            if args.mesh > ndev:
+                raise SystemExit(
+                    f"--mesh {args.mesh} exceeds the {ndev} local "
+                    "device(s); on CPU force more with XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count={args.mesh}")
+            mesh = Mesh(np.array(jax.devices()[:args.mesh]), ("data",))
+            policy = dataclasses.replace(policy,
+                                         shards=ShardSpec(mesh=mesh))
+            print(f"[serve] sharding pruned-FFN plans over {args.mesh} "
+                  f"devices (nnz-balanced row shards)")
         logits = serve_pruned(cfg, params, prompt, args.prune_ffn,
                               microbatch=args.microbatch, policy=policy)
         print(f"pruned-FFN logits {logits.shape}; "

@@ -50,6 +50,11 @@ def main(argv=None):
                     help="force the SpMM kernel method for sparse-layer "
                     "plan rebuilds (any method registered in "
                     "repro.kernels.registry; default: auto)")
+    ap.add_argument("--spmm-shards", type=int, default=0, metavar="N",
+                    help="rebuild sparse-layer plans as N nnz-balanced "
+                    "row shards (repro.distributed.spmm); when N matches "
+                    "the local mesh's data axis the shards execute as one "
+                    "shard_map program, otherwise as a per-shard loop")
     args = ap.parse_args(argv)
 
     if args.tunedb:
@@ -82,9 +87,15 @@ def main(argv=None):
     # Route any sparse layers/matrices through the SpMM engine: plans are
     # (re)built once here, outside jit — the jitted step never replans.
     spmm_policy = None
-    if args.spmm_method:
-        from repro.core import PlanPolicy
-        spmm_policy = PlanPolicy(method=args.spmm_method)
+    if args.spmm_method or args.spmm_shards:
+        from repro.core import PlanPolicy, ShardSpec
+        shards = None
+        if args.spmm_shards:
+            shard_mesh = (mesh if mesh.shape.get("data") == args.spmm_shards
+                          else None)
+            shards = ShardSpec(n=args.spmm_shards, mesh=shard_mesh)
+        spmm_policy = PlanPolicy(method=args.spmm_method or "auto",
+                                 shards=shards)
     state["params"] = R.ensure_spmm_plans(state["params"],
                                           policy=spmm_policy)
 

@@ -101,6 +101,19 @@ class SparseLinear:
             mtx = SparseMatrix(self.weight).plan(policy or PlanPolicy())
         return dataclasses.replace(self, plan=mtx.spmm_plan)
 
+    def shard(self, mesh=None, *, n: Optional[int] = None,
+              dim: str = "rows", axis: Optional[str] = None,
+              policy: Optional[PlanPolicy] = None) -> "SparseLinear":
+        """Re-plan this layer's weight with a device-sharded plan.
+
+        nnz-balanced shards, one local plan per shard, executed under
+        ``shard_map`` when ``mesh`` is given and the shards are uniform —
+        see ``SparseMatrix.shard`` / ``repro.distributed.spmm``.
+        """
+        mtx = SparseMatrix(self.weight).shard(mesh, n=n, dim=dim, axis=axis,
+                                              policy=policy)
+        return dataclasses.replace(self, plan=mtx.spmm_plan)
+
     @property
     def method(self) -> str:
         return self.plan.meta.method if self.plan is not None else "auto"

@@ -110,7 +110,7 @@ def make_decode_step(cfg):
     return decode_step
 
 
-def ensure_spmm_plans(tree, policy=None):
+def ensure_spmm_plans(tree, policy=None, mesh=None):
     """(Re)attach engine-cached SpmmPlans to every sparse leaf in a tree.
 
     Covers both ``SparseLinear`` layers and bare ``SparseMatrix`` leaves.
@@ -119,11 +119,20 @@ def ensure_spmm_plans(tree, policy=None):
     it is the identity for trees without sparse leaves.  Jitted steps then
     receive prebuilt plans and never replan (verified by the cache-hit
     counter test in tests/test_engine.py).  ``policy`` (a
-    ``repro.PlanPolicy``) pins the plan request for every leaf.
+    ``repro.PlanPolicy``) pins the plan request for every leaf; with
+    ``mesh`` given (or ``policy.shards`` set) every leaf gets a
+    device-sharded plan — nnz-balanced row shards, one local plan per
+    shard (``repro.distributed.spmm``).
     """
     from repro.core import SparseMatrix
 
     def attach(x):
+        if mesh is not None:
+            if policy is not None and policy.shards is not None:
+                raise ValueError(
+                    "ensure_spmm_plans: pass the mesh either as mesh= or "
+                    "inside policy.shards, not both")
+            return x.shard(mesh, policy=policy)   # SparseLinear or matrix
         if isinstance(x, S.SparseLinear):
             return x.with_plan(policy=policy)
         if policy is None and x.spmm_plan is not None:

@@ -45,6 +45,7 @@ EXPECTED_API = {
     "CSR",
     "ExecutionConfig",
     "PlanPolicy",
+    "ShardSpec",
     "SparseMatrix",
     "SpmmPlan",
     "__version__",

@@ -1,0 +1,253 @@
+"""Device-sharded SpMM vs. the single-device engine, on a forced mesh.
+
+The device-needing tests run when the process has >= 8 devices — which
+``make test-sharded`` forces via ``REPRO_FORCE_DEVICES=8`` (see
+``conftest.py``).  Under a plain single-device ``pytest -q`` they are
+exercised anyway: ``test_sharded_suite_in_forced_subprocess`` re-runs
+this module in a subprocess with 8 forced CPU devices, so the sharded
+matrix is *runnable, not skipped*, on any dev box and in CI.
+
+The ``shard_csr_by_nnz`` hypothesis properties are host-side and run in
+every configuration.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CSR, ExecutionConfig, PlanPolicy, ShardSpec,
+                        SparseMatrix, execute_plan, random_csr)
+from repro.core.csr import from_dense
+from repro.engine import PlanCache
+from repro.distributed.spmm import (ShardedSpmmPlan, build_sharded_plan,
+                                    execute_sharded, shard_csr_by_nnz)
+
+NDEV = 8
+IN_CHILD = bool(os.environ.get("_REPRO_FORCED_CHILD"))
+
+needs_devices = pytest.mark.skipif(
+    jax.device_count() < NDEV,
+    reason=f"needs {NDEV} devices (covered by the forced-subprocess "
+    "wrapper / make test-sharded)")
+
+METHODS = ("merge", "rowsplit", "rowgroup")
+
+
+def _mesh(n, axis="data"):
+    return jax.sharding.Mesh(np.array(jax.devices()[:n]), (axis,))
+
+
+def _case(seed=0, m=41, k=24, npr=(0, 9)):
+    a = random_csr(jax.random.PRNGKey(seed), m, k, nnz_per_row=npr)
+    b = jax.random.normal(jax.random.PRNGKey(seed + 1), (k, 7))
+    return a, b
+
+
+def _sharded(a, n, method="auto", dim="rows", mesh=None):
+    cache = PlanCache()
+    spec = (ShardSpec(mesh=mesh, dim=dim) if mesh is not None
+            else ShardSpec(n=n, dim=dim))
+    return cache.get(a, PlanPolicy(method=method, shards=spec))
+
+
+def _assert_matches(plan, a, b, method, tol=1e-5):
+    """Sharded forward + dvals/dB grads match single-device execute_plan."""
+    ref_plan = PlanCache().get(a, PlanPolicy(method=method))
+
+    def loss_sharded(vals, b):
+        return jnp.sum(jnp.sin(execute_sharded(plan, vals, b)))
+
+    def loss_ref(vals, b):
+        return jnp.sum(jnp.sin(execute_plan(ref_plan, vals, b)))
+
+    np.testing.assert_allclose(
+        np.asarray(execute_sharded(plan, a.vals, b)),
+        np.asarray(execute_plan(ref_plan, a.vals, b)), rtol=tol, atol=tol)
+    g = jax.grad(loss_sharded, argnums=(0, 1))(a.vals, b)
+    w = jax.grad(loss_ref, argnums=(0, 1))(a.vals, b)
+    np.testing.assert_allclose(np.asarray(g[0]), np.asarray(w[0]),
+                               rtol=tol, atol=tol, err_msg="dvals")
+    np.testing.assert_allclose(np.asarray(g[1]), np.asarray(w[1]),
+                               rtol=tol, atol=tol, err_msg="dB")
+
+
+# ------------------------------------------------- forced-mesh numerics ---
+
+
+@needs_devices
+@pytest.mark.parametrize("method", METHODS)
+@pytest.mark.parametrize("n", (1, 2, NDEV))
+def test_sharded_matches_single_device(method, n):
+    a, b = _case()
+    plan = _sharded(a, n, method, mesh=_mesh(n))
+    assert plan.meta.n_shards == n
+    _assert_matches(plan, a, b, method)
+
+
+@needs_devices
+@pytest.mark.parametrize("method", METHODS)
+@pytest.mark.parametrize("n", (2, NDEV))
+def test_tp_cols_matches_single_device(method, n):
+    a, b = _case(seed=3)
+    plan = _sharded(a, n, method, dim="cols", mesh=_mesh(n, axis="model"))
+    _assert_matches(plan, a, b, method)
+
+
+@needs_devices
+@pytest.mark.parametrize("method", METHODS)
+def test_batched_b_matches(method):
+    a, _ = _case(seed=5)
+    bs = jax.random.normal(jax.random.PRNGKey(9), (3, a.k, 6))
+    plan = _sharded(a, NDEV, method, mesh=_mesh(NDEV))
+    ref_plan = PlanCache().get(a, PlanPolicy(method=method))
+    got = execute_sharded(plan, a.vals, bs)
+    want = execute_plan(ref_plan, a.vals, bs)
+    assert got.shape == (3, a.m, 6)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    # grads through the batched path, too
+    g = jax.grad(lambda v: jnp.sum(jnp.cos(
+        execute_sharded(plan, v, bs))))(a.vals)
+    w = jax.grad(lambda v: jnp.sum(jnp.cos(
+        execute_plan(ref_plan, v, bs))))(a.vals)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                               rtol=1e-5, atol=1e-5)
+
+
+@needs_devices
+def test_zero_nnz_shards():
+    """A pattern whose nonzeroes sit in one row: 7 of 8 shards are empty."""
+    dense = np.zeros((16, 12), np.float32)
+    dense[3] = np.arange(1, 13)
+    a = from_dense(dense)
+    b = jax.random.normal(jax.random.PRNGKey(2), (12, 5))
+    plan = _sharded(a, NDEV, "merge", mesh=_mesh(NDEV))
+    nnz = shard_csr_by_nnz(a, NDEV).nnz_per_shard()
+    assert sorted(nnz, reverse=True)[1:] == [0] * (NDEV - 1)
+    _assert_matches(plan, a, b, "merge")
+
+
+@needs_devices
+def test_more_shards_than_rows():
+    a, b = _case(seed=7, m=3, k=10, npr=(1, 4))
+    assert a.m < NDEV
+    plan = _sharded(a, NDEV, "merge", mesh=_mesh(NDEV))
+    _assert_matches(plan, a, b, "merge")
+
+
+@needs_devices
+def test_spmd_single_dispatch_and_jit():
+    """A uniform plan on a matching mesh takes the shard_map path, and the
+    whole thing jits with the plan passed through the boundary."""
+    a, b = _case(seed=11)
+    plan = _sharded(a, NDEV, "rowsplit", mesh=_mesh(NDEV))
+    assert plan.meta.uniform and plan.meta.spmd_mesh() is not None
+    A = SparseMatrix(a, plan)
+    want = np.asarray(execute_plan(
+        PlanCache().get(a, PlanPolicy(method="rowsplit")), a.vals, b))
+    got = jax.jit(lambda A, b: A @ b)(A, b)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
+
+
+@needs_devices
+def test_sparse_matrix_shard_frontend():
+    a, b = _case(seed=13)
+    A = SparseMatrix.from_csr(a).shard(_mesh(2))
+    assert isinstance(A.spmm_plan, ShardedSpmmPlan)
+    assert A.spmm_plan.meta.n_shards == 2
+    want = np.asarray(SparseMatrix.from_csr(a).plan() @ b)
+    np.testing.assert_allclose(np.asarray(A @ b), want,
+                               rtol=1e-5, atol=1e-5)
+    # values rebind without replanning, exactly like the unsharded frontend
+    A2 = A.with_vals(a.vals * 2)
+    assert A2.spmm_plan is A.spmm_plan
+    np.testing.assert_allclose(np.asarray(A2 @ b), 2 * want,
+                               rtol=1e-5, atol=1e-5)
+
+
+@needs_devices
+def test_xla_impl_matches():
+    a, b = _case(seed=17)
+    plan = _sharded(a, NDEV, "merge", mesh=_mesh(NDEV))
+    got = execute_sharded(plan, a.vals, b, ExecutionConfig(impl="xla"))
+    want = execute_plan(PlanCache().get(a, PlanPolicy(method="merge")),
+                        a.vals, b, ExecutionConfig(impl="xla"))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------- loop fallback (any devices) ---
+
+
+@pytest.mark.parametrize("dim", ("rows", "cols"))
+def test_loop_fallback_no_mesh(dim):
+    """Logical shards without a mesh are numerically identical."""
+    a, b = _case(seed=19)
+    plan = _sharded(a, 4, "auto", dim=dim)
+    assert plan.meta.spmd_mesh() is None      # no mesh: per-shard loop
+    ref = PlanCache().get(a, PlanPolicy())
+    np.testing.assert_allclose(
+        np.asarray(execute_sharded(plan, a.vals, b)),
+        np.asarray(execute_plan(ref, a.vals, b)), rtol=1e-5, atol=1e-5)
+
+
+def test_rowgroup_heterogeneous_falls_back():
+    """rowgroup's per-shard group tables differ → non-uniform, still right."""
+    a, b = _case(seed=23, m=48, npr=(0, 12))
+    plan = _sharded(a, 4, "rowgroup")
+    assert not plan.meta.uniform
+    ref = PlanCache().get(a, PlanPolicy(method="rowgroup"))
+    np.testing.assert_allclose(
+        np.asarray(execute_sharded(plan, a.vals, b)),
+        np.asarray(execute_plan(ref, a.vals, b)), rtol=1e-5, atol=1e-5)
+
+
+def test_stale_vals_shape_raises():
+    a, b = _case(seed=29)
+    plan = _sharded(a, 2, "merge")
+    with pytest.raises(ValueError, match="global vals"):
+        execute_sharded(plan, a.vals[:-1], b)
+    with pytest.raises(ValueError, match="expects B"):
+        execute_sharded(plan, a.vals, b[:-1])
+
+
+# ------------------------------------------------- subprocess substrate ---
+
+
+@pytest.mark.skipif(jax.device_count() >= NDEV or IN_CHILD,
+                    reason="already running with a forced multi-device "
+                    "substrate")
+def test_sharded_suite_in_forced_subprocess(forced_device_run):
+    """Run this module under 8 forced CPU devices in a fresh process, so
+    the mesh tests execute for real even when the parent run came up
+    single-device."""
+    res = forced_device_run("tests/test_distributed_spmm.py", NDEV)
+    assert res.returncode == 0, (
+        f"forced {NDEV}-device run failed:\n{res.stdout}\n{res.stderr}")
+    assert " passed" in res.stdout
+
+
+# ------------------------------------- shard_csr_by_nnz degenerates --------
+# (the hypothesis property suite lives in tests/test_shard_property.py)
+
+
+def test_shard_degenerate_inputs():
+    # empty matrix
+    empty = CSR(jnp.zeros(1, jnp.int32), jnp.zeros(1, jnp.int32),
+                jnp.zeros(1, jnp.float32), (0, 5))
+    s = shard_csr_by_nnz(empty, 4)
+    assert s.sizes() == (0, 0, 0, 0)
+    # one dense row holding most of the nnz
+    dense = np.zeros((9, 32), np.float32)
+    dense[4] = 1.0
+    dense[0, 0] = dense[8, 31] = 1.0
+    s = shard_csr_by_nnz(from_dense(dense), 6)
+    assert sum(s.sizes()) == 9
+    assert sum(s.nnz_per_shard()) == 34
+    # invalid arguments
+    with pytest.raises(ValueError, match="n_shards"):
+        shard_csr_by_nnz(empty, 0)
+    with pytest.raises(ValueError, match="dim"):
+        shard_csr_by_nnz(empty, 2, dim="diag")

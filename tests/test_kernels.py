@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import random_csr, spmm
+from repro.core import ExecutionConfig, PlanPolicy, random_csr, spmm
 from repro.kernels import ops, ref
 
 MATRIX_KINDS = {
@@ -78,8 +78,10 @@ def test_rowsplit_tl_invariance(tl):
 def test_xla_impl_matches_pallas():
     a, b = _mk("irregular", 96, jnp.float32)
     for method in ("merge", "rowsplit"):
-        p = spmm(a, b, method=method, impl="pallas")
-        x = spmm(a, b, method=method, impl="xla")
+        p = spmm(a, b, PlanPolicy(method=method),
+                 ExecutionConfig(impl="pallas"))
+        x = spmm(a, b, PlanPolicy(method=method),
+                 ExecutionConfig(impl="xla"))
         np.testing.assert_allclose(np.asarray(p), np.asarray(x),
                                    rtol=2e-5, atol=2e-5)
 
@@ -89,7 +91,8 @@ def test_spmm_grad_through_xla_impl():
     a, b = _mk("short_rows", 32, jnp.float32)
 
     def loss(bb):
-        return jnp.sum(spmm(a, bb, method="merge", impl="xla") ** 2)
+        return jnp.sum(spmm(a, bb, PlanPolicy(method="merge"),
+                            ExecutionConfig(impl="xla")) ** 2)
 
     g = jax.grad(loss)(b)
     # finite-difference check on a single coordinate

@@ -1,0 +1,100 @@
+"""Property-based invariants of nnz-balanced device sharding (hypothesis).
+
+``shard_csr_by_nnz`` is pure host-side partitioning, so these run on any
+device count; the forced-mesh execution tests live in
+``tests/test_distributed_spmm.py``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install -r "
+    "requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CSR, random_csr
+from repro.distributed.spmm import shard_csr_by_nnz
+
+
+@st.composite
+def shard_cases(draw):
+    m = draw(st.integers(0, 40))
+    k = draw(st.integers(1, 24))
+    hi = draw(st.integers(0, min(k, 10)))
+    n_shards = draw(st.integers(1, 10))
+    seed = draw(st.integers(0, 2**31 - 1))
+    a = random_csr(jax.random.PRNGKey(seed), max(m, 1), k,
+                   nnz_per_row=(0, hi))
+    if m == 0:
+        a = CSR(jnp.zeros(1, jnp.int32), a.col_ind, a.vals, (0, k))
+    return a, n_shards
+
+
+@settings(max_examples=40, deadline=None)
+@given(shard_cases())
+def test_shards_tile_rows_exactly_once(case):
+    a, n = case
+    s = shard_csr_by_nnz(a, n)
+    assert len(s.bounds) == n + 1
+    assert s.bounds[0] == 0 and s.bounds[-1] == a.m
+    assert all(s.bounds[i] <= s.bounds[i + 1] for i in range(n))
+    assert sum(s.sizes()) == a.m          # every row in exactly one shard
+
+
+@settings(max_examples=40, deadline=None)
+@given(shard_cases())
+def test_shard_nnz_within_one_max_row_of_ideal(case):
+    """The paper's equal-nonzero guarantee at shard granularity: each
+    shard's nnz deviates from the ideal nnz/n_shards by at most one max
+    row length (the boundary rounds to a row boundary, and a cut can miss
+    its target nonzero by less than the row containing it)."""
+    a, n = case
+    s = shard_csr_by_nnz(a, n)
+    lengths = np.diff(np.asarray(a.row_ptr))
+    max_len = int(lengths.max()) if lengths.size else 0
+    ideal = int(np.asarray(a.row_ptr)[-1]) / n
+    for nnz_i in s.nnz_per_shard():
+        assert abs(nnz_i - ideal) <= max_len + 1
+
+
+@settings(max_examples=40, deadline=None)
+@given(shard_cases())
+def test_shard_vals_slots_cover_all_nonzeroes(case):
+    """Every global nonzero lands in exactly one shard's value gather."""
+    a, n = case
+    s = shard_csr_by_nnz(a, n)
+    nnz = int(np.asarray(a.row_ptr)[-1])
+    valid = np.concatenate(
+        [np.asarray(sl)[np.asarray(sl) < a.nnz_pad] for sl in s.vals_slots])
+    assert np.array_equal(np.sort(valid), np.arange(nnz))
+
+
+@settings(max_examples=40, deadline=None)
+@given(shard_cases())
+def test_shard_local_patterns_reassemble(case):
+    """Stacking the (unpadded) local rows reproduces the dense matrix."""
+    a, n = case
+    s = shard_csr_by_nnz(a, n)
+    vals_ext = np.concatenate([np.asarray(a.vals), np.zeros(1, a.dtype)])
+    blocks = []
+    for i, (c, slot) in enumerate(zip(s.csrs, s.vals_slots)):
+        local = CSR(c.row_ptr, c.col_ind, jnp.asarray(vals_ext[slot]),
+                    c.shape)
+        rows = s.bounds[i + 1] - s.bounds[i]
+        blocks.append(np.asarray(local.to_dense())[:rows])
+    got = (np.concatenate(blocks, axis=0) if blocks
+           else np.zeros(a.shape, a.dtype))
+    np.testing.assert_allclose(got, np.asarray(a.to_dense()),
+                               rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shard_cases())
+def test_col_shards_tile_columns(case):
+    a, n = case
+    s = shard_csr_by_nnz(a, n, dim="cols")
+    assert s.bounds[0] == 0 and s.bounds[-1] == a.k
+    nnz = int(np.asarray(a.row_ptr)[-1])
+    assert sum(s.nnz_per_shard()) == nnz

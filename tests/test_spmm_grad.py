@@ -13,7 +13,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import CSR, build_plan, execute_plan, random_csr, spmm
+from repro.core import (CSR, ExecutionConfig, PlanPolicy, build_plan,
+                        execute_plan, random_csr, spmm)
 from repro.models.sparse import SparseLinear, prune_mlp
 from repro.runtime import steps as R
 
@@ -44,7 +45,7 @@ def test_grad_matches_dense_oracle(method, impl):
     plan = build_plan(a, method=method)
 
     def loss(vals, bb):
-        return jnp.sum(execute_plan(plan, vals, bb, impl=impl) * w)
+        return jnp.sum(execute_plan(plan, vals, bb, ExecutionConfig(impl=impl)) * w)
 
     g_vals, g_b = jax.grad(loss, argnums=(0, 1))(a.vals, b)
     want_vals, want_b = jax.grad(_dense_loss(a, w), argnums=(0, 1))(a.vals, b)
@@ -59,7 +60,8 @@ def test_grad_through_spmm_api(method):
     a, b, w = _case(seed=3)
 
     def loss(bb):
-        return jnp.sum(spmm(a, bb, method=method, impl="xla") * w)
+        return jnp.sum(spmm(a, bb, PlanPolicy(method=method),
+                            ExecutionConfig(impl="xla")) * w)
 
     g = jax.grad(loss)(b)
     want = jax.grad(lambda bb: _dense_loss(a, w)(a.vals, bb))(b)
@@ -74,7 +76,7 @@ def test_grad_under_jit(method):
     @jax.jit
     def grads(vals, bb):
         return jax.grad(
-            lambda v, x: jnp.sum(execute_plan(plan, v, x, impl="xla") * w),
+            lambda v, x: jnp.sum(execute_plan(plan, v, x, ExecutionConfig(impl="xla")) * w),
             argnums=(0, 1))(vals, bb)
 
     g_vals, g_b = grads(a.vals, b)
@@ -90,7 +92,7 @@ def test_grad_empty_and_degenerate_rows():
     for method in ("merge", "rowsplit"):
         plan = build_plan(a, method=method)
         g_vals = jax.grad(lambda v: jnp.sum(
-            execute_plan(plan, v, b, impl="xla") * w))(a.vals)
+            execute_plan(plan, v, b, ExecutionConfig(impl="xla")) * w))(a.vals)
         want = jax.grad(
             lambda v: _dense_loss(a, w)(v, b))(a.vals)
         np.testing.assert_allclose(np.asarray(g_vals), np.asarray(want),
@@ -111,7 +113,7 @@ def test_sparse_linear_loss_grad():
     def loss_sparse(vals):
         layer = dataclasses.replace(
             sl, weight=dataclasses.replace(sl.weight, vals=vals))
-        return jnp.mean((layer(x, impl="xla") - y) ** 2)
+        return jnp.mean((layer(x, ExecutionConfig(impl="xla")) - y) ** 2)
 
     def loss_dense(vals):
         wd = dataclasses.replace(sl.weight, vals=vals).to_dense()  # (d_out, d_in)

@@ -9,7 +9,8 @@ pytest.importorskip(
     "requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import Heuristic, calibrate, random_csr, spmm
+from repro.core import (Heuristic, PlanPolicy, calibrate, random_csr,
+                        spmm)
 from repro.kernels import ref, ops
 
 
@@ -32,7 +33,7 @@ def test_methods_agree(case):
     a, b = case
     want = np.asarray(ref.spmm_dense_ref(a, b))
     for method in ("merge", "rowsplit"):
-        got = np.asarray(spmm(a, b, method=method))
+        got = np.asarray(spmm(a, b, PlanPolicy(method=method)))
         np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5,
                                    err_msg=method)
 

@@ -15,7 +15,7 @@ import numpy as np
 import pytest
 
 from repro import engine
-from repro.core import Heuristic, build_plan, calibrate
+from repro.core import Heuristic, PlanPolicy, build_plan, calibrate
 from repro.core.plan import pattern_fingerprint
 from repro.engine.cache import PlanCache
 from repro.matrices import compute_stats, get_suite, power_law, uniform
@@ -230,7 +230,7 @@ def test_get_plan_selects_oracle_on_mini_suite():
     cache = PlanCache()
     hits = 0
     for name, (a, oracle, analytic, d) in oracles.items():
-        plan = cache.get(a, tunedb=db)
+        plan = cache.get(a, PlanPolicy(tunedb=db))
         assert plan.meta.method != analytic or oracle == analytic
         hits += plan.meta.method == oracle
     assert hits / len(oracles) >= 0.9
@@ -259,9 +259,11 @@ def test_cache_keys_include_tunedb_digest():
     db_rowsplit = TuneDB(backend="test")
     db_rowsplit.record(fp, _rec("rowsplit", 20.0, 10.0, a))
     cache = PlanCache()
-    assert cache.get(a, tunedb=db_merge).meta.method == "merge"
-    assert cache.get(a, tunedb=db_rowsplit).meta.method == "rowsplit"
-    assert cache.get(a, tunedb=None).meta.method == Heuristic().choose(a)
+    assert cache.get(a, PlanPolicy(tunedb=db_merge)).meta.method == "merge"
+    assert cache.get(a,
+                     PlanPolicy(tunedb=db_rowsplit)).meta.method == "rowsplit"
+    assert cache.get(a, PlanPolicy(tunedb=None)).meta.method == \
+        Heuristic().choose(a)
 
 
 def test_process_default_tunedb():
