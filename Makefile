@@ -2,7 +2,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: ci test test-sharded smoke examples-smoke bench tune tune-smoke \
-	bench-batched-smoke bench-sharded-smoke
+	bench-batched-smoke bench-sharded-smoke bench-epilogue-smoke
 
 # examples-smoke subsumes the quickstart smoke (runs it in full), so ci
 # doesn't run it twice.
@@ -60,6 +60,15 @@ bench-batched-smoke:
 	REPRO_BENCH_BATCHED=smoke $(PY) -m benchmarks.run batched \
 	    > artifacts/bench_batched.csv
 	cat artifacts/bench_batched.csv
+
+# CI smoke: fused epilogue vs separate elementwise tail through the Pallas
+# kernels in interpret mode (real in-kernel epilogue flush), CSV lands in
+# artifacts/
+bench-epilogue-smoke:
+	mkdir -p artifacts
+	REPRO_BENCH_EPILOGUE=smoke $(PY) -m benchmarks.run epilogue \
+	    > artifacts/bench_epilogue.csv
+	cat artifacts/bench_epilogue.csv
 
 # CI smoke: shard-count sweep + nnz-vs-row balance on a forced 8-device
 # CPU mesh (bench_sharded forces the device count itself when run as a

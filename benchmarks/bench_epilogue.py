@@ -1,0 +1,121 @@
+"""Fused epilogue vs. the unfused serving tail (MLP block, mini corpus).
+
+The pruned-FFN serving hot path is ``h = gelu(W1_csr @ x + b)``: an SpMM
+followed by an elementwise tail.  The serving loop (``examples/
+serve_pruned.py``) is a Python loop over layers — plans are built and
+layers dispatched eagerly, so before the fused epilogue the tail ran
+primitive-by-primitive against the SpMM's jitted program, with C crossing
+a program boundary per primitive.  Three timings per (matrix × dtype):
+
+* ``unfused`` — that pre-epilogue serving regime: ``execute_plan`` (one
+  jitted program) then an *eager* ``gelu(C + bias)`` — C is written, then
+  re-read by each tail primitive's dispatch,
+* ``fused``   — one ``execute_plan`` with
+  ``Epilogue(bias=True, activation="gelu")``: the tail is applied at the
+  accumulator flush inside the same program and the activated output is
+  written once.  ``derived`` reports unfused/fused next to the
+  bytes-moved ceiling from ``benchmarks.roofline.fused_epilogue_ceiling``
+  (a bandwidth-bound bound: CPU caches soften the round-trip it counts,
+  dispatch savings add back),
+* ``block``   — both steps inside *one* jit, unfused at the source level:
+  what whole-block jitting recovers when the serving loop can afford it
+  (static shapes, plans hoisted).  Reported for honesty: against this
+  baseline the epilogue's win is having *made* the block one program,
+  not extra bytes — XLA already fuses a jitted elementwise tail.
+
+Dtype configs: f32 end-to-end, and bf16 inputs with f32 accumulation
+(``acc_dtype="float32"``) writing bf16 — the mixed-precision serving
+setup, which also halves the bytes of every C crossing it removes.
+
+Matrices: the ``mini`` corpus suite (``repro.matrices.suites``) at the
+paper's n=64 — the sparse-d regime (d ≈ 3–24) where the tail is a real
+fraction of the call.  Smoke mode (``REPRO_BENCH_EPILOGUE=smoke``, used
+by ``make bench-epilogue-smoke``): one tiny synthetic matrix through the
+*Pallas kernels in interpret mode* — exercising the real in-kernel
+epilogue flush, not the XLA twin — with the CSV landing in artifacts/
+from CI.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Epilogue, ExecutionConfig, build_plan, execute_plan
+from repro.matrices import get_suite
+from .common import make_matrix, timeit
+from .roofline import fused_epilogue_ceiling
+
+N = 64
+EP = Epilogue(bias=True, activation="gelu")
+
+
+def _smoke() -> bool:
+    return os.environ.get("REPRO_BENCH_EPILOGUE", "") == "smoke"
+
+
+def _cases():
+    if _smoke():
+        return [("tiny", lambda: make_matrix(0, 64, 64, nnz_per_row=(0, 8)))]
+    return [(spec.name, spec) for spec in get_suite("mini")]
+
+
+def run(csv=print):
+    smoke = _smoke()
+    kw = dict(impl="pallas", interpret=True, tk=64) if smoke \
+        else dict(impl="xla")
+    warmup, repeat = (1, 2) if smoke else (2, 9)
+    dtypes = ("f32",) if smoke else ("f32", "bf16")
+    csv("name,us_per_call,derived")
+    for mat_name, build in _cases():
+        a = build()
+        plan = build_plan(a, method="merge", with_transpose=False)
+        nnz = int(a.col_ind.shape[0])
+        for dt in dtypes:
+            in_dtype = jnp.bfloat16 if dt == "bf16" else jnp.float32
+            nb = 2 if dt == "bf16" else 4
+            vals = a.vals.astype(in_dtype)
+            b = jax.random.normal(jax.random.PRNGKey(1),
+                                  (a.k, N)).astype(in_dtype)
+            bias = jax.random.normal(jax.random.PRNGKey(2), (a.m,),
+                                     jnp.float32).astype(in_dtype)
+            base = ExecutionConfig(acc_dtype="float32", **kw)
+            fused_ex = ExecutionConfig(acc_dtype="float32", epilogue=EP,
+                                       **kw)
+
+            # Pre-epilogue serving regime: execute_plan's program, then
+            # the tail dispatched eagerly (NOT jitted here on purpose).
+            def unfused(v, b2, bb):
+                return jax.nn.gelu(
+                    execute_plan(plan, v, b2, base) + bb[:, None])
+
+            def fused(v, b2, bb):
+                return execute_plan(plan, v, b2, fused_ex, bias=bb)
+
+            block = jax.jit(lambda v, b2, bb: jax.nn.gelu(
+                execute_plan(plan, v, b2, base) + bb[:, None]))
+
+            t0 = time.perf_counter()
+            jax.block_until_ready(fused(vals, b, bias))
+            cold = (time.perf_counter() - t0) * 1e6
+            t_un = timeit(unfused, vals, b, bias, warmup=warmup,
+                          repeat=repeat)
+            t_f = timeit(fused, vals, b, bias, warmup=warmup,
+                         repeat=repeat)
+            t_blk = timeit(block, vals, b, bias, warmup=warmup,
+                           repeat=repeat)
+            ceil = fused_epilogue_ceiling(a.m, a.k, N, nnz, val_bytes=nb,
+                                          out_bytes=nb)
+            name = f"epilogue_{mat_name}_{dt}"
+            csv(f"{name}_unfused,{t_un:.1f},1_program+eager_tail")
+            csv(f"{name}_fused,{t_f:.1f},"
+                f"{t_un / t_f:.2f}x_vs_unfused_ceiling_{ceil:.2f}x")
+            csv(f"{name}_block,{t_blk:.1f},"
+                f"whole_block_jit_{t_blk / t_f:.2f}x_of_fused")
+            csv(f"{name}_fused_cold,{cold:.1f},compile+run")
+
+
+if __name__ == "__main__":
+    run()

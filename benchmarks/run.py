@@ -10,8 +10,9 @@ import sys
 
 
 def main() -> None:
-    from . import (bench_batched, bench_corpus, bench_fig1_imbalance,
-                   bench_fig4_aspect, bench_fig5_rows, bench_fig6_heuristic,
+    from . import (bench_batched, bench_corpus, bench_epilogue,
+                   bench_fig1_imbalance, bench_fig4_aspect,
+                   bench_fig5_rows, bench_fig6_heuristic,
                    bench_fig7_density, bench_plan_reuse, bench_sharded,
                    bench_table1_analysis, bench_train_step,
                    bench_moe_balance)
@@ -25,6 +26,7 @@ def main() -> None:
         ("moe", bench_moe_balance),
         ("plan", bench_plan_reuse),
         ("batched", bench_batched),
+        ("epilogue", bench_epilogue),
         ("sharded", bench_sharded),
         ("train", bench_train_step),
         ("corpus", bench_corpus),

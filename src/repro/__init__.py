@@ -18,12 +18,14 @@ disappearing unannounced fails CI.
 """
 __version__ = "1.0.0"
 
-from repro.core import (CSR, ExecutionConfig, PlanPolicy, ShardSpec,
-                        SparseMatrix, SpmmPlan, execute_plan, spmm)
+from repro.core import (CSR, Epilogue, ExecutionConfig, PlanPolicy,
+                        ShardSpec, SparseMatrix, SpmmPlan, execute_plan,
+                        spmm)
 from repro.engine import get_plan
 
 __all__ = [
     "CSR",
+    "Epilogue",
     "ExecutionConfig",
     "PlanPolicy",
     "ShardSpec",

@@ -1,6 +1,7 @@
 from .config import (DEFAULT_TUNEDB, ExecutionConfig, PlanPolicy,
                      ResolvedPlan, ShardSpec)
 from .csr import CSR, from_dense, prune_to_csr, random_csr
+from .epilogue import Epilogue, apply_epilogue
 from .heuristic import Heuristic, PAPER_THRESHOLD, calibrate
 from .matrix import SparseMatrix
 from .partition import chunk_segments, partition_spmm
@@ -11,6 +12,7 @@ __all__ = [
     "DEFAULT_TUNEDB", "ExecutionConfig", "PlanPolicy", "ResolvedPlan",
     "ShardSpec",
     "CSR", "from_dense", "prune_to_csr", "random_csr",
+    "Epilogue", "apply_epilogue",
     "Heuristic", "PAPER_THRESHOLD", "calibrate",
     "SparseMatrix",
     "chunk_segments", "partition_spmm",

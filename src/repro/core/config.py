@@ -13,8 +13,10 @@ objects with different lifetimes:
   never pick different methods for the same matrix.
 
 * :class:`ExecutionConfig` — **per call, trace-safe**: which
-  implementation runs (``pallas`` | ``xla``), interpret mode, and the
-  K-tile cap ``tk``.  Changing it never invalidates a plan.
+  implementation runs (``pallas`` | ``xla``), interpret mode, the K-tile
+  cap ``tk``, the fused :class:`~repro.core.epilogue.Epilogue`, and the
+  accumulator/output dtype overrides.  Changing it never invalidates a
+  plan.
 
 Canonical v1 signatures::
 
@@ -30,7 +32,29 @@ import dataclasses
 import warnings
 from typing import Any, NamedTuple, Optional
 
+from .epilogue import Epilogue
 from .heuristic import Heuristic
+
+
+def _canon_dtype(x) -> Optional[str]:
+    """Normalize a dtype-ish to its canonical name string (or None).
+
+    Stored as a string so ExecutionConfig stays hashable and printable
+    without importing jax at config time; resolved back to a dtype at the
+    kernel boundary.
+    """
+    if x is None:
+        return None
+    if isinstance(x, str) and x in ("float32", "bfloat16", "float16",
+                                    "float64"):
+        return x
+    import jax.numpy as jnp
+
+    dt = jnp.dtype(x)
+    if not jnp.issubdtype(dt, jnp.floating):
+        raise ValueError(
+            f"ExecutionConfig dtypes must be floating, got {dt.name!r}")
+    return dt.name
 
 
 class _DefaultTuneDB:
@@ -244,11 +268,35 @@ class ExecutionConfig:
     mode (None: auto — interpret off TPU).  ``tk``: cap the K-tile of the
     streamed B panel (None: whole ``k`` up to
     ``kernels.merge_spmm.DEFAULT_TK_MAX``).
+
+    ``epilogue``: a fused :class:`~repro.core.epilogue.Epilogue` spec —
+    ``y = act(C + bias) * scale + residual`` applied at the kernels'
+    accumulator flush; the ``bias``/``residual`` *arrays* travel as
+    ``execute_plan``/``spmm`` call arguments.  ``acc_dtype``: accumulator
+    precision (None → float32 — e.g. bf16 values/B with f32
+    accumulation); ``out_dtype``: C's dtype (None → the promotion of the
+    input dtypes).  Dtypes are stored as canonical name strings so the
+    config stays hashable; anything ``jnp.dtype`` accepts is normalized.
+    An ``acc_dtype`` the inputs don't fit in (f32 inputs, bf16
+    accumulator) is rejected at call time — silent precision loss is a
+    silent wrong answer.
     """
 
     impl: str = "pallas"
     interpret: Optional[bool] = None
     tk: Optional[int] = None
+    epilogue: Optional[Epilogue] = None
+    acc_dtype: Optional[str] = None
+    out_dtype: Optional[str] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "acc_dtype", _canon_dtype(self.acc_dtype))
+        object.__setattr__(self, "out_dtype", _canon_dtype(self.out_dtype))
+        if self.epilogue is not None and \
+                not isinstance(self.epilogue, Epilogue):
+            raise TypeError(
+                "ExecutionConfig.epilogue must be a repro.core.Epilogue "
+                f"(got {type(self.epilogue).__name__})")
 
 
 DEFAULT_EXECUTION = ExecutionConfig()

@@ -1,0 +1,97 @@
+"""Fused epilogue spec: what happens to C between accumulator and HBM.
+
+The paper's design principle is minimizing global-memory round-trips; an
+unfused serving path violates it right after the kernel returns — the
+``(tokens, d_ff)`` SpMM output is written to HBM only to be immediately
+re-read for bias + GELU.  An :class:`Epilogue` describes that tail as a
+*static, hashable* spec so the kernels can apply it at accumulator-flush
+time (one pass over C instead of three) and the XLA refs can apply
+bit-identical math:
+
+    y = act(C + bias) * scale + residual
+
+with each stage optional.  The spec carries only *flags and constants*;
+the operand arrays (``bias (m,)``, ``residual (..., m, n)``) travel as
+ordinary call arguments so the spec stays jit-static and usable in
+``lru_cache`` keys.
+
+:func:`apply_epilogue` is the single implementation of the math — the
+Pallas kernels, the XLA refs, the sharded post-assembly path, and the
+test oracles all call it, so "fused" and "unfused" can never disagree on
+semantics (gelu is ``jax.nn.gelu`` with its default tanh approximation
+everywhere).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+_ACTIVATIONS = ("none", "relu", "gelu")
+
+
+@dataclasses.dataclass(frozen=True)
+class Epilogue:
+    """A fused C-tail: ``y = act(C + bias) * scale + residual``.
+
+    ``bias``/``residual`` are *flags* — the arrays ride as call arguments
+    (``execute_plan(..., bias=..., residual=...)``) and must be present
+    exactly when the flag is set.  ``activation`` is one of ``"none"`` |
+    ``"relu"`` | ``"gelu"``; ``scale`` is a static float (``None`` = 1).
+    Frozen and hashable: an Epilogue is part of the jit static signature
+    and the registry's op-cache key, like every other static decision.
+    """
+
+    bias: bool = False
+    activation: str = "none"
+    residual: bool = False
+    scale: Optional[float] = None
+
+    def __post_init__(self):
+        if self.activation not in _ACTIVATIONS:
+            raise ValueError(
+                f"Epilogue.activation must be one of {_ACTIVATIONS}, got "
+                f"{self.activation!r}")
+        if self.scale is not None:
+            object.__setattr__(self, "scale", float(self.scale))
+
+    def is_identity(self) -> bool:
+        """True iff this epilogue changes nothing (drop it entirely)."""
+        return (not self.bias and self.activation == "none"
+                and not self.residual and self.scale is None)
+
+
+def activation_fn(name: str):
+    """The activation callable — one definition for kernels, refs, and
+    oracles (``gelu`` is ``jax.nn.gelu``'s default tanh approximation)."""
+    import jax
+
+    if name == "relu":
+        return jax.nn.relu
+    if name == "gelu":
+        return jax.nn.gelu
+    raise ValueError(f"unknown epilogue activation {name!r}")
+
+
+def apply_epilogue(c, ep: Optional[Epilogue], bias=None, residual=None):
+    """Apply ``ep`` to an accumulator array *in its dtype*.
+
+    ``c`` is ``(..., m, n)`` (or a kernel's ``(tm, tn)`` tile);  ``bias``
+    must already be broadcastable against it (callers reshape ``(m,)`` →
+    ``(..., m, 1)`` / a tile's ``(tm, 1)``), ``residual`` likewise.
+    Operands are cast to ``c``'s dtype, so calling on the f32 accumulator
+    applies the whole tail in accumulation precision before the single
+    cast to the output dtype.
+    """
+    import jax.numpy as jnp
+
+    if ep is None:
+        return c
+    if ep.bias:
+        c = c + bias.astype(c.dtype)
+    if ep.activation != "none":
+        c = activation_fn(ep.activation)(c)
+    if ep.scale is not None:
+        c = c * jnp.asarray(ep.scale, c.dtype)
+    if ep.residual:
+        c = c + residual.astype(c.dtype)
+    return c

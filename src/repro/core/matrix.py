@@ -177,11 +177,15 @@ class SparseMatrix:
     # --------------------------------------------------------- execution ---
 
     def matmul(self, b: jax.Array, exec: Optional[ExecutionConfig] = None,
-               **legacy) -> jax.Array:
+               *, bias: Optional[jax.Array] = None,
+               residual: Optional[jax.Array] = None, **legacy) -> jax.Array:
         """C = A @ B (``b`` (..., k, n) → (..., m, n)), differentiable.
 
-        ``legacy`` forwards pre-v1 ``impl``/``interpret``/``tk`` kwargs to
-        the ``execute_plan`` deprecation shims.
+        ``bias``/``residual`` feed the fused epilogue (flags in
+        ``exec.epilogue``; auto-derived when unset — see
+        ``core.spmm.execute_plan``).  ``legacy`` forwards pre-v1
+        ``impl``/``interpret``/``tk`` kwargs to the ``execute_plan``
+        deprecation shims.
         """
         plan = self.spmm_plan
         if plan is None:
@@ -195,8 +199,10 @@ class SparseMatrix:
             plan = get_plan(self.data)
         if not isinstance(plan, SpmmPlan):     # device-sharded plan
             from repro.distributed.spmm import execute_sharded
-            return execute_sharded(plan, self.data.vals, b, exec, **legacy)
-        return execute_plan(plan, self.data.vals, b, exec, **legacy)
+            return execute_sharded(plan, self.data.vals, b, exec, bias=bias,
+                                   residual=residual, **legacy)
+        return execute_plan(plan, self.data.vals, b, exec, bias=bias,
+                            residual=residual, **legacy)
 
     def __matmul__(self, b) -> jax.Array:
         return self.matmul(b)

@@ -45,14 +45,17 @@ row (or column) shards, one local plan per shard — and both ``spmm`` and
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from .config import (ExecutionConfig, PlanPolicy, _UNSET, coalesce_exec,
                      coalesce_policy)
 from .csr import CSR
+from .epilogue import Epilogue, activation_fn, apply_epilogue
 from .plan import SpmmPlan, PlanMeta
 
 
@@ -76,13 +79,77 @@ def _is_traced(a: CSR) -> bool:
 # --------------------------------------------------- plan execution core ---
 
 
-def _forward(meta: PlanMeta, fwd: dict, vals, b, interpret, impl, tk, *,
-             vmappable: bool):
+def _resolve_exec(where: str, m: int, vals, b, exec: ExecutionConfig,
+                  bias, residual) -> ExecutionConfig:
+    """Normalize the per-call config against the actual operands.
+
+    Resolves the epilogue (auto-derived when ``bias``/``residual`` are
+    passed without one; flag/operand mismatches raise), canonicalizes
+    ``acc_dtype``/``out_dtype`` against the operand dtypes, and rejects
+    non-floating or precision-losing combinations up front — the kernels'
+    gathers and accumulators would otherwise return silently-wrong C.
+    """
+    for name, x in (("vals", vals), ("b", b)):
+        if not jnp.issubdtype(x.dtype, jnp.floating):
+            raise TypeError(
+                f"{where}() requires floating-point operands; {name} has "
+                f"dtype {x.dtype}. Cast explicitly — integer/bool "
+                "accumulation is not supported by the kernels.")
+    promoted = jnp.promote_types(vals.dtype, b.dtype)
+    acc = jnp.dtype(exec.acc_dtype) if exec.acc_dtype is not None \
+        else jnp.promote_types(promoted, jnp.float32)
+    if jnp.promote_types(promoted, acc) != acc:
+        raise ValueError(
+            f"acc_dtype={acc.name} cannot hold the promoted operand dtype "
+            f"{promoted.name} (vals {vals.dtype}, b {b.dtype}): "
+            "accumulating below the input precision silently loses bits. "
+            "Use a wider acc_dtype, or cast the operands down explicitly.")
+    out = jnp.dtype(exec.out_dtype) if exec.out_dtype is not None \
+        else promoted
+    ep = exec.epilogue
+    if ep is None and (bias is not None or residual is not None):
+        ep = Epilogue(bias=bias is not None, residual=residual is not None)
+    if ep is not None:
+        for flag, operand, name in ((ep.bias, bias, "bias"),
+                                    (ep.residual, residual, "residual")):
+            if flag and operand is None:
+                raise ValueError(
+                    f"{where}(): the epilogue flags {name} but no {name}= "
+                    "operand was passed.")
+            if not flag and operand is not None:
+                raise ValueError(
+                    f"{where}(): a {name}= operand was passed but the "
+                    f"explicit epilogue does not flag {name} — it would "
+                    f"be silently ignored. Set Epilogue({name}=True) or "
+                    "drop the operand.")
+        if ep.bias and bias.shape != (m,):
+            raise ValueError(
+                f"{where}(): bias must have shape ({m},) — one entry per "
+                f"C row — got {bias.shape}.")
+        if ep.residual and (residual.ndim < 2
+                            or residual.shape[-2:] != (m, b.shape[-1])):
+            raise ValueError(
+                f"{where}(): residual must have shape (..., {m}, "
+                f"{b.shape[-1]}) matching C, got {residual.shape}.")
+        if ep.is_identity():
+            ep = None
+    return dataclasses.replace(exec, epilogue=ep, acc_dtype=acc.name,
+                               out_dtype=out.name)
+
+
+def _forward(meta: PlanMeta, fwd: dict, vals, b, exec: ExecutionConfig,
+             bias, residual, *, vmappable: bool):
     registry = _registry()
     if vmappable:
-        return registry.execute_op(meta, tk, interpret, impl)(fwd, vals, b)
+        op = registry.execute_op(meta, exec.tk, exec.interpret, exec.impl,
+                                 exec.epilogue, exec.acc_dtype,
+                                 exec.out_dtype)
+        return op(fwd, vals, b, bias, residual)
     return registry.get_method(meta.method).execute(
-        meta, fwd, vals, b, tk=tk, interpret=interpret, impl=impl)
+        meta, fwd, vals, b, tk=exec.tk, interpret=exec.interpret,
+        impl=exec.impl, epilogue=exec.epilogue, bias=bias,
+        residual=residual, acc_dtype=exec.acc_dtype,
+        out_dtype=exec.out_dtype)
 
 
 def _int_zeros(tree):
@@ -91,35 +158,83 @@ def _int_zeros(tree):
         lambda x: np.zeros(x.shape, jax.dtypes.float0), tree)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
-def _execute_vjp(meta, interpret, impl, tk, fwd, bwd, vals, b):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _execute_vjp(meta, exec, fwd, bwd, vals, b, bias, residual):
     # The fwd/bwd bodies call the custom_vmap-wrapped ops: JAX vmaps these
     # bodies (it never differentiates them), so a vmapped batch axis lands
     # on the kernels' native batch grid instead of tracing into pallas_call.
-    return _forward(meta, fwd, vals, b, interpret, impl, tk, vmappable=True)
+    # ``exec`` is the normalized ExecutionConfig (frozen/hashable) — it
+    # rides as a nondiff arg so the epilogue and dtypes reach both bodies.
+    return _forward(meta, fwd, vals, b, exec, bias, residual,
+                    vmappable=True)
 
 
-def _execute_vjp_fwd(meta, interpret, impl, tk, fwd, bwd, vals, b):
-    out = _forward(meta, fwd, vals, b, interpret, impl, tk, vmappable=True)
-    return out, (fwd, bwd, vals, b)
+def _execute_vjp_fwd(meta, exec, fwd, bwd, vals, b, bias, residual):
+    ep = exec.epilogue
+    if ep is None or ep.activation == "none":
+        # Linear tail: fully fused forward; the backward needs no extra
+        # saved intermediate (the chain rule through +bias/*scale/+residual
+        # is dc-algebra only).
+        out = _forward(meta, fwd, vals, b, exec, bias, residual,
+                       vmappable=True)
+        return out, (fwd, bwd, vals, b, bias, residual, None)
+    # Nonlinear activation: fuse up to the pre-activation (C + bias, in acc
+    # precision) and save it — the backward re-derives act'(pre) from it.
+    # The act/scale/residual tail runs outside the kernel here; the
+    # forward-only path (no grad) keeps the full fusion.
+    pre_ep = dataclasses.replace(ep, activation="none", scale=None,
+                                 residual=False)
+    pre_exec = dataclasses.replace(
+        exec, epilogue=None if pre_ep.is_identity() else pre_ep,
+        out_dtype=exec.acc_dtype)
+    pre = _forward(meta, fwd, vals, b, pre_exec,
+                   bias if ep.bias else None, None, vmappable=True)
+    tail = dataclasses.replace(ep, bias=False)
+    out = apply_epilogue(pre, tail, None,
+                         residual if ep.residual else None)
+    return out.astype(jnp.dtype(exec.out_dtype)), \
+        (fwd, bwd, vals, b, bias, residual, pre)
 
 
-def _execute_vjp_bwd(meta, interpret, impl, tk, res, dc):
-    fwd, bwd, vals, b = res
+def _execute_vjp_bwd(meta, exec, res, dc):
+    fwd, bwd, vals, b, bias, residual, pre = res
     ops = _ops()
-    # dB = Aᵀ @ dC through the transpose merge plan: the CSC view gets the
+    ep = exec.epilogue
+    acc = jnp.dtype(exec.acc_dtype) if exec.acc_dtype else jnp.float32
+    # Epilogue chain rule, peeled outside-in: out = act(C + bias) * scale
+    # + residual  ⇒  d_residual = dc;  g = act'(pre) · (dc * scale) is the
+    # cotangent of C (and of bias, row-summed).
+    d_res = dc.astype(residual.dtype) \
+        if ep is not None and ep.residual else None
+    g = dc.astype(acc)
+    if ep is not None:
+        if ep.scale is not None:
+            g = g * ep.scale
+        if ep.activation != "none":
+            _, act_vjp = jax.vjp(activation_fn(ep.activation),
+                                 pre.astype(acc))
+            g = act_vjp(g)[0]
+    d_bias = None
+    if ep is not None and ep.bias:
+        d_bias = g.sum(axis=-1)
+        if d_bias.ndim > 1:
+            # Explicit leading batch dims: the bias is shared across them.
+            d_bias = d_bias.sum(axis=tuple(range(d_bias.ndim - 1)))
+        d_bias = d_bias.astype(bias.dtype)
+    # dB = Aᵀ @ g through the transpose merge plan: the CSC view gets the
     # same equal-nonzero balancing as the forward pass (batched like it).
-    db = ops.merge_execute_op(meta.k, tk, interpret, impl)(
-        bwd, vals, dc).astype(b.dtype)
-    # dvals = (dC · Bᵀ) sampled at the pattern (gather-dot SDDMM), reduced
+    db = ops.merge_execute_op(meta.k, exec.tk, exec.interpret, exec.impl)(
+        bwd, vals, g).astype(b.dtype)
+    # dvals = (g · Bᵀ) sampled at the pattern (gather-dot SDDMM), reduced
     # over any explicit batch dims — the values are shared across the batch.
     # (Under vmap the axis is implicit and JAX itself sums the cotangent
     # for the unbatched values primal.)
-    dvals = ops.sddmm_op(interpret, impl)(
-        fwd["nz_rows"], fwd["nz_cols"], fwd["nz_valid"], dc, b)
+    dvals = ops.sddmm_op(exec.interpret, exec.impl)(
+        fwd["nz_rows"], fwd["nz_cols"], fwd["nz_valid"], g, b)
     if dvals.ndim > 1:
         dvals = dvals.sum(axis=tuple(range(dvals.ndim - 1)))
-    return (_int_zeros(fwd), _int_zeros(bwd), dvals.astype(vals.dtype), db)
+    return (_int_zeros(fwd), _int_zeros(bwd), dvals.astype(vals.dtype), db,
+            d_bias, d_res)
 
 
 _execute_vjp.defvjp(_execute_vjp_fwd, _execute_vjp_bwd)
@@ -127,19 +242,31 @@ _execute_vjp.defvjp(_execute_vjp_fwd, _execute_vjp_bwd)
 
 def execute_plan(plan: SpmmPlan, vals: jax.Array, b: jax.Array,
                  exec: ExecutionConfig | None = None, *,
+                 bias: jax.Array | None = None,
+                 residual: jax.Array | None = None,
                  interpret=_UNSET, impl=_UNSET, tk=_UNSET) -> jax.Array:
     """Execute a prebuilt plan: C = A @ B with A's values given per call.
 
     Trace-safe (every static decision was captured at plan build) and
-    differentiable in ``vals`` and ``b`` when the plan carries its
-    transpose (``build_plan(..., with_transpose=True)``, the default).
+    differentiable in ``vals``, ``b``, ``bias`` and ``residual`` when the
+    plan carries its transpose (``build_plan(..., with_transpose=True)``,
+    the default).
 
     ``exec`` is the per-call :class:`ExecutionConfig` (implementation,
-    interpret mode, K-tile cap); the bare ``interpret``/``impl``/``tk``
-    kwargs are pre-v1 shims that warn once.  ``b`` may carry leading batch
-    dims — ``(..., k, n) → (..., m, n)`` runs the whole stack through one
-    kernel dispatch with shared values, and ``jax.vmap`` over the 2-D form
-    lowers to the same batched path.
+    interpret mode, K-tile cap, fused epilogue, accumulation/output
+    dtypes); the bare ``interpret``/``impl``/``tk`` kwargs are pre-v1
+    shims that warn once.  ``b`` may carry leading batch dims —
+    ``(..., k, n) → (..., m, n)`` runs the whole stack through one kernel
+    dispatch with shared values, and ``jax.vmap`` over the 2-D form lowers
+    to the same batched path.
+
+    ``bias (m,)`` / ``residual (..., m, n)`` feed the fused epilogue
+    ``act(C + bias) * scale + residual`` — flags in ``exec.epilogue`` (an
+    :class:`Epilogue`; auto-derived from the operands when unset) —
+    applied at the kernels' accumulator flush in ``exec.acc_dtype`` (f32
+    by default, also under bf16 inputs) with one cast to
+    ``exec.out_dtype``.  One pass over C instead of a write + re-read per
+    tail op.
     """
     exec = coalesce_exec("execute_plan", exec, impl=impl,
                          interpret=interpret, tk=tk)
@@ -154,13 +281,15 @@ def execute_plan(plan: SpmmPlan, vals: jax.Array, b: jax.Array,
         raise ValueError(
             f"plan expects B of shape (..., {plan.meta.k}, n) for pattern "
             f"{plan.meta.shape}, got {b.shape}")
+    exec = _resolve_exec("execute_plan", plan.meta.m, vals, b, exec,
+                         bias, residual)
     if plan.bwd is None:
         # Forward-only plan: plain ops (keeps ordinary XLA autodiff for
         # impl="xla" callers; build with a transpose for vmap support).
-        return _forward(plan.meta, plan.fwd, vals, b, exec.interpret,
-                        exec.impl, exec.tk, vmappable=False)
-    return _execute_vjp(plan.meta, exec.interpret, exec.impl, exec.tk,
-                        plan.fwd, plan.bwd, vals, b)
+        return _forward(plan.meta, plan.fwd, vals, b, exec, bias, residual,
+                        vmappable=False)
+    return _execute_vjp(plan.meta, exec, plan.fwd, plan.bwd, vals, b,
+                        bias, residual)
 
 
 # ------------------------------------------------------------ public API ---
@@ -231,6 +360,8 @@ def _check_sharded_overrides(plan, policy: PlanPolicy) -> None:
 def spmm(a: CSR, b: jax.Array, policy: PlanPolicy | None = None,
          exec: ExecutionConfig | None = None, *,
          plan: SpmmPlan | str | None = None,
+         bias: jax.Array | None = None,
+         residual: jax.Array | None = None,
          method=_UNSET, l_pad=_UNSET, t=_UNSET, heuristic=_UNSET,
          interpret=_UNSET, impl=_UNSET, tk=_UNSET) -> jax.Array:
     """Sparse(CSR) × dense = dense.  ``b`` is (..., k, n); returns (..., m, n).
@@ -257,6 +388,12 @@ def spmm(a: CSR, b: jax.Array, policy: PlanPolicy | None = None,
       ``PlanPolicy.resolve`` as the planned path (TuneDB ladder included);
       under trace an explicit method is required — resolution is a
       host-side decision.
+
+    ``bias``/``residual`` feed the epilogue ``act(C + bias) * scale +
+    residual`` (flags in ``exec.epilogue``; see :func:`execute_plan`).
+    On the planned and sharded paths the epilogue fuses into the kernels'
+    output write; the inline path plans per call and applies it as a
+    separate XLA tail — same math, none of the fusion.
     """
     policy = coalesce_policy("spmm", policy, method=method, t=t,
                              l_pad=l_pad, heuristic=heuristic)
@@ -264,18 +401,21 @@ def spmm(a: CSR, b: jax.Array, policy: PlanPolicy | None = None,
                          tk=tk)
     if isinstance(plan, SpmmPlan):
         _check_plan_overrides(plan, policy)
-        return execute_plan(plan, a.vals, b, exec)
+        return execute_plan(plan, a.vals, b, exec, bias=bias,
+                            residual=residual)
     if plan is not None and not isinstance(plan, str):
         from repro.distributed.spmm import ShardedSpmmPlan
         if isinstance(plan, ShardedSpmmPlan):
             _check_sharded_overrides(plan, policy)
-            return plan.execute(a.vals, b, exec)
+            return plan.execute(a.vals, b, exec, bias=bias,
+                                residual=residual)
     if plan is None and not _is_traced(a):
         from repro.engine import get_plan
         built = get_plan(a, policy=policy)
         if isinstance(built, SpmmPlan):
-            return execute_plan(built, a.vals, b, exec)
-        return built.execute(a.vals, b, exec)
+            return execute_plan(built, a.vals, b, exec, bias=bias,
+                                residual=residual)
+        return built.execute(a.vals, b, exec, bias=bias, residual=residual)
     if plan not in (None, "inline"):
         raise ValueError(f"plan must be an SpmmPlan, a ShardedSpmmPlan, "
                          f"None, or 'inline'; got {plan!r}")
@@ -313,5 +453,17 @@ def spmm(a: CSR, b: jax.Array, policy: PlanPolicy | None = None,
         raise ValueError(
             f"SpMM method {m_name!r} has no inline (plan-per-call) form; "
             "build a plan instead: repro.engine.get_plan(a, policy=...)")
-    return spec.inline(a, b, t=t_val, tl=tl_val, l_pad=l_val, extra=extra,
-                       tk=exec.tk, interpret=exec.interpret, impl=exec.impl)
+    exec = _resolve_exec("spmm", a.m, a.vals, b, exec, bias, residual)
+    out = spec.inline(a, b, t=t_val, tl=tl_val, l_pad=l_val, extra=extra,
+                      tk=exec.tk, interpret=exec.interpret, impl=exec.impl)
+    # The inline forms predate the fused tail: apply the epilogue (and the
+    # dtype contract) post hoc — same math as the fused paths, none of the
+    # fusion, which only matters in the plan-once serving regime anyway.
+    ep = exec.epilogue
+    if ep is not None:
+        acc = jnp.dtype(exec.acc_dtype)
+        out = apply_epilogue(
+            out.astype(acc), ep,
+            bias.astype(acc)[:, None] if ep.bias else None,
+            residual if ep.residual else None)
+    return out.astype(jnp.dtype(exec.out_dtype))

@@ -277,8 +277,11 @@ class ShardedSpmmPlan:
         return self.meta.method
 
     def execute(self, vals: jax.Array, b: jax.Array,
-                exec: ExecutionConfig | None = None) -> jax.Array:
-        return execute_sharded(self, vals, b, exec)
+                exec: ExecutionConfig | None = None, *,
+                bias: jax.Array | None = None,
+                residual: jax.Array | None = None) -> jax.Array:
+        return execute_sharded(self, vals, b, exec, bias=bias,
+                               residual=residual)
 
     # Stacked leaves for the SPMD path, memoized per live (concrete) plan
     # object so the execute-many regime stacks once, not per call.  Traced
@@ -424,14 +427,23 @@ def _concat_rows(outs, bounds):
 
 def execute_sharded(plan: ShardedSpmmPlan, vals: jax.Array, b: jax.Array,
                     exec: ExecutionConfig | None = None, *,
+                    bias: jax.Array | None = None,
+                    residual: jax.Array | None = None,
                     interpret=_UNSET, impl=_UNSET, tk=_UNSET) -> jax.Array:
     """C = A @ B through a sharded plan, with A's *global* values per call.
 
     Mirrors ``core.spmm.execute_plan``: trace-safe, differentiable in
-    ``vals`` and ``b``, batched ``b (..., k, n) → (..., m, n)``.  With a
-    uniform plan and a matching mesh this is one ``shard_map`` dispatch
-    (each device runs its local planned kernel); otherwise a per-shard
-    loop computes the same values on whatever devices hold the data.
+    ``vals``, ``b``, ``bias`` and ``residual``, batched ``b (..., k, n) →
+    (..., m, n)``.  With a uniform plan and a matching mesh this is one
+    ``shard_map`` dispatch (each device runs its local planned kernel);
+    otherwise a per-shard loop computes the same values on whatever
+    devices hold the data.
+
+    The epilogue applies *after* shard assembly — a row shard holds only a
+    row slice of C (the bias/residual would need slicing), and a column
+    shard holds a rank-``m`` *partial sum*, through which a nonlinear
+    activation does not commute — so the shards run epilogue-free in
+    ``acc_dtype`` and the single tail pass lands on the assembled C.
     """
     exec = coalesce_exec("execute_sharded", exec, impl=impl,
                          interpret=interpret, tk=tk)
@@ -444,10 +456,25 @@ def execute_sharded(plan: ShardedSpmmPlan, vals: jax.Array, b: jax.Array,
         raise ValueError(
             f"sharded plan expects B of shape (..., {meta.k}, n) for "
             f"pattern {meta.shape}, got {b.shape}")
+    from repro.core.spmm import _resolve_exec
+    exec = _resolve_exec("execute_sharded", meta.m, vals, b, exec,
+                         bias, residual)
+    ep = exec.epilogue
+    # Shards emit acc-precision blocks/partials (a cols-dim psum must not
+    # sum down-cast partials); the out_dtype cast waits for the tail.
+    inner = dataclasses.replace(exec, epilogue=None,
+                                out_dtype=exec.acc_dtype)
     mesh = meta.spmd_mesh()
-    if mesh is not None:
-        return _execute_spmd(plan, vals, b, exec, mesh)
-    return _execute_loop(plan, vals, b, exec)
+    out = _execute_spmd(plan, vals, b, inner, mesh) if mesh is not None \
+        else _execute_loop(plan, vals, b, inner)
+    if ep is not None:
+        from repro.core.epilogue import apply_epilogue
+        acc = jnp.dtype(exec.acc_dtype)
+        out = apply_epilogue(
+            out, ep,
+            bias.astype(acc)[:, None] if ep.bias else None,
+            residual if ep.residual else None)
+    return out.astype(jnp.dtype(exec.out_dtype))
 
 
 def _execute_loop(plan, vals, b, exec):

@@ -47,6 +47,7 @@ from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from repro.core.csr import CSR, rows_from_row_ptr
+from repro.core.epilogue import apply_epilogue
 
 # Default tile sizes: TN = 128 lanes (the "warp width" / coalescing unit),
 # TM = 8 sublanes, T = nonzeroes per chunk (the paper's blockDim.x work unit).
@@ -175,9 +176,28 @@ def plan_merge(a: CSR, *, t: int = DEFAULT_T, tm: int = TM):
     return plan
 
 
-def _merge_kernel(tile_ref, first_ref, last_ref, cols_ref, vals_ref, lrow_ref,
-                  b_ref, o_ref, acc_ref, *, tm: int, tk: int, n_k: int,
-                  acc_dtype):
+def pack_vals(vals: jax.Array, nnz_pad: int, *, tn: int = TN) -> jax.Array:
+    """Lay the raw values out as one whole-block (1, NV) kernel operand.
+
+    Zero-padded past the sentinel index ``nnz_pad`` (and up to a lane
+    multiple), so the in-kernel ``slot_nz`` gather keeps ``apply_vals``'s
+    contract — unused slots read a zero — without ever materializing the
+    padded per-slot layout in HBM.
+    """
+    nv = tn * (-(-(nnz_pad + 1) // tn))
+    return jnp.pad(vals, (0, nv - nnz_pad)).reshape(1, nv)
+
+
+def _merge_kernel(tile_ref, first_ref, last_ref, cols_ref, slot_ref,
+                  lrow_ref, vals_ref, b_ref, *rest, tm: int, tk: int,
+                  n_k: int, acc_dtype, ep):
+    i = 0
+    bias_ref = res_ref = None
+    if ep is not None and ep.bias:
+        bias_ref, i = rest[i], i + 1
+    if ep is not None and ep.residual:
+        res_ref, i = rest[i], i + 1
+    o_ref, acc_ref = rest[i], rest[i + 1]
     c = pl.program_id(2)
     kk = pl.program_id(3)
 
@@ -192,7 +212,11 @@ def _merge_kernel(tile_ref, first_ref, last_ref, cols_ref, vals_ref, lrow_ref,
     # accumulator carry when their panel streams in.
     local = cols - kk * tk
     in_panel = (local >= 0) & (local < tk)
-    vals = jnp.where(in_panel, vals_ref[0], 0).astype(acc_dtype)  # (t,)
+    # In-kernel values gather: each slot names its flat nonzero id
+    # (sentinel nnz_pad lands in the operand's zero padding), replacing
+    # the per-call HBM materialization of the chunked values.
+    vals = jnp.take(vals_ref[0], slot_ref[0], axis=0)     # (t,)
+    vals = jnp.where(in_panel, vals, 0).astype(acc_dtype)
     # Row-major coalesced gather of B rows (lane-contiguous slices).
     bgat = jnp.take(b_ref[0], jnp.where(in_panel, local, 0),
                     axis=0).astype(acc_dtype)             # (t, TN)
@@ -206,16 +230,37 @@ def _merge_kernel(tile_ref, first_ref, last_ref, cols_ref, vals_ref, lrow_ref,
 
     @pl.when((last_ref[c] == 1) & (kk == n_k - 1))
     def _flush():
-        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+        # Fused epilogue on the accumulator: one pass over C instead of a
+        # write + re-read for bias/activation/residual.
+        r = apply_epilogue(
+            acc_ref[...], ep,
+            bias_ref[0][:, None] if bias_ref is not None else None,
+            res_ref[0] if res_ref is not None else None)
+        o_ref[0] = r.astype(o_ref.dtype)
 
 
-def merge_spmm_pallas(plan: dict, b: jax.Array, m_pad: int, *,
-                      tm: int = TM, tn: int = TN, tk: int | None = None,
-                      interpret: bool = False) -> jax.Array:
+def merge_spmm_pallas(plan: dict, vals: jax.Array, b: jax.Array,
+                      m_pad: int, *, tm: int = TM, tn: int = TN,
+                      tk: int | None = None, interpret: bool = False,
+                      acc_dtype=jnp.float32, out_dtype=None,
+                      epilogue=None, bias=None,
+                      residual=None) -> jax.Array:
     """Phase 2. ``b`` is (batch, k, n), n % tn == 0, m_pad % tm == 0.
+
+    ``plan`` is the pattern structure (``plan_merge_structure``); ``vals``
+    the raw (nnz_pad,) value vector, gathered in-kernel through
+    ``slot_nz``.  ``epilogue`` (a ``repro.core.Epilogue``) fuses
+    ``act(C + bias) * scale + residual`` into the accumulator flush —
+    ``bias (m_pad,)`` and ``residual (batch, m_pad, n)`` must be present
+    exactly per its flags.  Accumulation runs in ``acc_dtype`` (f32 by
+    default, also under bf16 inputs); C is written once in ``out_dtype``
+    (default: b's dtype).
 
     Returns (batch, m_pad, n): the batch rides the leading grid axis (one
     dispatch for the whole stack) and B streams in (TK, TN) VMEM panels.
+    The raw values sit whole in VMEM as one (1, NV) block — fine on the
+    interpret/CPU substrate and at pruned-FFN sizes; a real-TPU port at
+    very large nnz would window this per chunk range.
     """
     batch, k, n = b.shape
     n_chunks, t = plan["cols"].shape
@@ -223,32 +268,48 @@ def merge_spmm_pallas(plan: dict, b: jax.Array, m_pad: int, *,
     kpad = n_k * tk - k
     if kpad:
         b = jnp.pad(b, ((0, 0), (0, kpad), (0, 0)))
-    acc_dtype = jnp.float32
+    nnz_pad = vals.shape[0]
+    vals2 = pack_vals(vals, nnz_pad, tn=tn)
+    nv = vals2.shape[1]
+    ep = epilogue
+    out_dtype = b.dtype if out_dtype is None else out_dtype
     grid = (batch, n // tn, n_chunks, n_k)
+    in_specs = [
+        pl.BlockSpec((1, t), lambda bb, j, c, kk, tile, first, last:
+                     (c, 0)),
+        pl.BlockSpec((1, t), lambda bb, j, c, kk, tile, first, last:
+                     (c, 0)),
+        pl.BlockSpec((1, t), lambda bb, j, c, kk, tile, first, last:
+                     (c, 0)),
+        pl.BlockSpec((1, nv), lambda bb, j, c, kk, tile, first, last:
+                     (0, 0)),
+        pl.BlockSpec((1, tk, tn), lambda bb, j, c, kk, tile, first, last:
+                     (bb, kk, j)),
+    ]
+    operands = [plan["cols"], plan["slot_nz"], plan["lrow"], vals2, b]
+    if ep is not None and ep.bias:
+        in_specs.append(pl.BlockSpec(
+            (1, tm), lambda bb, j, c, kk, tile, first, last: (tile[c], 0)))
+        operands.append(bias.reshape(m_pad // tm, tm))
+    if ep is not None and ep.residual:
+        in_specs.append(pl.BlockSpec(
+            (1, tm, tn), lambda bb, j, c, kk, tile, first, last:
+            (bb, tile[c], j)))
+        operands.append(residual)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, t), lambda bb, j, c, kk, tile, first, last:
-                         (c, 0)),
-            pl.BlockSpec((1, t), lambda bb, j, c, kk, tile, first, last:
-                         (c, 0)),
-            pl.BlockSpec((1, t), lambda bb, j, c, kk, tile, first, last:
-                         (c, 0)),
-            pl.BlockSpec((1, tk, tn), lambda bb, j, c, kk, tile, first, last:
-                         (bb, kk, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, tm, tn), lambda bb, j, c, kk, tile, first, last:
             (bb, tile[c], j)),
         scratch_shapes=[pltpu.VMEM((tm, tn), acc_dtype)],
     )
     kernel = functools.partial(_merge_kernel, tm=tm, tk=tk, n_k=n_k,
-                               acc_dtype=acc_dtype)
+                               acc_dtype=acc_dtype, ep=ep)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((batch, m_pad, n), b.dtype),
+        out_shape=jax.ShapeDtypeStruct((batch, m_pad, n), out_dtype),
         interpret=interpret,
-    )(plan["tile"], plan["first"], plan["last"],
-      plan["cols"], plan["vals"], plan["lrow"], b)
+    )(plan["tile"], plan["first"], plan["last"], *operands)

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.csr import CSR
+from repro.core.epilogue import apply_epilogue
 from . import flash_attention as _flash
 from . import merge_spmm as _merge
 from . import moe_gemm as _moe
@@ -65,10 +66,10 @@ def merge_spmm(a: CSR, b: jax.Array, *, t: int | None = None,
         interpret = _interpret_default()
     m = a.m
     b2 = _pad_axis(b, _merge.TN, 1)
-    plan = _merge.plan_merge(a, t=t)
+    structure = _merge.plan_merge_structure(a, t=t)
     m_pad = _merge.TM * (-(-m // _merge.TM))
-    out = _merge.merge_spmm_pallas(plan, b2[None], m_pad, tk=tk,
-                                   interpret=interpret)
+    out = _merge.merge_spmm_pallas(structure, a.vals, b2[None], m_pad,
+                                   tk=tk, interpret=interpret)
     return out[0, :m, : b.shape[1]]
 
 
@@ -118,70 +119,131 @@ def _rowsplit_spmm_jit(a: CSR, b: jax.Array, *, l_pad: int,
     if interpret is None:
         interpret = _interpret_default()
     b2 = _pad_axis(b, _rowsplit.TN, 1)
-    plan = _rowsplit.plan_rowsplit(a, l_pad=l_pad, tl=tl)
-    out = _rowsplit.rowsplit_spmm_pallas(plan, b2[None], tl=tl, tk=tk,
-                                         interpret=interpret)
+    structure = _rowsplit.plan_rowsplit_structure(a, l_pad=l_pad, tl=tl)
+    out = _rowsplit.rowsplit_spmm_pallas(structure, a.vals, b2[None], tl=tl,
+                                         tk=tk, interpret=interpret)
     return out[0, : a.m, : b.shape[1]]
 
 
+def _resolve_dtypes(vals, b, acc_dtype, out_dtype):
+    """(acc, out) dtypes: f32 accumulation and operand promotion defaults."""
+    adt = jnp.float32 if acc_dtype is None else jnp.dtype(acc_dtype)
+    odt = jnp.promote_types(vals.dtype, b.dtype) if out_dtype is None \
+        else jnp.dtype(out_dtype)
+    return adt, odt
+
+
+def _apply_tail(c, ep, bias, residual):
+    """Post-hoc epilogue for the degenerate (kernel-free) early-outs: even
+    with no contributing nonzero, ``act(0 + bias) * scale + residual`` is
+    generally nonzero and must still be produced."""
+    if ep is None:
+        return c
+    bias_col = bias.astype(c.dtype)[:, None] if ep.bias else None
+    return apply_epilogue(c, ep, bias_col, residual if ep.residual else None)
+
+
+def _pad_epilogue_operands(ep, bias, residual, lead, m, n, m_pad, tn):
+    """Kernel-shaped epilogue operands: bias (m,) → (m_pad,); residual
+    broadcast over ``lead`` then folded/padded like the dense operand."""
+    extra = {}
+    if ep is None:
+        return extra
+    extra["epilogue"] = ep
+    if ep.bias:
+        extra["bias"] = jnp.pad(bias, (0, m_pad - m))
+    if ep.residual:
+        res3 = _lead_fold(jnp.broadcast_to(residual, lead + (m, n)))
+        res3 = jnp.pad(res3, ((0, 0), (0, m_pad - m), (0, 0)))
+        extra["residual"] = _pad_axis(res3, tn, 2)
+    return extra
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("m", "tk", "interpret", "impl"))
+                   static_argnames=("m", "tk", "interpret", "impl",
+                                    "epilogue", "acc_dtype", "out_dtype"))
 def merge_execute(structure: dict, vals: jax.Array, b: jax.Array, *, m: int,
                   tk: int | None = None, interpret: bool | None = None,
-                  impl: str = "pallas"):
+                  impl: str = "pallas", epilogue=None, bias=None,
+                  residual=None, acc_dtype=None, out_dtype=None):
     """Execute a prebuilt merge structure: C = A @ B with per-call values.
 
     ``structure`` is the pattern-only plan from
     ``merge_spmm.plan_merge_structure`` (built once per sparsity pattern by
     ``repro.core.plan`` / cached by ``repro.engine``); ``vals`` is the
-    (nnz_pad,) value vector of the call.  No planning happens here — only a
-    single slot gather plus the phase-2 kernel.  ``b`` may carry leading
-    batch dims: (..., k, n) → (..., m, n), one kernel dispatch overall.
+    (nnz_pad,) value vector of the call, gathered in-kernel through
+    ``slot_nz`` — no per-call padded-layout materialization in HBM.  ``b``
+    may carry leading batch dims: (..., k, n) → (..., m, n), one kernel
+    dispatch overall.
+
+    ``epilogue`` (``repro.core.Epilogue``) fuses ``act(C + bias) * scale +
+    residual`` into the accumulator flush; ``bias (m,)`` and ``residual
+    (..., m, n)`` (broadcast over the batch) ride per its flags.
+    ``acc_dtype`` (default f32) is the accumulation precision, ``out_dtype``
+    (default: operand promotion) the single C write.
     """
     lead, n = b.shape[:-2], b.shape[-1]
+    adt, odt = _resolve_dtypes(vals, b, acc_dtype, out_dtype)
+    ep = epilogue
     if m == 0 or b.shape[-2] == 0:
-        # Degenerate 0-row / 0-col pattern: the product is empty or zero
-        # with no nonzero contributing — skip the kernel entirely.
-        return jnp.zeros(lead + (m, n), b.dtype)
-    chunk_vals = _merge.apply_vals(structure, vals)
+        # Degenerate 0-row / 0-col pattern: no nonzero contributes — skip
+        # the kernel, but the epilogue tail still applies to C = 0.
+        c = jnp.zeros(lead + (m, n), adt)
+        return _apply_tail(c, ep, bias, residual).astype(odt)
     if impl == "xla":
-        return _ref.merge_execute_ref(structure, chunk_vals, b, m, _merge.TM)
+        res = None if ep is None or not ep.residual else \
+            jnp.broadcast_to(residual, lead + (m, n))
+        return _ref.merge_execute_ref(
+            structure, vals, b, m, _merge.TM, epilogue=ep, bias=bias,
+            residual=res, acc_dtype=adt, out_dtype=odt)
     if interpret is None:
         interpret = _interpret_default()
     b3 = _pad_axis(_lead_fold(b), _merge.TN, 2)
     m_pad = _merge.TM * (-(-m // _merge.TM))
-    plan = dict(structure)
-    plan["vals"] = chunk_vals
-    out = _merge.merge_spmm_pallas(plan, b3, m_pad, tk=tk,
-                                   interpret=interpret)
+    extra = _pad_epilogue_operands(ep, bias, residual, lead, m, n, m_pad,
+                                   _merge.TN)
+    out = _merge.merge_spmm_pallas(structure, vals, b3, m_pad, tk=tk,
+                                   interpret=interpret, acc_dtype=adt,
+                                   out_dtype=odt, **extra)
     return out[:, :m, :n].reshape(lead + (m, n))
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("m", "tl", "tk", "interpret", "impl"))
+                   static_argnames=("m", "tl", "tk", "interpret", "impl",
+                                    "epilogue", "acc_dtype", "out_dtype"))
 def rowsplit_execute(structure: dict, vals: jax.Array, b: jax.Array, *,
                      m: int, tl: int = _rowsplit.DEFAULT_TL,
                      tk: int | None = None, interpret: bool | None = None,
-                     impl: str = "pallas"):
+                     impl: str = "pallas", epilogue=None, bias=None,
+                     residual=None, acc_dtype=None, out_dtype=None):
     """Execute a prebuilt ELL structure: row-split SpMM with per-call values.
 
     The static ``l_pad`` is baked into the structure's (m_pad, L) shape, so
     this is trace-safe with no l_pad argument.  ``b`` may carry leading
-    batch dims: (..., k, n) → (..., m, n).
+    batch dims: (..., k, n) → (..., m, n).  ``epilogue``/``bias``/
+    ``residual`` and ``acc_dtype``/``out_dtype`` as in ``merge_execute``.
     """
     lead, n = b.shape[:-2], b.shape[-1]
+    adt, odt = _resolve_dtypes(vals, b, acc_dtype, out_dtype)
+    ep = epilogue
     if m == 0 or b.shape[-2] == 0:
-        return jnp.zeros(lead + (m, n), b.dtype)
-    ell_vals = _merge.apply_vals(structure, vals)
+        c = jnp.zeros(lead + (m, n), adt)
+        return _apply_tail(c, ep, bias, residual).astype(odt)
     if impl == "xla":
-        return _ref.rowsplit_execute_ref(structure, ell_vals, b, m)
+        res = None if ep is None or not ep.residual else \
+            jnp.broadcast_to(residual, lead + (m, n))
+        return _ref.rowsplit_execute_ref(
+            structure, vals, b, m, epilogue=ep, bias=bias, residual=res,
+            acc_dtype=adt, out_dtype=odt)
     if interpret is None:
         interpret = _interpret_default()
     b3 = _pad_axis(_lead_fold(b), _rowsplit.TN, 2)
-    plan = dict(structure)
-    plan["vals"] = ell_vals
-    out = _rowsplit.rowsplit_spmm_pallas(plan, b3, tl=tl, tk=tk,
-                                         interpret=interpret)
+    m_pad = structure["cols"].shape[0]
+    extra = _pad_epilogue_operands(ep, bias, residual, lead, m, n, m_pad,
+                                   _rowsplit.TN)
+    out = _rowsplit.rowsplit_spmm_pallas(structure, vals, b3, tl=tl, tk=tk,
+                                         interpret=interpret, acc_dtype=adt,
+                                         out_dtype=odt, **extra)
     return out[:, :m, :n].reshape(lead + (m, n))
 
 

@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.csr import CSR
+from repro.core.epilogue import apply_epilogue
 from repro.core.partition import chunk_segments, partition_spmm
 
 
@@ -86,41 +87,84 @@ def _map_leading(one, *stacked):
     return out.reshape(lead + out.shape[1:])
 
 
-def merge_execute_ref(structure: dict, chunk_vals: jax.Array, b: jax.Array,
-                      m: int, tm: int) -> jax.Array:
+def _slot_gather(structure: dict, vals: jax.Array) -> jax.Array:
+    """Per-slot values through ``slot_nz`` (sentinel → appended zero) —
+    the XLA twin of the kernels' in-kernel gather."""
+    vals_ext = jnp.concatenate([vals, jnp.zeros((1,), vals.dtype)])
+    return vals_ext[structure["slot_nz"]]
+
+
+def _finish(out, ep, bias_col, res2, out_dtype):
+    return apply_epilogue(out, ep, bias_col, res2).astype(out_dtype)
+
+
+def merge_execute_ref(structure: dict, vals: jax.Array, b: jax.Array,
+                      m: int, tm: int, *, epilogue=None, bias=None,
+                      residual=None, acc_dtype=jnp.float32,
+                      out_dtype=None) -> jax.Array:
     """Plan-execute reference for the merge structure (differentiable XLA).
 
     Same dataflow as ``merge_spmm_pallas`` on a prebuilt pattern structure:
-    gather B rows per chunk slot, multiply by the per-call values, scatter
-    into C by (tile, lrow).  Unused slots carry value 0 and scatter 0.
-    ``b`` may carry leading batch dims — (..., k, n) → (..., m, n), matching
-    the batched kernel grid (K-tiling is a VMEM-residency concern with no
-    XLA analogue: the compiler owns the streaming here).
+    gather the raw ``vals`` into chunk slots (``slot_nz``), gather B rows
+    per slot, multiply, scatter into C by (tile, lrow) — all in
+    ``acc_dtype`` — then apply the fused ``epilogue`` identically to the
+    kernel's accumulator flush and cast once to ``out_dtype``.  Unused
+    slots carry value 0 and scatter 0.  ``b`` may carry leading batch dims
+    — (..., k, n) → (..., m, n), matching the batched kernel grid
+    (K-tiling is a VMEM-residency concern with no XLA analogue: the
+    compiler owns the streaming here); a flagged ``residual`` batches with
+    it.
     """
-    def one(b2):
-        prods = chunk_vals[..., None] * b2[structure["cols"]]   # (C, t, n)
+    acc = jnp.dtype(acc_dtype)
+    odt = jnp.promote_types(vals.dtype, b.dtype) if out_dtype is None \
+        else jnp.dtype(out_dtype)
+    ep = epilogue
+    chunk_vals = _slot_gather(structure, vals).astype(acc)
+    bias_col = bias.astype(acc)[:, None] \
+        if ep is not None and ep.bias else None
+
+    def one(b2, res2=None):
+        prods = chunk_vals[..., None] * b2.astype(acc)[structure["cols"]]
         rows = structure["tile"][:, None] * tm + structure["lrow"]
         m_pad = tm * (-(-m // tm))
         out = jax.ops.segment_sum(prods.reshape(-1, b2.shape[-1]),
                                   rows.reshape(-1), num_segments=m_pad)
-        return out[:m]
+        return _finish(out[:m], ep, bias_col, res2, odt)
 
     if b.ndim == 2:
-        return one(b)
+        return one(b, residual)
+    if ep is not None and ep.residual:
+        return _map_leading(lambda args: one(*args), b, residual)
     return _map_leading(one, b)
 
 
-def rowsplit_execute_ref(structure: dict, ell_vals: jax.Array,
-                         b: jax.Array, m: int) -> jax.Array:
+def rowsplit_execute_ref(structure: dict, vals: jax.Array,
+                         b: jax.Array, m: int, *, epilogue=None, bias=None,
+                         residual=None, acc_dtype=jnp.float32,
+                         out_dtype=None) -> jax.Array:
     """Plan-execute reference for the ELL structure (differentiable XLA).
 
-    Batched like the kernel: ``b (..., k, n) → (..., m, n)``.
+    Raw ``vals`` gathered through ``slot_nz`` like the kernel; batched
+    like it too: ``b (..., k, n) → (..., m, n)``; fused ``epilogue`` and
+    ``acc_dtype``/``out_dtype`` as in ``merge_execute_ref``.
     """
-    def one(b2):
-        return jnp.einsum("ml,mln->mn", ell_vals, b2[structure["cols"]])[:m]
+    acc = jnp.dtype(acc_dtype)
+    odt = jnp.promote_types(vals.dtype, b.dtype) if out_dtype is None \
+        else jnp.dtype(out_dtype)
+    ep = epilogue
+    ell_vals = _slot_gather(structure, vals).astype(acc)
+    bias_col = bias.astype(acc)[:, None] \
+        if ep is not None and ep.bias else None
+
+    def one(b2, res2=None):
+        out = jnp.einsum("ml,mln->mn", ell_vals,
+                         b2.astype(acc)[structure["cols"]])[:m]
+        return _finish(out, ep, bias_col, res2, odt)
 
     if b.ndim == 2:
-        return one(b)
+        return one(b, residual)
+    if ep is not None and ep.residual:
+        return _map_leading(lambda args: one(*args), b, residual)
     return _map_leading(one, b)
 
 

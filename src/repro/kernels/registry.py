@@ -47,8 +47,12 @@ class MethodSpec:
 
     * ``build_structure(a, meta) -> dict`` of static-shaped device arrays
       (pattern-only; values re-applied per call through ``slot_nz``).
-    * ``execute(meta, fwd, vals, b, *, tk, interpret, impl) -> C`` with
-      ``b (..., k, n) -> (..., m, n)`` (leading batch dims native).
+    * ``execute(meta, fwd, vals, b, *, tk, interpret, impl, epilogue=None,
+      bias=None, residual=None, acc_dtype=None, out_dtype=None) -> C``
+      with ``b (..., k, n) -> (..., m, n)`` (leading batch dims native).
+      ``epilogue`` is a ``core.Epilogue`` fused into the output write
+      (``bias (m,)``; ``residual (..., m, n)``, broadcast over the batch);
+      ``acc_dtype``/``out_dtype`` set accumulation and output precision.
     * ``inline(a, b, *, t, tl, l_pad, extra, tk, interpret, impl) -> C``
       — the plan-per-call regime (``t``/``tl``/``l_pad`` may be None:
       kernel defaults; ``extra`` is the already-resolved
@@ -125,23 +129,34 @@ def choose_auto(a, heuristic) -> str:
 # static PlanMeta, so a long-lived server cycling patterns cannot grow it
 # without bound; entries are pure functions of the key.
 @functools.lru_cache(maxsize=512)
-def execute_op(meta, tk: int | None, interpret: bool | None, impl: str):
+def execute_op(meta, tk: int | None, interpret: bool | None, impl: str,
+               epilogue=None, acc_dtype: str | None = None,
+               out_dtype: str | None = None):
     """A method's ``execute`` wrapped with the explicit vmap rule.
 
     The ``custom_vmap`` wrapper rewrites a vmapped dense-operand axis onto
-    the method's native leading-batch path; anything else falls back to a
-    sequential ``lax.map``.  Only for use where JAX vmaps but never
-    differentiates (the custom-VJP fwd/bwd bodies in ``core.spmm``).
+    the method's native leading-batch path (a flagged ``residual`` batches
+    with it; ``bias`` stays unbatched — JAX sums its cotangent across the
+    vmap axis); anything else falls back to a sequential ``lax.map``.
+    Only for use where JAX vmaps but never differentiates (the custom-VJP
+    fwd/bwd bodies in ``core.spmm``).  ``bias``/``residual`` are always
+    positional operands of the wrapped op (pass None when the epilogue
+    doesn't flag them) so one call shape serves every epilogue.
     """
     spec = get_method(meta.method)
 
-    def fn(fwd, vals, b):
+    def fn(fwd, vals, b, bias, residual):
         return spec.execute(meta, fwd, vals, b, tk=tk, interpret=interpret,
-                            impl=impl)
+                            impl=impl, epilogue=epilogue, bias=bias,
+                            residual=residual, acc_dtype=acc_dtype,
+                            out_dtype=out_dtype)
 
     def native(in_batched):
-        fwd_b, vals_b, b_b = in_batched
-        return b_b and not vals_b and not any(jax.tree.leaves(fwd_b))
+        fwd_b, vals_b, b_b, bias_b, res_b = in_batched
+        res_leaves = jax.tree.leaves(res_b)
+        return (b_b and not vals_b and not any(jax.tree.leaves(fwd_b))
+                and not any(jax.tree.leaves(bias_b))
+                and (not res_leaves or all(res_leaves)))
 
     return _ops._vmappable(fn, native)
 
@@ -160,9 +175,14 @@ def _merge_resolve(a, *, t, tl, l_pad):
     return t, tl, None, ()          # merge has no row pad
 
 
-def _merge_execute(meta, fwd, vals, b, *, tk, interpret, impl):
+def _merge_execute(meta, fwd, vals, b, *, tk, interpret, impl,
+                   epilogue=None, bias=None, residual=None,
+                   acc_dtype=None, out_dtype=None):
     return _ops.merge_execute(fwd, vals, b, m=meta.m, tk=tk,
-                              interpret=interpret, impl=impl)
+                              interpret=interpret, impl=impl,
+                              epilogue=epilogue, bias=bias,
+                              residual=residual, acc_dtype=acc_dtype,
+                              out_dtype=out_dtype)
 
 
 def _merge_candidates(a, wide: bool) -> Sequence[dict]:
@@ -202,9 +222,14 @@ def _rowsplit_structure(a, meta):
                                                   tl=meta.tl))
 
 
-def _rowsplit_execute(meta, fwd, vals, b, *, tk, interpret, impl):
+def _rowsplit_execute(meta, fwd, vals, b, *, tk, interpret, impl,
+                      epilogue=None, bias=None, residual=None,
+                      acc_dtype=None, out_dtype=None):
     return _ops.rowsplit_execute(fwd, vals, b, m=meta.m, tl=meta.tl, tk=tk,
-                                 interpret=interpret, impl=impl)
+                                 interpret=interpret, impl=impl,
+                                 epilogue=epilogue, bias=bias,
+                                 residual=residual, acc_dtype=acc_dtype,
+                                 out_dtype=out_dtype)
 
 
 def _rowsplit_candidates(a, wide: bool) -> Sequence[dict]:

@@ -17,6 +17,8 @@ registration at the bottom — zero edits to any dispatch site.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -104,22 +106,53 @@ def plan_rowgroup_structure(a, *, tl: int = DEFAULT_TL, tm: int = TM,
 
 def rowgroup_execute_parts(groups_meta: tuple, tl: int, fwd: dict,
                            vals: jax.Array, b: jax.Array, *,
-                           tk=None, interpret=None, impl="pallas"):
+                           tk=None, interpret=None, impl="pallas",
+                           epilogue=None, bias=None, residual=None,
+                           acc_dtype=None, out_dtype=None):
     """Run the row-split kernel once per group, then un-permute rows.
 
     ``groups_meta`` is the static ``((m_g, l_g), ...)`` tuple (from
     ``PlanMeta.extra``); ``b (..., k, n) -> (..., m, n)`` with leading
     batch dims handled natively by the per-group executes.
+
+    The ``epilogue``'s bias/activation/scale fuse into the per-group
+    kernels (the bias rides permuted into group row order and sliced per
+    group); a flagged ``residual`` is indexed in *original* row order, so
+    it lands after the un-permuting gather — correct because it is the
+    last epilogue term, and the groups then flush in ``acc_dtype`` with
+    the single ``out_dtype`` cast deferred past the add.
     """
-    outs = [
-        _ops.rowsplit_execute(gs, vals, b, m=m_g, tl=tl, tk=tk,
-                              interpret=interpret, impl=impl)
-        for (m_g, _), gs in zip(groups_meta, fwd["groups"])
-    ]
+    ep = epilogue
+    adt = jnp.float32 if acc_dtype is None else jnp.dtype(acc_dtype)
+    odt = jnp.promote_types(vals.dtype, b.dtype) if out_dtype is None \
+        else jnp.dtype(out_dtype)
+    group_ep, group_out, bias_perm = None, out_dtype, None
+    if ep is not None:
+        group_ep = dataclasses.replace(ep, residual=False)
+        if group_ep.is_identity():
+            group_ep = None
+        if ep.residual:
+            group_out = adt
+        if ep.bias:
+            m = fwd["inv_pos"].shape[0]
+            bias_perm = jnp.zeros((m,), bias.dtype) \
+                .at[fwd["inv_pos"]].set(bias)
+    outs = []
+    start = 0
+    for (m_g, _), gs in zip(groups_meta, fwd["groups"]):
+        gb = None if bias_perm is None else bias_perm[start:start + m_g]
+        start += m_g
+        outs.append(_ops.rowsplit_execute(
+            gs, vals, b, m=m_g, tl=tl, tk=tk, interpret=interpret,
+            impl=impl, epilogue=group_ep, bias=gb, acc_dtype=acc_dtype,
+            out_dtype=group_out))
     if not outs:
-        return jnp.zeros(b.shape[:-2] + (0, b.shape[-1]), b.dtype)
+        return jnp.zeros(b.shape[:-2] + (0, b.shape[-1]), odt)
     out = jnp.concatenate(outs, axis=-2) if len(outs) > 1 else outs[0]
-    return jnp.take(out, fwd["inv_pos"], axis=-2)
+    out = jnp.take(out, fwd["inv_pos"], axis=-2)
+    if ep is not None and ep.residual:
+        out = (out + residual.astype(out.dtype)).astype(odt)
+    return out
 
 
 # --------------------------------------------------- MethodSpec adapters ---
@@ -145,9 +178,13 @@ def _build_structure(a, meta):
     return plan_rowgroup_structure(a, tl=meta.tl)
 
 
-def _execute(meta, fwd, vals, b, *, tk, interpret, impl):
+def _execute(meta, fwd, vals, b, *, tk, interpret, impl, epilogue=None,
+             bias=None, residual=None, acc_dtype=None, out_dtype=None):
     return rowgroup_execute_parts(meta.extra, meta.tl, fwd, vals, b, tk=tk,
-                                  interpret=interpret, impl=impl)
+                                  interpret=interpret, impl=impl,
+                                  epilogue=epilogue, bias=bias,
+                                  residual=residual, acc_dtype=acc_dtype,
+                                  out_dtype=out_dtype)
 
 
 def _inline(a, b, *, t, tl, l_pad, extra, tk, interpret, impl):

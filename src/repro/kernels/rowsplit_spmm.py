@@ -91,8 +91,16 @@ def plan_rowsplit(a: CSR, *, l_pad: int, tl: int = DEFAULT_TL,
     return plan
 
 
-def _rowsplit_kernel(cols_ref, vals_ref, b_ref, o_ref, acc_ref, *,
-                     acc_dtype, n_l: int, tk: int, n_k: int):
+def _rowsplit_kernel(cols_ref, slot_ref, vals_ref, b_ref, *rest,
+                     acc_dtype, n_l: int, tk: int, n_k: int, ep):
+    from repro.core.epilogue import apply_epilogue
+    i = 0
+    bias_ref = res_ref = None
+    if ep is not None and ep.bias:
+        bias_ref, i = rest[i], i + 1
+    if ep is not None and ep.residual:
+        res_ref, i = rest[i], i + 1
+    o_ref, acc_ref = rest[i], rest[i + 1]
     ll = pl.program_id(3)
     kk = pl.program_id(4)
 
@@ -106,8 +114,10 @@ def _rowsplit_kernel(cols_ref, vals_ref, b_ref, o_ref, acc_ref, *,
     # the rest accumulate when their panel streams in (see merge_spmm).
     local = cols - kk * tk
     in_panel = (local >= 0) & (local < tk)
-    vals = jnp.where(in_panel, vals_ref[...].reshape(-1),
-                     0).astype(acc_dtype)
+    # In-kernel values gather through the ELL slot ids (sentinel nnz_pad
+    # reads the operand's zero padding) — no per-call HBM materialization.
+    vals = jnp.take(vals_ref[0], slot_ref[...].reshape(-1), axis=0)
+    vals = jnp.where(in_panel, vals, 0).astype(acc_dtype)
     bgat = jnp.take(b_ref[0], jnp.where(in_panel, local, 0),
                     axis=0).astype(acc_dtype)              # (tm*tl, TN)
     prod = vals[:, None] * bgat
@@ -115,41 +125,68 @@ def _rowsplit_kernel(cols_ref, vals_ref, b_ref, o_ref, acc_ref, *,
 
     @pl.when((ll == n_l - 1) & (kk == n_k - 1))
     def _flush():
-        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+        r = apply_epilogue(
+            acc_ref[...], ep,
+            bias_ref[0][:, None] if bias_ref is not None else None,
+            res_ref[0] if res_ref is not None else None)
+        o_ref[0] = r.astype(o_ref.dtype)
 
 
-def rowsplit_spmm_pallas(plan: dict, b: jax.Array, *, tm: int = TM,
-                         tn: int = TN, tl: int = DEFAULT_TL,
-                         tk: int | None = None,
-                         interpret: bool = False) -> jax.Array:
+def rowsplit_spmm_pallas(plan: dict, vals: jax.Array, b: jax.Array, *,
+                         tm: int = TM, tn: int = TN, tl: int = DEFAULT_TL,
+                         tk: int | None = None, interpret: bool = False,
+                         acc_dtype=jnp.float32, out_dtype=None,
+                         epilogue=None, bias=None,
+                         residual=None) -> jax.Array:
     """``b`` is (batch, k, n) with n % tn == 0; plan arrays (m_pad, L).
+
+    ``plan`` is the pattern structure (``plan_rowsplit_structure``);
+    ``vals`` the raw (nnz_pad,) values, gathered in-kernel through
+    ``slot_nz``.  ``epilogue``/``bias (m_pad,)``/``residual
+    (batch, m_pad, n)`` fuse the C tail into the accumulator flush;
+    ``acc_dtype``/``out_dtype`` control accumulation and output precision
+    (see ``merge_spmm_pallas``).
 
     Returns (batch, m_pad, n): batch on the leading grid axis, B streamed
     through VMEM in (TK, TN) panels (``k_tiles`` innermost, accumulator
     carried).
     """
-    from .merge_spmm import resolve_tk
+    from .merge_spmm import pack_vals, resolve_tk
     batch, k, n = b.shape
     m_pad, l = plan["cols"].shape
     tk, n_k = resolve_tk(k, tk)
     kpad = n_k * tk - k
     if kpad:
         b = jnp.pad(b, ((0, 0), (0, kpad), (0, 0)))
-    acc_dtype = jnp.float32
+    vals2 = pack_vals(vals, vals.shape[0], tn=tn)
+    nv = vals2.shape[1]
+    ep = epilogue
+    out_dtype = b.dtype if out_dtype is None else out_dtype
     grid = (batch, m_pad // tm, n // tn, l // tl, n_k)
+    in_specs = [
+        pl.BlockSpec((tm, tl), lambda bb, i, j, ll, kk: (i, ll)),
+        pl.BlockSpec((tm, tl), lambda bb, i, j, ll, kk: (i, ll)),
+        pl.BlockSpec((1, nv), lambda bb, i, j, ll, kk: (0, 0)),
+        pl.BlockSpec((1, tk, tn), lambda bb, i, j, ll, kk: (bb, kk, j)),
+    ]
+    operands = [plan["cols"], plan["slot_nz"], vals2, b]
+    if ep is not None and ep.bias:
+        in_specs.append(pl.BlockSpec((1, tm),
+                                     lambda bb, i, j, ll, kk: (i, 0)))
+        operands.append(bias.reshape(m_pad // tm, tm))
+    if ep is not None and ep.residual:
+        in_specs.append(pl.BlockSpec((1, tm, tn),
+                                     lambda bb, i, j, ll, kk: (bb, i, j)))
+        operands.append(residual)
     kernel = functools.partial(_rowsplit_kernel, acc_dtype=acc_dtype,
-                               n_l=l // tl, tk=tk, n_k=n_k)
+                               n_l=l // tl, tk=tk, n_k=n_k, ep=ep)
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((tm, tl), lambda bb, i, j, ll, kk: (i, ll)),
-            pl.BlockSpec((tm, tl), lambda bb, i, j, ll, kk: (i, ll)),
-            pl.BlockSpec((1, tk, tn), lambda bb, i, j, ll, kk: (bb, kk, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, tm, tn),
                                lambda bb, i, j, ll, kk: (bb, i, j)),
-        out_shape=jax.ShapeDtypeStruct((batch, m_pad, n), b.dtype),
+        out_shape=jax.ShapeDtypeStruct((batch, m_pad, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((tm, tn), acc_dtype)],
         interpret=interpret,
-    )(plan["cols"], plan["vals"], b)
+    )(*operands)

@@ -123,7 +123,9 @@ class SparseLinear:
         return self.plan.meta.l_pad if self.plan is not None else None
 
     def __call__(self, x: jax.Array,
-                 exec: Optional[ExecutionConfig] = None, **kw) -> jax.Array:
+                 exec: Optional[ExecutionConfig] = None, *,
+                 bias: Optional[jax.Array] = None,
+                 residual: Optional[jax.Array] = None, **kw) -> jax.Array:
         """x (..., d_in) → (..., d_out).  Differentiable in x and vals.
 
         ``exec`` is the per-call :class:`ExecutionConfig` (bare
@@ -133,18 +135,31 @@ class SparseLinear:
         the engine's batched execution — B (..., d_in, tokens) folds into
         the kernel grid — instead of being flattened into one wide token
         axis.
+
+        ``bias (d_out,)`` / ``residual (..., d_out)`` (layer coordinates,
+        like ``x``) and any ``exec.epilogue`` activation fuse into the
+        SpMM's output write: the layer runs as ``y = (W @ xᵀ)ᵀ``, so the
+        per-``d_out`` bias is exactly the kernel's per-C-row bias and the
+        residual rides transposed into kernel coordinates.
         """
         layer = self if self.plan is not None else self.with_plan()
         mtx = layer.matrix
         w = layer.weight
+        out_dtype = x.dtype if exec is None or exec.out_dtype is None \
+            else jnp.dtype(exec.out_dtype)
         if x.ndim >= 3 and x.shape[-2] >= BATCHED_MIN_TOKENS:
             xt = jnp.swapaxes(x, -1, -2).astype(w.dtype)  # (..., d_in, tok)
-            y = mtx.matmul(xt, exec, **kw)
-            return jnp.swapaxes(y, -1, -2).astype(x.dtype)
+            res = None if residual is None else \
+                jnp.swapaxes(residual, -1, -2)
+            y = mtx.matmul(xt, exec, bias=bias, residual=res, **kw)
+            return jnp.swapaxes(y, -1, -2).astype(out_dtype)
         lead = x.shape[:-1]
         xt = x.reshape(-1, x.shape[-1]).T          # (d_in, tokens) = B
-        y = mtx.matmul(xt.astype(w.dtype), exec, **kw)
-        return y.T.reshape(*lead, w.m).astype(x.dtype)
+        res = None if residual is None else \
+            residual.reshape(-1, w.m).T            # (d_out, tokens) = C
+        y = mtx.matmul(xt.astype(w.dtype), exec, bias=bias, residual=res,
+                       **kw)
+        return y.T.reshape(*lead, w.m).astype(out_dtype)
 
 
 jax.tree_util.register_pytree_node(
@@ -167,12 +182,26 @@ def prune_mlp(mlp_params: dict, keep_fraction: float,
             for name, w in mlp_params.items()}
 
 
-def sparse_mlp_apply(sparse_p: dict, x: jax.Array, cfg) -> jax.Array:
+def sparse_mlp_apply(sparse_p: dict, x: jax.Array, cfg,
+                     exec: Optional[ExecutionConfig] = None) -> jax.Array:
+    """Apply a pruned MLP block (gelu or swiglu, by the param dict's keys).
+
+    The gelu variant fuses the activation into w1's SpMM epilogue — C is
+    written once, activated, instead of written and re-read by a separate
+    elementwise program.  swiglu stays unfused: silu and the w3 gate are
+    not epilogue shapes.  ``exec`` carries the per-call backend knobs for
+    every layer; its ``epilogue`` field is overridden on w1 by the fused
+    activation.
+    """
+    from repro.core.epilogue import Epilogue
+    base = exec if exec is not None else ExecutionConfig()
     if "w3" in sparse_p:
-        h = jax.nn.silu(sparse_p["w1"](x)) * sparse_p["w3"](x)
+        h = jax.nn.silu(sparse_p["w1"](x, base)) * sparse_p["w3"](x, base)
     else:
-        h = jax.nn.gelu(sparse_p["w1"](x))
-    return sparse_p["w2"](h)
+        fused = dataclasses.replace(base,
+                                    epilogue=Epilogue(activation="gelu"))
+        h = sparse_p["w1"](x, fused)
+    return sparse_p["w2"](h, base)
 
 
 def mlp_vals(sparse_p: dict) -> dict:

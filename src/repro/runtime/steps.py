@@ -167,9 +167,7 @@ def make_sparse_train_step(sparse_p: dict, *, lr: float = 1e-2,
 
     def loss_fn(vals, x, y):
         layers = S.mlp_with_vals(sparse_p, vals)
-        pred = S.sparse_mlp_apply(
-            {k: functools.partial(sl, exec=run)
-             for k, sl in layers.items()}, x, None)
+        pred = S.sparse_mlp_apply(layers, x, None, exec=run)
         return jnp.mean((pred - y) ** 2)
 
     def step(vals, x, y):

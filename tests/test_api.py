@@ -43,6 +43,7 @@ XLA = ExecutionConfig(impl="xla")
 
 EXPECTED_API = {
     "CSR",
+    "Epilogue",
     "ExecutionConfig",
     "PlanPolicy",
     "ShardSpec",

@@ -1,0 +1,389 @@
+"""Fused epilogue + mixed precision vs. the dense oracle.
+
+Every combination the fused path claims to support is checked against a
+densify-and-matmul oracle that applies the *same* ``apply_epilogue``
+math: forward and gradients for all three registered methods on both
+impls, batched/vmapped operands, bf16 inputs under f32 accumulation, and
+the dtype/flag guard rails.  The sharded-epilogue tests run on a forced
+8-device mesh (re-spawned in a subprocess when the parent is
+single-device, like ``test_distributed_spmm``).
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.core import (Epilogue, ExecutionConfig, PlanPolicy, ShardSpec,
+                        apply_epilogue, execute_plan, random_csr)
+from repro.engine import PlanCache
+from repro.models.sparse import SparseLinear, prune_mlp, sparse_mlp_apply
+
+NDEV = 8
+IN_CHILD = bool(os.environ.get("_REPRO_FORCED_CHILD"))
+METHODS = ("merge", "rowsplit", "rowgroup")
+IMPLS = ("pallas", "xla")
+
+needs_devices = pytest.mark.skipif(
+    jax.device_count() < NDEV,
+    reason=f"needs {NDEV} devices (covered by the forced-subprocess "
+    "wrapper / make test-sharded)")
+
+FULL_EP = Epilogue(bias=True, activation="gelu", residual=True, scale=0.5)
+
+
+def _case(seed=0, m=37, k=53, n=19, density=0.2):
+    a = random_csr(jax.random.PRNGKey(seed), m, k, density=density,
+                   nnz_per_row=(0, 9))
+    b = jax.random.normal(jax.random.PRNGKey(seed + 1), (k, n))
+    bias = jax.random.normal(jax.random.PRNGKey(seed + 2), (m,))
+    res = jax.random.normal(jax.random.PRNGKey(seed + 3), (m, n))
+    return a, b, bias, res
+
+
+def _oracle(a, vals, b, ep, bias, res):
+    dense = dataclasses.replace(a, vals=vals).to_dense()
+    bias_col = bias[..., :, None] if ep is not None and ep.bias else None
+    return apply_epilogue(dense @ b, ep, bias_col,
+                          res if ep is not None and ep.residual else None)
+
+
+def _plan(a, method):
+    return PlanCache().get(a, PlanPolicy(method=method))
+
+
+# ------------------------------------------------ forward vs dense oracle ---
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("method", METHODS)
+@pytest.mark.parametrize("ep", [
+    Epilogue(bias=True),
+    Epilogue(activation="relu"),
+    Epilogue(activation="gelu", scale=0.5),
+    FULL_EP,
+], ids=["bias", "relu", "gelu_scale", "full"])
+def test_fused_forward_matches_oracle(method, impl, ep):
+    a, b, bias, res = _case()
+    plan = _plan(a, method)
+    exec = ExecutionConfig(impl=impl, epilogue=ep)
+    got = execute_plan(plan, a.vals, b, exec,
+                       bias=bias if ep.bias else None,
+                       residual=res if ep.residual else None)
+    want = _oracle(a, a.vals, b, ep, bias, res)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("method", METHODS)
+def test_fused_grad_matches_oracle(method, impl):
+    a, b, bias, res = _case(seed=5)
+    plan = _plan(a, method)
+    exec = ExecutionConfig(impl=impl, epilogue=FULL_EP)
+
+    def fused(vals, b, bias, res):
+        return execute_plan(plan, vals, b, exec, bias=bias,
+                            residual=res).sum()
+
+    def oracle(vals, b, bias, res):
+        return _oracle(a, vals, b, FULL_EP, bias, res).sum()
+
+    got = jax.grad(fused, argnums=(0, 1, 2, 3))(a.vals, b, bias, res)
+    want = jax.grad(oracle, argnums=(0, 1, 2, 3))(a.vals, b, bias, res)
+    for name, g, w in zip(("dvals", "dB", "dbias", "dresidual"), got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-4,
+                                   atol=1e-4, err_msg=name)
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_linear_epilogue_grad(impl):
+    """bias + scale, no activation: the fully-fused backward branch."""
+    a, b, bias, _ = _case(seed=9)
+    ep = Epilogue(bias=True, scale=2.0)
+    plan = _plan(a, "merge")
+    exec = ExecutionConfig(impl=impl, epilogue=ep)
+
+    def fused(vals, bias):
+        return (execute_plan(plan, vals, b, exec, bias=bias) ** 2).sum()
+
+    def oracle(vals, bias):
+        return (_oracle(a, vals, b, ep, bias, None) ** 2).sum()
+
+    got = jax.grad(fused, argnums=(0, 1))(a.vals, bias)
+    want = jax.grad(oracle, argnums=(0, 1))(a.vals, bias)
+    for name, g, w in zip(("dvals", "dbias"), got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-4,
+                                   atol=1e-4, err_msg=name)
+
+
+# ------------------------------------------------------- batched and vmap ---
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_batched_epilogue(method):
+    a, _, bias, _ = _case()
+    B = jax.random.normal(jax.random.PRNGKey(7), (3, a.k, 19))
+    R = jax.random.normal(jax.random.PRNGKey(8), (3, a.m, 19))
+    plan = _plan(a, method)
+    exec = ExecutionConfig(epilogue=FULL_EP)
+    got = execute_plan(plan, a.vals, B, exec, bias=bias, residual=R)
+    want = _oracle(a, a.vals, B, FULL_EP, bias, R)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_vmap_epilogue_forward_and_grad():
+    a, _, bias, _ = _case()
+    B = jax.random.normal(jax.random.PRNGKey(7), (3, a.k, 19))
+    R = jax.random.normal(jax.random.PRNGKey(8), (3, a.m, 19))
+    plan = _plan(a, "merge")
+    exec = ExecutionConfig(epilogue=FULL_EP)
+    got = jax.vmap(lambda bb, rr: execute_plan(plan, a.vals, bb, exec,
+                                               bias=bias, residual=rr))(B, R)
+    want = _oracle(a, a.vals, B, FULL_EP, bias, R)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+    # Shared (unbatched) vals and bias: JAX must sum their cotangents
+    # across the vmapped axis.
+    def fused(vals, bias):
+        return jax.vmap(lambda bb, rr: execute_plan(
+            plan, vals, bb, exec, bias=bias, residual=rr))(B, R).sum()
+
+    def oracle(vals, bias):
+        return _oracle(a, vals, B, FULL_EP, bias, R).sum()
+
+    got_g = jax.grad(fused, argnums=(0, 1))(a.vals, bias)
+    want_g = jax.grad(oracle, argnums=(0, 1))(a.vals, bias)
+    for name, g, w in zip(("dvals", "dbias"), got_g, want_g):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-4,
+                                   atol=1e-4, err_msg=name)
+
+
+# ------------------------------------------------------- mixed precision ---
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("method", METHODS)
+def test_bf16_inputs_f32_acc(method, impl):
+    a, b, bias, _ = _case(seed=3)
+    vals16, b16 = a.vals.astype(jnp.bfloat16), b.astype(jnp.bfloat16)
+    plan = _plan(a, method)
+    ep = Epilogue(bias=True, activation="gelu")
+    exec = ExecutionConfig(impl=impl, epilogue=ep, acc_dtype="float32",
+                           out_dtype="float32")
+    got = execute_plan(plan, vals16, b16, exec, bias=bias)
+    assert got.dtype == jnp.float32
+    # f32 oracle on the bf16-rounded inputs: the tolerance covers only the
+    # input rounding, not accumulation-order noise (accumulation is f32).
+    want = _oracle(a, vals16.astype(jnp.float32), b16.astype(jnp.float32),
+                   ep, bias, None)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_bf16_default_out_dtype_is_promotion():
+    a, b, _, _ = _case()
+    plan = _plan(a, "merge")
+    vals16, b16 = a.vals.astype(jnp.bfloat16), b.astype(jnp.bfloat16)
+    assert execute_plan(plan, vals16, b16).dtype == jnp.bfloat16
+    assert execute_plan(plan, vals16, b).dtype == jnp.float32
+    assert execute_plan(plan, a.vals, b16).dtype == jnp.float32
+    assert execute_plan(plan, a.vals, b).dtype == jnp.float32
+
+
+def test_out_dtype_override():
+    a, b, _, _ = _case()
+    plan = _plan(a, "merge")
+    got = execute_plan(plan, a.vals, b,
+                       ExecutionConfig(out_dtype="bfloat16"))
+    assert got.dtype == jnp.bfloat16
+    want = _oracle(a, a.vals, b, None, None, None)
+    np.testing.assert_allclose(np.asarray(got, dtype=np.float32),
+                               np.asarray(want), rtol=3e-2, atol=3e-2)
+
+
+def test_bf16_grad_tolerance():
+    a, b, bias, _ = _case(seed=13)
+    plan = _plan(a, "merge")
+    vals16, b16 = a.vals.astype(jnp.bfloat16), b.astype(jnp.bfloat16)
+    ep = Epilogue(bias=True, activation="gelu")
+    exec = ExecutionConfig(epilogue=ep, acc_dtype="float32",
+                           out_dtype="float32")
+
+    def fused(vals, bb):
+        return execute_plan(plan, vals, bb, exec, bias=bias).sum()
+
+    got = jax.grad(fused, argnums=(0, 1))(vals16, b16)
+    assert got[0].dtype == jnp.bfloat16 and got[1].dtype == jnp.bfloat16
+
+    def oracle(vals, bb):
+        return _oracle(a, vals, bb, ep, bias, None).sum()
+
+    want = jax.grad(oracle, argnums=(0, 1))(
+        vals16.astype(jnp.float32), b16.astype(jnp.float32))
+    for name, g, w in zip(("dvals", "dB"), got, want):
+        np.testing.assert_allclose(np.asarray(g, dtype=np.float32),
+                                   np.asarray(w), rtol=1e-1, atol=1e-1,
+                                   err_msg=name)
+
+
+# ----------------------------------------------------------- guard rails ---
+
+
+@pytest.mark.parametrize("bad", [jnp.int32, jnp.int8, jnp.bool_])
+def test_non_floating_operands_raise(bad):
+    a, b, _, _ = _case()
+    plan = _plan(a, "merge")
+    with pytest.raises(TypeError, match="floating-point"):
+        execute_plan(plan, a.vals.astype(bad), b)
+    with pytest.raises(TypeError, match="floating-point"):
+        execute_plan(plan, a.vals, (b != 0).astype(bad))
+
+
+def test_narrow_acc_dtype_raises():
+    a, b, _, _ = _case()
+    plan = _plan(a, "merge")
+    with pytest.raises(ValueError, match="acc_dtype"):
+        execute_plan(plan, a.vals, b, ExecutionConfig(acc_dtype="bfloat16"))
+    # bf16 inputs may accumulate in bf16 when asked to.
+    got = execute_plan(plan, a.vals.astype(jnp.bfloat16),
+                       b.astype(jnp.bfloat16),
+                       ExecutionConfig(acc_dtype="bfloat16"))
+    assert got.dtype == jnp.bfloat16
+
+
+def test_epilogue_flag_operand_mismatches_raise():
+    a, b, bias, res = _case()
+    plan = _plan(a, "merge")
+    with pytest.raises(ValueError, match="flags bias"):
+        execute_plan(plan, a.vals, b,
+                     ExecutionConfig(epilogue=Epilogue(bias=True)))
+    with pytest.raises(ValueError, match="does not flag bias"):
+        execute_plan(plan, a.vals, b,
+                     ExecutionConfig(epilogue=Epilogue(activation="relu")),
+                     bias=bias)
+    with pytest.raises(ValueError, match="flags residual"):
+        execute_plan(plan, a.vals, b,
+                     ExecutionConfig(epilogue=Epilogue(residual=True)))
+    with pytest.raises(ValueError, match="bias must have shape"):
+        execute_plan(plan, a.vals, b, bias=bias[:-1])
+    with pytest.raises(ValueError, match="residual must have shape"):
+        execute_plan(plan, a.vals, b, residual=res[:, :-1])
+
+
+def test_epilogue_spec_validation():
+    with pytest.raises(ValueError, match="activation"):
+        Epilogue(activation="silu")
+    assert Epilogue().is_identity()
+    assert not Epilogue(scale=2).is_identity()
+    assert Epilogue(scale=2.0).scale == 2.0
+
+
+def test_auto_derived_epilogue_from_operands():
+    a, b, bias, res = _case()
+    got = repro.spmm(a, b, bias=bias, residual=res)
+    want = _oracle(a, a.vals, b, Epilogue(bias=True, residual=True),
+                   bias, res)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_inline_path_applies_epilogue():
+    a, b, bias, res = _case()
+    got = repro.spmm(a, b, PlanPolicy(method="merge"),
+                     ExecutionConfig(epilogue=FULL_EP), plan="inline",
+                     bias=bias, residual=res)
+    want = _oracle(a, a.vals, b, FULL_EP, bias, res)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------- model path ---
+
+
+def test_sparse_linear_fused_bias_residual():
+    w = jax.random.normal(jax.random.PRNGKey(20), (53, 37))  # (d_in, d_out)
+    sl = SparseLinear.from_dense(w, 0.3)
+    x = jax.random.normal(jax.random.PRNGKey(21), (11, 53))
+    bias = jax.random.normal(jax.random.PRNGKey(22), (37,))
+    res = jax.random.normal(jax.random.PRNGKey(23), (11, 37))
+    ep = Epilogue(bias=True, activation="gelu", residual=True)
+    got = sl(x, ExecutionConfig(epilogue=ep), bias=bias, residual=res)
+    wd = sl.matrix.to_dense()                                # (d_out, d_in)
+    want = jax.nn.gelu(x @ wd.T + bias[None, :]) + res
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_sparse_mlp_apply_fused_matches_unfused():
+    p = prune_mlp(
+        {"w1": jax.random.normal(jax.random.PRNGKey(30), (53, 64)),
+         "w2": jax.random.normal(jax.random.PRNGKey(31), (64, 53))}, 0.3)
+    x = jax.random.normal(jax.random.PRNGKey(32), (7, 53))
+    got = sparse_mlp_apply(p, x, None)
+    want = p["w2"](jax.nn.gelu(p["w1"](x)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    # and the fused block differentiates
+    def loss(vals):
+        import dataclasses as dc
+        p2 = {"w1": dc.replace(p["w1"], weight=dc.replace(
+            p["w1"].weight, vals=vals)), "w2": p["w2"]}
+        return sparse_mlp_apply(p2, x, None).sum()
+    g = jax.grad(loss)(p["w1"].weight.vals)
+    assert g.shape == p["w1"].weight.vals.shape
+    assert bool(jnp.any(g != 0))
+
+
+# ------------------------------------------------------- sharded epilogue ---
+
+
+def _mesh(n, axis="data"):
+    return jax.sharding.Mesh(np.array(jax.devices()[:n]), (axis,))
+
+
+@needs_devices
+@pytest.mark.parametrize("dim,axis", [("rows", "data"), ("cols", "model")])
+def test_sharded_epilogue_matches_oracle(dim, axis):
+    a, b, bias, res = _case(seed=17, m=41, k=29)
+    from repro.distributed.spmm import build_sharded_plan
+    plan = build_sharded_plan(
+        a, PlanPolicy(method="merge",
+                      shards=ShardSpec(dim=dim, mesh=_mesh(NDEV, axis),
+                                       axis=axis)),
+        cache=PlanCache())
+    exec = ExecutionConfig(epilogue=FULL_EP)
+    got = plan.execute(a.vals, b, exec, bias=bias, residual=res)
+    want = _oracle(a, a.vals, b, FULL_EP, bias, res)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+    def fused(vals, bias):
+        return plan.execute(vals, b, exec, bias=bias, residual=res).sum()
+
+    def oracle(vals, bias):
+        return _oracle(a, vals, b, FULL_EP, bias, res).sum()
+
+    g = jax.grad(fused, argnums=(0, 1))(a.vals, bias)
+    w = jax.grad(oracle, argnums=(0, 1))(a.vals, bias)
+    for name, gg, ww in zip(("dvals", "dbias"), g, w):
+        np.testing.assert_allclose(np.asarray(gg), np.asarray(ww),
+                                   rtol=1e-4, atol=1e-4, err_msg=name)
+
+
+@pytest.mark.skipif(jax.device_count() >= NDEV or IN_CHILD,
+                    reason="already running with a forced multi-device "
+                    "substrate")
+def test_sharded_epilogue_in_forced_subprocess(forced_device_run):
+    """Run the mesh tests above under 8 forced CPU devices so they execute
+    for real on a single-device box."""
+    res = forced_device_run(
+        "tests/test_epilogue.py::test_sharded_epilogue_matches_oracle", NDEV)
+    assert res.returncode == 0, (
+        f"forced {NDEV}-device run failed:\n{res.stdout}\n{res.stderr}")
+    assert " passed" in res.stdout
