@@ -2,7 +2,8 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: ci test test-sharded smoke examples-smoke bench tune tune-smoke \
-	bench-batched-smoke bench-sharded-smoke bench-epilogue-smoke
+	bench-batched-smoke bench-sharded-smoke bench-epilogue-smoke \
+	bench-obs-smoke trace-smoke
 
 # examples-smoke subsumes the quickstart smoke (runs it in full), so ci
 # doesn't run it twice.
@@ -69,6 +70,39 @@ bench-epilogue-smoke:
 	REPRO_BENCH_EPILOGUE=smoke $(PY) -m benchmarks.run epilogue \
 	    > artifacts/bench_epilogue.csv
 	cat artifacts/bench_epilogue.csv
+
+# CI smoke: obs-enabled corpus bench — traced engine execution with the
+# live roofline accountant; prints obs.report() (achieved bandwidth vs
+# the measured streaming roof per method) and lands the CSV in artifacts/
+bench-obs-smoke:
+	mkdir -p artifacts
+	REPRO_BENCH_OBS=smoke $(PY) -m benchmarks.run obs \
+	    > artifacts/bench_obs.csv
+	cat artifacts/bench_obs.csv
+
+# CI smoke: traced interpret-mode serve + train — Chrome trace-event JSON
+# and metrics dumps land in artifacts/ and are schema-validated
+# (repro.obs.validate); a malformed trace or an empty span set fails here
+# instead of uploading a useless artifact.
+trace-smoke:
+	mkdir -p artifacts
+	$(PY) -m repro.launch.serve --smoke --batch 2 --prompt-len 16 \
+	    --prune-ffn 0.25 \
+	    --trace-out artifacts/serve_trace.json \
+	    --metrics-out artifacts/serve_metrics.json
+	$(PY) -m repro.launch.train --smoke --steps 2 --global-batch 2 \
+	    --seq-len 16 \
+	    --trace-out artifacts/train_trace.json \
+	    --metrics-out artifacts/train_metrics.json
+	$(PY) -m repro.obs.validate \
+	    --trace artifacts/serve_trace.json \
+	    --require-cats plan,cache,dispatch,serve \
+	    --metrics artifacts/serve_metrics.json \
+	    --require-metrics plan_resolve_total,plan_cache_events_total,serve_latency_us
+	$(PY) -m repro.obs.validate \
+	    --trace artifacts/train_trace.json \
+	    --metrics artifacts/train_metrics.json \
+	    --require-metrics train_step_latency_us
 
 # CI smoke: shard-count sweep + nnz-vs-row balance on a forced 8-device
 # CPU mesh (bench_sharded forces the device count itself when run as a

@@ -67,8 +67,12 @@ def run(csv=print):
                 spmm, policy=pol, exec=_XLA, plan="inline"), a, b)
         winner = min(timings, key=timings.get)
         for mname, t_us in timings.items():
+            # tcv is timing noise (std/mean over repeats, from the
+            # TimingResult samples) — a WIN whose margin over the
+            # runner-up is inside the noise band is not a real win.
             csv(f"corpus_{spec.name}_{mname},{t_us:.1f},"
-                f"{'WIN' if mname == winner else ''}")
+                f"tcv={t_us.cv:.3f}"
+                f"{';WIN' if mname == winner else ''}")
         t_mg, t_rs = timings["merge"], timings["rowsplit"]
         pair_winner = "merge" if t_mg < t_rs else "rowsplit"
         pred = Heuristic().choose(a)

@@ -109,11 +109,16 @@ def run(csv=print):
             ceil = fused_epilogue_ceiling(a.m, a.k, N, nnz, val_bytes=nb,
                                           out_bytes=nb)
             name = f"epilogue_{mat_name}_{dt}"
-            csv(f"{name}_unfused,{t_un:.1f},1_program+eager_tail")
+            # tcv: per-timing noise band (std/mean over repeats) — a
+            # speedup inside the combined noise is not a speedup.
+            csv(f"{name}_unfused,{t_un:.1f},"
+                f"1_program+eager_tail;tcv={t_un.cv:.3f}")
             csv(f"{name}_fused,{t_f:.1f},"
-                f"{t_un / t_f:.2f}x_vs_unfused_ceiling_{ceil:.2f}x")
+                f"{t_un / t_f:.2f}x_vs_unfused_ceiling_{ceil:.2f}x;"
+                f"tcv={t_f.cv:.3f}")
             csv(f"{name}_block,{t_blk:.1f},"
-                f"whole_block_jit_{t_blk / t_f:.2f}x_of_fused")
+                f"whole_block_jit_{t_blk / t_f:.2f}x_of_fused;"
+                f"tcv={t_blk.cv:.3f}")
             csv(f"{name}_fused_cold,{cold:.1f},compile+run")
 
 

@@ -1,0 +1,79 @@
+"""Observed corpus: engine execution with the live roofline accountant on.
+
+The obs-enabled twin of the corpus sweep: every matrix in the suite
+(``REPRO_CORPUS_SUITE``; smoke via ``REPRO_BENCH_OBS=smoke`` uses one tiny
+synthetic) is planned through the engine and executed warm per registered
+method, with
+
+* tracing enabled (``obs.tracing()``) so plan/cache/dispatch spans land in
+  the ring buffer,
+* each warm timing fed to the global :data:`repro.obs.accountant` with the
+  plan's modeled minimum bytes,
+* the streaming roof measured once (cached in ``artifacts/``),
+
+and the run ends by printing ``obs.report()`` — achieved bandwidth as a
+fraction of the roof per (method, impl), ladder-rung hit rates, and the
+cache counters — the "kernel X ran at Y% of roof" verdict the GPU/TPU
+port will be judged with.  CSV rows carry the roof fraction per matrix ×
+method so CI archives the numbers.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+from repro import obs
+from repro.core import ExecutionConfig, PlanPolicy, execute_plan
+from repro.engine import PlanCache
+from repro.kernels import registry
+from repro.matrices import get_suite
+
+from .common import make_b, make_matrix, timeit
+
+N = 64
+_XLA = ExecutionConfig(impl="xla")
+
+
+def _smoke() -> bool:
+    return os.environ.get("REPRO_BENCH_OBS", "") == "smoke"
+
+
+def _cases():
+    if _smoke():
+        return [("tiny", lambda: make_matrix(0, 256, 256,
+                                             nnz_per_row=(0, 8)))]
+    suite = os.environ.get("REPRO_CORPUS_SUITE", "mini")
+    return [(spec.name, spec) for spec in get_suite(suite)]
+
+
+def run(csv=print):
+    warmup, repeat = (1, 2) if _smoke() else (2, 7)
+    roof = obs.measure_roof(elements=1 << 20 if _smoke() else 1 << 24,
+                            repeat=3 if _smoke() else 5)
+    cache = PlanCache(name="bench_obs")
+    csv("name,us_per_call,derived")
+    with obs.tracing() as tracer:
+        for mat_name, build in _cases():
+            a = build()
+            for mname in registry.method_names():
+                plan = cache.get(a, PlanPolicy(method=mname))
+                fn = functools.partial(execute_plan, plan, exec=_XLA)
+                b = make_b(7, a.k, N)
+                t = timeit(fn, a.vals, b, warmup=warmup, repeat=repeat)
+                obs.accountant.account_plan(
+                    plan.meta, N, wall_us=t.mean * len(t.samples),
+                    impl=_XLA.impl, val_dtype=str(a.vals.dtype),
+                    calls=len(t.samples))
+                frac = (obs.plan_min_bytes(plan.meta, N) / (t * 1e-6)
+                        / roof.bytes_per_s)
+                csv(f"obs_{mat_name}_{mname},{t:.1f},"
+                    f"roof_frac={frac:.3f};tcv={t.cv:.3f}")
+        spans = {c: len(tracer.events(cat=c))
+                 for c in ("plan", "cache", "dispatch")}
+        csv(f"obs_trace_events,0,"
+            + ";".join(f"{c}={n}" for c, n in spans.items()))
+    print(obs.report(roof=roof))
+
+
+if __name__ == "__main__":
+    run()

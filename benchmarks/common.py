@@ -17,10 +17,10 @@ import numpy as np
 from repro.core import CSR, random_csr
 # Single timing implementation, shared with the empirical autotuner
 # (repro.tune) so bench rows and TuneDB records are directly comparable.
-from repro.tune.timing import timeit
+from repro.tune.timing import TimingResult, timeit
 
-__all__ = ["timeit", "make_matrix", "make_b", "geomean", "CSR",
-           "random_csr"]
+__all__ = ["TimingResult", "timeit", "make_matrix", "make_b", "geomean",
+           "CSR", "random_csr"]
 
 
 def make_matrix(seed: int, m: int, k: int, *, nnz_per_row=None,

@@ -109,47 +109,15 @@ def table(recs, md=False):
     return rows
 
 
-# --- SpMM epilogue traffic model (consumed by benchmarks/bench_epilogue) ---
+# --- SpMM traffic model (moved to repro.obs.roofline in the obs PR) -------
 #
-# Compulsory HBM bytes of the serving MLP-block tail, counting each array
-# once per program boundary it crosses.  An *unfused* block runs the SpMM
-# and the elementwise tail (bias + activation) as separate compiled
-# programs, so C round-trips HBM between them; the fused epilogue applies
-# the tail at the accumulator flush and writes the activated output once.
-# The ratio is a ceiling, not a prediction: it assumes bandwidth-bound
-# execution with no cache reuse across programs (exact on HBM-resident
-# shapes, optimistic on CPU where C may stay in LLC).
+# The compulsory-bytes model now lives with the live roofline accountant
+# so the engine can report achieved-bandwidth-vs-roof at run time;
+# re-exported here for the benchmarks that import it
+# (bench_epilogue.fused_epilogue_ceiling and callers of spmm_min_bytes).
 
-
-def spmm_min_bytes(m: int, k: int, n: int, nnz: int, *, val_bytes: int = 4,
-                   idx_bytes: int = 4, out_bytes: int = 4) -> int:
-    """Compulsory traffic of one CSR SpMM: vals + col indices once, the
-    dense B panel once, the output C once."""
-    return (nnz * (val_bytes + idx_bytes) + k * n * val_bytes
-            + m * n * out_bytes)
-
-
-def epilogue_tail_bytes(m: int, n: int, *, out_bytes: int = 4,
-                        bias: bool = False, residual: bool = False) -> int:
-    """Traffic of a *separate* elementwise tail program: read C, read the
-    epilogue operands, write the result."""
-    extra = (m * out_bytes if bias else 0) + \
-        (m * n * out_bytes if residual else 0)
-    return 2 * m * n * out_bytes + extra
-
-
-def fused_epilogue_ceiling(m: int, k: int, n: int, nnz: int, *,
-                           val_bytes: int = 4, out_bytes: int = 4,
-                           bias: bool = True,
-                           residual: bool = False) -> float:
-    """Bytes-moved speedup ceiling of fusing the tail into the SpMM."""
-    spmm = spmm_min_bytes(m, k, n, nnz, val_bytes=val_bytes,
-                          out_bytes=out_bytes)
-    tail = epilogue_tail_bytes(m, n, out_bytes=out_bytes, bias=bias,
-                               residual=residual)
-    fused_extra = (m * out_bytes if bias else 0) + \
-        (m * n * out_bytes if residual else 0)
-    return (spmm + tail) / (spmm + fused_extra)
+from repro.obs.roofline import (epilogue_tail_bytes, fused_epilogue_ceiling,
+                                spmm_min_bytes)  # noqa: F401,E402
 
 
 def main():

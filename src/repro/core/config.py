@@ -32,8 +32,18 @@ import dataclasses
 import warnings
 from typing import Any, NamedTuple, Optional
 
+from repro import obs as _obs
+from repro.obs import trace as _trace
+
 from .epilogue import Epilogue
 from .heuristic import Heuristic
+
+# Ladder-rung outcomes of PlanPolicy.resolve: explicit | exact | class |
+# calibrated | analytic.  Always-on (plan-time, not per-execute):
+# obs.report() derives ladder hit rates from this family.
+_resolve_total = _obs.registry.counter(
+    "plan_resolve_total", "PlanPolicy.resolve outcomes by ladder rung",
+    labels=("rung", "method"))
 
 
 def _canon_dtype(x) -> Optional[str]:
@@ -209,6 +219,11 @@ class PlanPolicy:
         method, t, l_pad = self.method, self.t, self.l_pad
         heuristic = self.heuristic
         tunedb = self.resolved_tunedb()
+        # Which ladder rung decides the method (recorded below): explicit
+        # requests skip the ladder entirely; "analytic" covers both the
+        # no-TuneDB heuristic and a user-supplied Heuristic.
+        rung = "explicit" if method != "auto" else "analytic"
+        fallback = False
         if method == "auto" and tunedb is not None:
             registered = registry.method_names()
             rec = tunedb.lookup_exact(pattern_fingerprint(a))
@@ -228,12 +243,15 @@ class PlanPolicy:
                 method = rec.method
                 t = rec.t if t is None else t
                 l_pad = rec.l_pad if l_pad is None else l_pad
+                rung = "exact"
             else:
                 cls_method = tunedb.lookup_class_for(a)
                 if cls_method is not None and cls_method in registered:
                     method = cls_method
+                    rung = "class"
                 elif heuristic is None:
                     heuristic = tunedb.heuristic()   # calibrated threshold
+                    rung = "calibrated"
         auto_resolved = method != self.method     # ladder picked it
         if method == "auto":
             method = registry.choose_auto(a, heuristic or Heuristic())
@@ -255,6 +273,14 @@ class PlanPolicy:
             spec = registry.get_method(method)
             t, tl, l_pad, extra = spec.resolve_params(
                 a, t=self.t, tl=self.tl, l_pad=self.l_pad)
+            rung, fallback = "analytic", True
+        _resolve_total.labels(rung=rung, method=method).inc()
+        if _trace._enabled:
+            m_, k_ = a.shape
+            _trace.event("plan.resolve", cat="plan", rung=rung,
+                         method=method, m=int(m_), k=int(k_),
+                         nnz_pad=int(a.nnz_pad), t=t, tl=tl,
+                         l_pad=l_pad, fallback=fallback)
         return ResolvedPlan(method=method, t=t, tl=tl, l_pad=l_pad,
                             extra=extra)
 

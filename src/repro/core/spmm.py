@@ -52,11 +52,42 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as _obs
+from repro.obs import trace as _trace
+
 from .config import (ExecutionConfig, PlanPolicy, _UNSET, coalesce_exec,
                      coalesce_policy)
 from .csr import CSR
 from .epilogue import Epilogue, activation_fn, apply_epilogue
 from .plan import SpmmPlan, PlanMeta
+
+# Per-plan execute counts.  Gated on the tracing flag at the call site:
+# execute_plan is the engine's hottest eager entry point and the
+# observability contract is zero-cost-when-disabled.
+_plan_execute = _obs.registry.counter(
+    "plan_execute_total", "execute_plan dispatches by plan and impl",
+    labels=("plan", "impl"))
+
+
+def _plan_label(meta: PlanMeta) -> str:
+    m, k = meta.shape
+    return f"{meta.method}:{m}x{k}:nnz{meta.nnz_pad}"
+
+
+def _record_dispatch(meta: PlanMeta, b, exec: ExecutionConfig) -> None:
+    # Callers gate on _trace._enabled.
+    _plan_execute.labels(plan=_plan_label(meta), impl=exec.impl).inc()
+    ep = exec.epilogue
+    _trace.event(
+        "dispatch", cat="dispatch", method=meta.method, impl=exec.impl,
+        m=int(meta.shape[0]), k=int(meta.shape[1]),
+        nnz_pad=int(meta.nnz_pad), n=int(b.shape[-1]),
+        batch=list(b.shape[:-2]), tk=exec.tk, acc_dtype=exec.acc_dtype,
+        out_dtype=exec.out_dtype,
+        epilogue=(dict(bias=ep.bias, residual=ep.residual,
+                       activation=ep.activation,
+                       scale=ep.scale is not None)
+                  if ep is not None else None))
 
 
 def _ops():
@@ -140,6 +171,18 @@ def _resolve_exec(where: str, m: int, vals, b, exec: ExecutionConfig,
 def _forward(meta: PlanMeta, fwd: dict, vals, b, exec: ExecutionConfig,
              bias, residual, *, vmappable: bool):
     registry = _registry()
+    if _trace._enabled:
+        # Label the kernel region in any enclosing XLA profile; the
+        # host-side span/event was already emitted by the dispatcher.
+        with jax.named_scope(f"spmm_{meta.method}_{exec.impl}"):
+            return _forward_inner(registry, meta, fwd, vals, b, exec,
+                                  bias, residual, vmappable=vmappable)
+    return _forward_inner(registry, meta, fwd, vals, b, exec, bias,
+                          residual, vmappable=vmappable)
+
+
+def _forward_inner(registry, meta, fwd, vals, b, exec, bias, residual, *,
+                   vmappable: bool):
     if vmappable:
         op = registry.execute_op(meta, exec.tk, exec.interpret, exec.impl,
                                  exec.epilogue, exec.acc_dtype,
@@ -283,6 +326,8 @@ def execute_plan(plan: SpmmPlan, vals: jax.Array, b: jax.Array,
             f"{plan.meta.shape}, got {b.shape}")
     exec = _resolve_exec("execute_plan", plan.meta.m, vals, b, exec,
                          bias, residual)
+    if _trace._enabled:
+        _record_dispatch(plan.meta, b, exec)
     if plan.bwd is None:
         # Forward-only plan: plain ops (keeps ordinary XLA autodiff for
         # impl="xla" callers; build with a transpose for vmap support).
@@ -454,6 +499,11 @@ def spmm(a: CSR, b: jax.Array, policy: PlanPolicy | None = None,
             f"SpMM method {m_name!r} has no inline (plan-per-call) form; "
             "build a plan instead: repro.engine.get_plan(a, policy=...)")
     exec = _resolve_exec("spmm", a.m, a.vals, b, exec, bias, residual)
+    if _trace._enabled:
+        _trace.event("dispatch", cat="dispatch", method=m_name,
+                     impl=exec.impl, inline=True, n=int(b.shape[-1]),
+                     tk=exec.tk, acc_dtype=exec.acc_dtype,
+                     out_dtype=exec.out_dtype)
     out = spec.inline(a, b, t=t_val, tl=tl_val, l_pad=l_val, extra=extra,
                       tk=exec.tk, interpret=exec.interpret, impl=exec.impl)
     # The inline forms predate the fused tail: apply the epilogue (and the

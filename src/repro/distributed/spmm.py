@@ -48,11 +48,23 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import obs as _obs
 from repro.core.config import (ExecutionConfig, PlanPolicy, ShardSpec,
                                _UNSET, coalesce_exec)
 from repro.core.csr import CSR
 from repro.core.plan import SpmmPlan, build_plan
 from repro.core.spmm import execute_plan
+from repro.obs import trace as _trace
+
+# Shard-balance gauges are plan-time (amortized) and stay always-on; the
+# per-execute counter below is gated on the tracing flag like the core
+# dispatch path.
+_shard_imbalance = _obs.registry.gauge(
+    "shard_nnz_imbalance", "max/mean nnz ratio of the last sharded build",
+    labels=("dim",))
+_sharded_execute = _obs.registry.counter(
+    "sharded_execute_total", "execute_sharded dispatches by path",
+    labels=("path",))
 
 
 def _nnz_cuts(ptr: np.ndarray, n_shards: int) -> np.ndarray:
@@ -361,10 +373,22 @@ def build_sharded_plan(a: CSR, policy: PlanPolicy,
 
     n = spec.resolved_n()
     local_policy = dataclasses.replace(policy, shards=None)
-    shards = shard_csr_by_nnz(a, n, dim=spec.dim)
-    # Resolve on the *unpadded* local patterns: a shard's method must come
-    # from its true local stats, not stats diluted by shape-padding.
-    resolved = [local_policy.resolve(shards.unpadded(i)) for i in range(n)]
+    with _trace.span("plan.build_sharded", cat="plan", n_shards=n,
+                     dim=spec.dim, m=int(a.shape[0]),
+                     k=int(a.shape[1])) as sp:
+        shards = shard_csr_by_nnz(a, n, dim=spec.dim)
+        nnz_per = shards.nnz_per_shard()
+        mean_nnz = sum(nnz_per) / max(len(nnz_per), 1)
+        imbalance = (max(nnz_per) / mean_nnz) if mean_nnz > 0 else 1.0
+        _shard_imbalance.labels(dim=spec.dim).set(imbalance)
+        # Resolve on the *unpadded* local patterns: a shard's method must
+        # come from its true local stats, not stats diluted by
+        # shape-padding.
+        resolved = [local_policy.resolve(shards.unpadded(i))
+                    for i in range(n)]
+        sp.set(methods=[r.method for r in resolved],
+               nnz_per_shard=list(nnz_per),
+               nnz_imbalance=round(imbalance, 4))
     methods = {r.method for r in resolved}
     stackable = False
     if len(methods) == 1:
@@ -396,6 +420,10 @@ def build_sharded_plan(a: CSR, policy: PlanPolicy,
         plans = tuple(build_plan(c, policy=p)
                       for c, p in zip(build_csrs, pinned))
     uniform = stackable and all(p.meta == plans[0].meta for p in plans)
+    if _trace._enabled:
+        _trace.event("plan.sharded_assembled", cat="plan", n_shards=n,
+                     dim=spec.dim, uniform=uniform,
+                     methods=[p.meta.method for p in plans])
     meta = ShardedMeta(shape=a.shape, nnz_pad=a.nnz_pad, dim=spec.dim,
                        bounds=shards.bounds, axis=spec.axis, mesh=spec.mesh,
                        uniform=uniform, local_metas=tuple(p.meta
@@ -465,6 +493,14 @@ def execute_sharded(plan: ShardedSpmmPlan, vals: jax.Array, b: jax.Array,
     inner = dataclasses.replace(exec, epilogue=None,
                                 out_dtype=exec.acc_dtype)
     mesh = meta.spmd_mesh()
+    if _trace._enabled:
+        path = "spmd" if mesh is not None else "loop"
+        _sharded_execute.labels(path=path).inc()
+        _trace.event("dispatch.sharded", cat="dispatch", path=path,
+                     n_shards=meta.n_shards, dim=meta.dim,
+                     uniform=meta.uniform, impl=exec.impl,
+                     method=meta.method, n=int(b.shape[-1]),
+                     acc_dtype=exec.acc_dtype, out_dtype=exec.out_dtype)
     out = _execute_spmd(plan, vals, b, inner, mesh) if mesh is not None \
         else _execute_loop(plan, vals, b, inner)
     if ep is not None:

@@ -16,15 +16,33 @@ loop" is asserted against them in ``tests/test_engine.py``.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import threading
 from collections import OrderedDict
 
+from repro import obs as _obs
 from repro.core.config import (DEFAULT_TUNEDB, PlanPolicy, _UNSET,
                                _warn_deprecated)
 from repro.core.csr import CSR
 from repro.core.plan import SpmmPlan, build_plan, pattern_fingerprint
+from repro.obs import trace as _trace
 
 DEFAULT_MAXSIZE = 256
+
+# Cache counters live on the global metrics registry, one labeled child
+# per (cache instance, event).  Each child increments under its own lock,
+# so executors sharing a cache can never lose counts; ``stats()`` keeps
+# presenting them as the historical CacheStats view.
+_cache_events = _obs.registry.counter(
+    "plan_cache_events_total", "PlanCache events by cache instance",
+    labels=("cache", "event"))
+_cache_size = _obs.registry.gauge(
+    "plan_cache_size", "live entries per PlanCache", labels=("cache",))
+_cache_alias_size = _obs.registry.gauge(
+    "plan_cache_aliases", "live alias-map entries per PlanCache",
+    labels=("cache",))
+
+_cache_ids = itertools.count()
 
 # Legacy sentinel: "no tunedb argument given — use the process default".
 _USE_DEFAULT = DEFAULT_TUNEDB
@@ -78,8 +96,20 @@ class PlanCache:
     """Thread-safe LRU over ``build_plan`` results."""
 
     def __init__(self, maxsize: int = DEFAULT_MAXSIZE,
-                 alias_maxsize: int | None = None):
+                 alias_maxsize: int | None = None,
+                 name: str | None = None):
         self.maxsize = maxsize
+        # The metric label distinguishing this instance's counters on the
+        # global registry (the process-default cache is "default").
+        self.name = name if name is not None else f"cache{next(_cache_ids)}"
+        self._c_hit = _cache_events.labels(cache=self.name, event="hit")
+        self._c_miss = _cache_events.labels(cache=self.name, event="miss")
+        self._c_evict = _cache_events.labels(cache=self.name,
+                                             event="eviction")
+        self._c_alias_evict = _cache_events.labels(
+            cache=self.name, event="alias_eviction")
+        self._g_size = _cache_size.labels(cache=self.name)
+        self._g_aliases = _cache_alias_size.labels(cache=self.name)
         # The alias map is its own (cheap, key-only) LRU: raw request keys
         # embed per-request objects' attributes (heuristic thresholds,
         # TuneDB digests), so a long-lived server cycling those would
@@ -93,7 +123,6 @@ class PlanCache:
         # repeated request skips resolve_static's host sync entirely.
         self._aliases: OrderedDict[tuple, tuple] = OrderedDict()
         self._lock = threading.Lock()
-        self._stats = CacheStats()
 
     def _alias_insert(self, raw: tuple, key: tuple) -> None:
         # Callers hold self._lock.
@@ -101,8 +130,8 @@ class PlanCache:
         self._aliases.move_to_end(raw)
         while len(self._aliases) > self.alias_maxsize:
             self._aliases.popitem(last=False)
-            self._stats.alias_evictions += 1
-        self._stats.aliases = len(self._aliases)
+            self._c_alias_evict.inc()
+        self._g_aliases.set(len(self._aliases))
 
     def get(self, a: CSR, policy: PlanPolicy | None = None, *,
             method=_UNSET, heuristic=_UNSET, t=_UNSET, tl=_UNSET,
@@ -161,7 +190,10 @@ class PlanCache:
             if plan is not None:
                 self._entries.move_to_end(canonical)
                 self._aliases.move_to_end(raw)
-                self._stats.hits += 1
+                self._c_hit.inc()
+                if _trace._enabled:
+                    _trace.event("cache.hit", cat="cache", cache=self.name,
+                                 alias=True, method=plan.meta.method)
                 return plan
         r = policy.resolve(a)
         key = (raw[0], a.shape, a.nnz_pad, r.method, r.t, r.tl, r.l_pad,
@@ -171,13 +203,25 @@ class PlanCache:
             if plan is not None:
                 self._entries.move_to_end(key)
                 self._alias_insert(raw, key)
-                self._stats.hits += 1
+                self._c_hit.inc()
+                if _trace._enabled:
+                    _trace.event("cache.hit", cat="cache", cache=self.name,
+                                 alias=False, method=plan.meta.method)
                 return plan
         # Build outside the lock — plans are pure functions of the key.
-        plan = build_plan(a, method=r.method, t=r.t, tl=r.tl, l_pad=r.l_pad,
-                          with_transpose=policy.with_transpose, _resolved=r)
+        if _trace._enabled:
+            _trace.event("cache.miss", cat="cache", cache=self.name,
+                         method=r.method)
+        with _trace.span("plan.build", cat="plan", method=r.method,
+                         m=int(a.shape[0]), k=int(a.shape[1]),
+                         nnz_pad=int(a.nnz_pad), t=r.t, tl=r.tl,
+                         l_pad=r.l_pad):
+            plan = build_plan(a, method=r.method, t=r.t, tl=r.tl,
+                              l_pad=r.l_pad,
+                              with_transpose=policy.with_transpose,
+                              _resolved=r)
         with self._lock:
-            self._stats.misses += 1
+            self._c_miss.inc()
             self._entries[key] = plan
             self._entries.move_to_end(key)
             self._alias_insert(raw, key)
@@ -185,9 +229,12 @@ class PlanCache:
                 evicted, _ = self._entries.popitem(last=False)
                 self._aliases = OrderedDict(
                     (r, c) for r, c in self._aliases.items() if c != evicted)
-                self._stats.evictions += 1
-            self._stats.size = len(self._entries)
-            self._stats.aliases = len(self._aliases)
+                self._c_evict.inc()
+                if _trace._enabled:
+                    _trace.event("cache.eviction", cat="cache",
+                                 cache=self.name)
+            self._g_size.set(len(self._entries))
+            self._g_aliases.set(len(self._aliases))
         return plan
 
     def _get_sharded(self, a: CSR, policy: PlanPolicy):
@@ -217,43 +264,60 @@ class PlanCache:
             plan = self._entries.get(key)
             if plan is not None:
                 self._entries.move_to_end(key)
-                self._stats.hits += 1
+                self._c_hit.inc()
+                if _trace._enabled:
+                    _trace.event("cache.hit", cat="cache", cache=self.name,
+                                 alias=False, sharded=True)
                 return plan
         # Build outside the lock; the per-shard plans recurse through
         # self.get (each takes the lock for its own entry).
         from repro.distributed.spmm import build_sharded_plan
 
+        if _trace._enabled:
+            _trace.event("cache.miss", cat="cache", cache=self.name,
+                         sharded=True)
         plan = build_sharded_plan(a, policy, cache=self)
         with self._lock:
-            self._stats.misses += 1
+            self._c_miss.inc()
             self._entries[key] = plan
             self._entries.move_to_end(key)
             while len(self._entries) > self.maxsize:
                 evicted, _ = self._entries.popitem(last=False)
                 self._aliases = OrderedDict(
                     (r, c) for r, c in self._aliases.items() if c != evicted)
-                self._stats.evictions += 1
-            self._stats.size = len(self._entries)
+                self._c_evict.inc()
+                if _trace._enabled:
+                    _trace.event("cache.eviction", cat="cache",
+                                 cache=self.name)
+            self._g_size.set(len(self._entries))
         return plan
 
     # ------------------------------------------------------ maintenance ---
 
     def stats(self) -> CacheStats:
-        with self._lock:
-            return dataclasses.replace(self._stats)
+        """The historical attribute view, assembled from the registry's
+        per-instance children (still the API tests and callers use)."""
+        return CacheStats(
+            hits=self._c_hit.value, misses=self._c_miss.value,
+            evictions=self._c_evict.value,
+            size=int(self._g_size.value),
+            aliases=int(self._g_aliases.value),
+            alias_evictions=self._c_alias_evict.value)
 
     def clear(self) -> None:
         with self._lock:
             self._entries.clear()
             self._aliases.clear()
-            self._stats = CacheStats()
+            for c in (self._c_hit, self._c_miss, self._c_evict,
+                      self._c_alias_evict, self._g_size, self._g_aliases):
+                c.reset()
 
     def __len__(self) -> int:
         with self._lock:
             return len(self._entries)
 
 
-_default_cache = PlanCache()
+_default_cache = PlanCache(name="default")
 
 
 def default_cache() -> PlanCache:

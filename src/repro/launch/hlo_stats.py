@@ -226,6 +226,21 @@ def parse_module(text: str) -> dict:
     }
 
 
+def parse_compiled(fn, *args, **kwargs) -> dict:
+    """``parse_module`` of a callable's compiled (post-SPMD) HLO.
+
+    ``fn`` is jit-wrapped if it isn't already; ``*args``/``**kwargs`` are
+    the abstract or concrete operands to lower for.  The convenience the
+    roofline accountant and the obs bench use: one call from a callable to
+    the traffic model's {flops, hbm_bytes, collective_*} dict.
+    """
+    import jax
+
+    jitted = fn if hasattr(fn, "lower") else jax.jit(fn)
+    compiled = jitted.lower(*args, **kwargs).compile()
+    return parse_module(compiled.as_text())
+
+
 # ---- legacy summary API (kept for tests/benchmarks) ------------------------
 
 

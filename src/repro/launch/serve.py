@@ -16,11 +16,17 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.configs import ARCHS, get_config, get_smoke_config
 from repro.models import layers as L
 from repro.models import model as M
 from repro.models import sparse as S
 from repro.runtime import steps as R
+
+# Per-phase serving latency: "plan" (prune + plan build), "cold" (first
+# jitted forward, compile included), "warm" (steady state).
+_serve_latency = obs.registry.histogram(
+    "serve_latency_us", "serve.py phase latency", labels=("phase",))
 
 
 def generate(cfg, params, prompt_tokens, gen_len: int, *, cache_extra=8):
@@ -104,8 +110,10 @@ def serve_pruned(cfg, params, prompt, keep: float, *, microbatch: int = 0,
 
     check_prunable(cfg)
     t0 = time.perf_counter()
-    blocks = prune_ffn_blocks(params, cfg, keep, policy=policy)
+    with obs.span("serve.plan", cat="serve", keep=keep):
+        blocks = prune_ffn_blocks(params, cfg, keep, policy=policy)
     t_plan = time.perf_counter() - t0
+    _serve_latency.labels(phase="plan").observe(t_plan * 1e6)
     stats = engine.cache_stats()
     methods = {k: v.method for k, v in blocks[0]["mlp"].items()}
     print(f"[serve] pruned {len(blocks)} MLPs (keep={keep:.0%}) "
@@ -118,10 +126,16 @@ def serve_pruned(cfg, params, prompt, keep: float, *, microbatch: int = 0,
         # compile cost is paid for the microbatch shape only, and each
         # slice's batch axis rides the engine's batched plan execution.
         fwd = R.microbatched(fwd, microbatch, argnums=(2,))
-    logits = jax.block_until_ready(fwd(params, blocks, prompt))
+    t_cold0 = time.perf_counter()
+    with obs.span("serve.forward_cold", cat="serve"):
+        logits = jax.block_until_ready(fwd(params, blocks, prompt))
+    _serve_latency.labels(phase="cold").observe(
+        (time.perf_counter() - t_cold0) * 1e6)
     t1 = time.perf_counter()
-    logits = jax.block_until_ready(fwd(params, blocks, prompt))
+    with obs.span("serve.forward_warm", cat="serve"):
+        logits = jax.block_until_ready(fwd(params, blocks, prompt))
     t_warm = time.perf_counter() - t1
+    _serve_latency.labels(phase="warm").observe(t_warm * 1e6)
     after = engine.cache_stats()
     assert after.misses == stats.misses, "jitted serving replanned!"
     mb = f" (microbatch={microbatch})" if microbatch else ""
@@ -157,6 +171,14 @@ def main(argv=None):
                     "per shard, executed as a single shard_map program "
                     "(CPU dev boxes: XLA_FLAGS="
                     "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--trace-out", default="", metavar="PATH",
+                    help="enable structured tracing and write the Chrome "
+                    "trace-event JSON (Perfetto-viewable) here on exit "
+                    "(REPRO_TRACE=1 enables tracing without a file)")
+    ap.add_argument("--metrics-out", default="", metavar="PATH",
+                    help="write a JSON snapshot of the metrics registry "
+                    "(latency histograms, plan-cache counters, ladder "
+                    "rung rates) here on exit")
     from repro.kernels import registry
     ap.add_argument("--spmm-method", default="auto",
                     choices=("auto",) + registry.method_names(),
@@ -164,6 +186,9 @@ def main(argv=None):
                     "plans (any registered method; 'auto' resolves "
                     "through the TuneDB ladder + heuristic)")
     args = ap.parse_args(argv)
+
+    if args.trace_out:
+        obs.enable()
 
     if args.tunedb:
         from repro import engine
@@ -202,14 +227,28 @@ def main(argv=None):
                               microbatch=args.microbatch, policy=policy)
         print(f"pruned-FFN logits {logits.shape}; "
               f"argmax@last {jnp.argmax(logits[:, -1], -1)}")
+        _export_obs(args)
         return 0
     t0 = time.perf_counter()
-    out = generate(cfg, params, prompt, args.gen)
+    with obs.span("serve.generate", cat="serve", gen=args.gen):
+        out = generate(cfg, params, prompt, args.gen)
     dt = time.perf_counter() - t0
+    _serve_latency.labels(phase="generate").observe(dt * 1e6)
     print(f"generated {out.shape} in {dt:.2f}s "
           f"({args.batch * args.gen / dt:.1f} tok/s)")
     print(out[0, -args.gen:])
+    _export_obs(args)
     return 0
+
+
+def _export_obs(args) -> None:
+    if args.trace_out:
+        tr = obs.get_tracer()
+        if tr is not None:
+            print(f"[serve] trace: {tr.export(args.trace_out)} "
+                  f"({len(tr)} events)")
+    if args.metrics_out:
+        print(f"[serve] metrics: {obs.dump_metrics(args.metrics_out)}")
 
 
 if __name__ == "__main__":

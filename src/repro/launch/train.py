@@ -14,6 +14,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.checkpoint import CheckpointManager
 from repro.configs import ARCHS, get_config, get_smoke_config
 from repro.data import DataConfig, make_source
@@ -21,6 +22,11 @@ from repro.distributed import fault, sharding as sh
 from repro.launch.mesh import make_local_mesh
 from repro.optim import adamw
 from repro.runtime import steps as R
+
+# Step latency (the first observation includes compile; the histogram's
+# p50 reads as steady state, max as the compile step).
+_step_latency = obs.registry.histogram(
+    "train_step_latency_us", "train.py per-step wall time")
 
 
 def main(argv=None):
@@ -55,7 +61,16 @@ def main(argv=None):
                     "row shards (repro.distributed.spmm); when N matches "
                     "the local mesh's data axis the shards execute as one "
                     "shard_map program, otherwise as a per-shard loop")
+    ap.add_argument("--trace-out", default="", metavar="PATH",
+                    help="enable structured tracing and write the Chrome "
+                    "trace-event JSON here on exit")
+    ap.add_argument("--metrics-out", default="", metavar="PATH",
+                    help="write a JSON snapshot of the metrics registry "
+                    "(step-latency histogram, plan counters) on exit")
     args = ap.parse_args(argv)
+
+    if args.trace_out:
+        obs.enable()
 
     if args.tunedb:
         from repro import engine
@@ -111,8 +126,10 @@ def main(argv=None):
         for step in range(start_step, args.steps):
             batch = source.batch_at(step)
             with fault.StepTimer() as t:
-                state, metrics = jitted(state, batch)
-                jax.block_until_ready(metrics["loss"])
+                with obs.span("train.step", cat="train", step=step):
+                    state, metrics = jitted(state, batch)
+                    jax.block_until_ready(metrics["loss"])
+            _step_latency.observe(t.seconds * 1e6)
             if watermark.observe(step, t.seconds):
                 print(f"[straggler] step {step} took {t.seconds:.2f}s")
             if step % args.log_every == 0 or step == args.steps - 1:
@@ -128,10 +145,22 @@ def main(argv=None):
             if guard.should_checkpoint():
                 print(f"[train] preempted; checkpointed at {step + 1}; "
                       f"exiting for restart")
+                _export_obs(args)
                 return 0
     if watermark.flagged:
         print(f"[train] stragglers flagged: {watermark.flagged[:5]}")
+    _export_obs(args)
     return 0
+
+
+def _export_obs(args) -> None:
+    if args.trace_out:
+        tr = obs.get_tracer()
+        if tr is not None:
+            print(f"[train] trace: {tr.export(args.trace_out)} "
+                  f"({len(tr)} events)")
+    if args.metrics_out:
+        print(f"[train] metrics: {obs.dump_metrics(args.metrics_out)}")
 
 
 if __name__ == "__main__":

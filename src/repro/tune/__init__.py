@@ -14,11 +14,11 @@ See ``repro.tune.db`` for the resolution ladder and the on-disk schema,
 from .autotune import tune_pattern, tune_suite
 from .db import (SCHEMA_VERSION, TuneDB, TuneRecord, backend_key,
                  class_signature)
-from .timing import timeit
+from .timing import TimingResult, timeit
 
 __all__ = [
     "tune_pattern", "tune_suite",
     "SCHEMA_VERSION", "TuneDB", "TuneRecord", "backend_key",
     "class_signature",
-    "timeit",
+    "TimingResult", "timeit",
 ]

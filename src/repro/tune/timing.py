@@ -6,6 +6,13 @@ warm up past compilation, then report the median of ``repeat`` synchronous
 calls in microseconds.  Median (not mean) so a stray GC pause or
 first-touch page fault cannot flip a merge/rowsplit verdict recorded into
 the TuneDB.
+
+The result is a :class:`TimingResult` — a ``float`` subclass whose value
+*is* the median, so every existing arithmetic/format call site keeps
+working — that additionally retains the per-repeat samples and exposes
+``p50``/``p95``/``min``/``mean``/``std``/``cv``.  The benchmarks print
+``cv`` as a variance column: a winner whose margin is inside the noise
+band is not a winner.
 """
 from __future__ import annotations
 
@@ -15,8 +22,59 @@ import jax
 import numpy as np
 
 
-def timeit(fn, *args, warmup: int = 2, repeat: int = 5) -> float:
-    """Median wall-time in µs of a jitted callable."""
+class TimingResult(float):
+    """Median µs as a float, with the raw per-repeat samples attached."""
+
+    __slots__ = ("samples",)
+
+    def __new__(cls, samples):
+        xs = [float(s) for s in samples]
+        self = super().__new__(cls, float(np.median(xs)) if xs
+                               else float("nan"))
+        self.samples = tuple(xs)
+        return self
+
+    @property
+    def median(self) -> float:
+        return float(self)
+
+    @property
+    def p50(self) -> float:
+        return float(np.percentile(self.samples, 50))
+
+    @property
+    def p95(self) -> float:
+        return float(np.percentile(self.samples, 95))
+
+    @property
+    def min(self) -> float:
+        return float(np.min(self.samples))
+
+    @property
+    def max(self) -> float:
+        return float(np.max(self.samples))
+
+    @property
+    def mean(self) -> float:
+        return float(np.mean(self.samples))
+
+    @property
+    def std(self) -> float:
+        return float(np.std(self.samples))
+
+    @property
+    def cv(self) -> float:
+        """Coefficient of variation (std/mean) — the noise band."""
+        m = self.mean
+        return self.std / m if m > 0 else float("nan")
+
+    def __repr__(self) -> str:
+        return (f"TimingResult({float(self):.1f}us, n={len(self.samples)}, "
+                f"cv={self.cv:.3f})")
+
+
+def timeit(fn, *args, warmup: int = 2, repeat: int = 5) -> TimingResult:
+    """Median wall-time in µs of a jitted callable (a TimingResult)."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     ts = []
@@ -24,4 +82,4 @@ def timeit(fn, *args, warmup: int = 2, repeat: int = 5) -> float:
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         ts.append((time.perf_counter() - t0) * 1e6)
-    return float(np.median(ts))
+    return TimingResult(ts)

@@ -90,3 +90,56 @@ def test_wire_factors():
     assert hlo_stats._wire_factor("reduce-scatter", 8) == 7.0
     assert hlo_stats._wire_factor("collective-permute", 2) == 1.0
     assert hlo_stats._wire_factor("all-reduce", 1) == 0.0
+
+
+# ------------------------------------- engine programs (parse_compiled) ---
+
+
+def _epilogue_program_bytes(in_dtype):
+    """Parsed HBM traffic of an epilogue-fused SpMM program:
+    ``gelu(A @ B + bias)`` with f32 accumulation, in/out in ``in_dtype``."""
+    from repro.core import Epilogue, ExecutionConfig, build_plan, \
+        execute_plan, random_csr
+    from repro.obs import plan_min_bytes
+
+    a = random_csr(jax.random.PRNGKey(3), 48, 32, nnz_per_row=(0, 8))
+    n = 16
+    plan = build_plan(a, method="merge", with_transpose=False)
+    ex = ExecutionConfig(impl="xla", acc_dtype="float32",
+                         epilogue=Epilogue(bias=True, activation="gelu"))
+    vals = jax.ShapeDtypeStruct(a.vals.shape, in_dtype)
+    b = jax.ShapeDtypeStruct((a.k, n), in_dtype)
+    bias = jax.ShapeDtypeStruct((a.m,), in_dtype)
+    r = hlo_stats.parse_compiled(
+        lambda v, b2, bb: execute_plan(plan, v, b2, ex, bias=bb),
+        vals, b, bias)
+    model = plan_min_bytes(plan.meta, n, val_dtype=in_dtype.dtype.name
+                           if hasattr(in_dtype, "dtype") else str(in_dtype))
+    return r, model
+
+
+def test_parse_compiled_epilogue_fused_bf16_acc_f32():
+    """The fused bias+gelu mixed-precision serving program: the parser
+    must see a real module whose HBM bytes are at least the
+    compulsory-traffic model (the model is a lower bound).  No flops
+    assertion: the gather/segment-sum SpMM lowering has no ``dot`` op,
+    and the parser's flop leg counts contractions only."""
+    r32, model32 = _epilogue_program_bytes(jnp.float32)
+    r16, model16 = _epilogue_program_bytes(jnp.bfloat16)
+    for r, model in ((r32, model32), (r16, model16)):
+        assert r["hbm_bytes"] >= model
+        assert r["collective_count"] == 0
+    # half-width ins/outs must shrink both the model and the parsed
+    # traffic: the f32 accumulator stays internal to the fusion.
+    assert model16 < model32
+    assert r16["hbm_bytes"] < r32["hbm_bytes"]
+
+
+def test_parse_compiled_jit_wraps_plain_callables():
+    def f(x):
+        return (x @ x.T).sum()
+
+    spec = jax.ShapeDtypeStruct((8, 4), jnp.float32)
+    plain = hlo_stats.parse_compiled(f, spec)
+    jitted = hlo_stats.parse_compiled(jax.jit(f), spec)
+    assert plain["flops"] == jitted["flops"] == 2 * 8 * 8 * 4
