@@ -30,7 +30,7 @@ from repro.core import ExecutionConfig, Heuristic, PlanPolicy, calibrate, \
 from repro.core.plan import pattern_fingerprint
 from repro.kernels import ref, registry
 from repro.matrices import compute_stats, get_suite
-from repro.tune.db import TuneDB, TuneRecord, class_signature
+from repro.tune.db import TuneDB, TuneRecord
 
 from .common import geomean, make_b, timeit
 

@@ -9,7 +9,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import ExecutionConfig, PlanPolicy, spmm
 from .common import make_b, make_matrix, timeit

@@ -12,7 +12,6 @@ import dataclasses
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_smoke_config
 from repro.models import moe as MOE

@@ -49,7 +49,6 @@ def _cases():
 
 def _skewed(seed):
     """A few dense head rows over a sparse tail — the row-balance killer."""
-    import jax.numpy as jnp
 
     from repro.core.csr import from_dense
     rng = np.random.default_rng(seed)

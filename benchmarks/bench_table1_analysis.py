@@ -8,12 +8,12 @@ the kernels' BlockSpecs, not timed.
 """
 from __future__ import annotations
 
+import jax
 import numpy as np
 
 from repro.core import random_csr
 from repro.kernels import merge_spmm as MS
 from repro.kernels import rowsplit_spmm as RS
-import jax
 
 
 def analyze(m=4096, k=4096, mean_len=16, irregular=True, n=128, dtype_b=4):

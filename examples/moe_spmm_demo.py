@@ -11,7 +11,6 @@ import argparse
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config

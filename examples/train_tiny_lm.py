@@ -10,7 +10,6 @@ import argparse
 import dataclasses
 import sys
 
-from repro.configs import get_smoke_config
 from repro.launch import train as train_mod
 
 

@@ -16,12 +16,12 @@ sparse matmul — is re-exported here:
 ``tests/test_api.py`` snapshots this surface: a public name appearing or
 disappearing unannounced fails CI.
 """
-__version__ = "1.0.0"
-
 from repro.core import (CSR, Epilogue, ExecutionConfig, PlanPolicy,
                         ShardSpec, SparseMatrix, SpmmPlan, execute_plan,
                         spmm)
 from repro.engine import get_plan
+
+__version__ = "1.0.0"
 
 __all__ = [
     "CSR",

@@ -1,0 +1,49 @@
+"""Static verification layer: plan linter, kernel audit, repo lint.
+
+Three legs behind one CLI (``python -m repro.analysis``):
+
+* :mod:`repro.analysis.planlint` — host-side structural verification of
+  built ``SpmmPlan``/``ShardedSpmmPlan`` objects (exactly-once nonzero
+  coverage, merge-path tiling, sentinel hygiene, ...).  Also available
+  as an opt-in hook on every plan build: ``REPRO_VERIFY_PLANS=1`` (or
+  :func:`set_verify_plans`).
+* :mod:`repro.analysis.kernel_audit` — registry-driven static audit of
+  the Pallas lowerings (VMEM budget, index-map bounds, single-writer
+  flush, accumulator dtype) without executing a kernel.
+* :mod:`repro.analysis.lint` — AST rules for repo-wide call-site
+  discipline (RL001–RL004).
+
+This package is imported at load time by ``repro.core.plan`` (for the
+``_flags`` gate), so the top level stays import-light: the heavy legs
+load lazily via PEP 562.
+"""
+from __future__ import annotations
+
+from . import _flags
+from ._flags import set_verify_plans
+from .diagnostics import Diagnostic, format_diagnostics
+
+__all__ = [
+    "Diagnostic",
+    "format_diagnostics",
+    "set_verify_plans",
+    "_flags",
+    "planlint",
+    "kernel_audit",
+    "lint",
+]
+
+_LAZY = ("planlint", "kernel_audit", "lint")
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        mod = importlib.import_module(f".{name}", __name__)
+        globals()[name] = mod
+        return mod
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

@@ -1,0 +1,25 @@
+"""Debug-verification flags for the static-analysis hooks.
+
+Deliberately tiny: ``repro.core.plan`` and ``repro.distributed.spmm``
+import this module at load time to gate the ``REPRO_VERIFY_PLANS`` hook,
+so it must import nothing heavier than ``os`` (the ``obs`` gating
+pattern: one module-level attribute read when the hook is off, zero
+other cost).
+"""
+from __future__ import annotations
+
+import os
+
+# True: every plan built through build_plan / PlanCache.get /
+# build_sharded_plan is verified host-side (repro.analysis.planlint)
+# immediately after construction.  Off by default; enable with
+# REPRO_VERIFY_PLANS=1 or set_verify_plans(True).
+verify_plans: bool = os.environ.get("REPRO_VERIFY_PLANS", "") not in (
+    "", "0", "false", "no")
+
+
+def set_verify_plans(on: bool) -> bool:
+    """Flip the plan-verification hook; returns the previous value."""
+    global verify_plans
+    prev, verify_plans = verify_plans, bool(on)
+    return prev

@@ -1,0 +1,121 @@
+"""``python -m repro.analysis {planlint,audit,lint,all}``.
+
+One entry point for the three static-analysis legs:
+
+* ``planlint`` — build a plan per registered method (plus row- and
+  column-sharded plans) for every matrix in a suite and run the full
+  structural linter over each; a corrupt planner fails here before any
+  kernel would read the structure.
+* ``audit``    — the registry-driven kernel audit; ``--out`` writes the
+  per-method report table (the CI artifact).
+* ``lint``     — the repo-wide AST rules (RL001–RL004).
+* ``all``      — all three; exit status is non-zero iff any leg found
+  anything, which is the CI gate.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+from .diagnostics import format_diagnostics
+
+
+def _repo_root() -> str:
+    # src/repro/analysis/cli.py -> repo root, when run from a checkout;
+    # fall back to cwd for installed trees.
+    here = os.path.dirname(os.path.abspath(__file__))
+    root = os.path.dirname(os.path.dirname(os.path.dirname(here)))
+    if os.path.isdir(os.path.join(root, "benchmarks")):
+        return root
+    return os.getcwd()
+
+
+def run_planlint(suite: str = "mini", out=None) -> int:
+    """Self-check: verify every (suite matrix × method × sharding) plan."""
+    from repro.analysis import planlint
+    from repro.core.config import PlanPolicy, ShardSpec
+    from repro.core.plan import build_plan
+    from repro.distributed.spmm import build_sharded_plan
+    from repro.kernels import registry
+    from repro.matrices.suites import get_suite
+
+    failures = 0
+    checked = 0
+    for spec in get_suite(suite):
+        a = spec.build()
+        for method in registry.method_names():
+            plan = build_plan(a, method=method)
+            diags = planlint.verify_plan(plan, a)
+            checked += 1
+            if diags:
+                failures += len(diags)
+                print(format_diagnostics(
+                    diags, header=f"{spec.name} × {method}:"), file=out)
+        for dim in ("rows", "cols"):
+            policy = PlanPolicy(shards=ShardSpec(n=2, dim=dim))
+            plan = build_sharded_plan(a, policy)
+            diags = planlint.verify_sharded_plan(plan, a)
+            checked += 1
+            if diags:
+                failures += len(diags)
+                print(format_diagnostics(
+                    diags, header=f"{spec.name} × sharded/{dim}:"),
+                    file=out)
+    print(f"planlint: {checked} plan(s) verified on suite {suite!r}, "
+          f"{failures} finding(s)", file=out)
+    return 1 if failures else 0
+
+
+def run_audit(report_path=None, out=None) -> int:
+    from repro.analysis import kernel_audit
+
+    rows, diags = kernel_audit.audit_all()
+    report = kernel_audit.format_report(rows, diags)
+    print(report, file=out)
+    if report_path:
+        os.makedirs(os.path.dirname(report_path) or ".", exist_ok=True)
+        with open(report_path, "w", encoding="utf-8") as f:
+            f.write(report + "\n")
+        print(f"audit: report written to {report_path}", file=out)
+    return 1 if diags else 0
+
+
+def run_repo_lint(paths=None, out=None) -> int:
+    from repro.analysis import lint
+
+    diags = lint.run_lint(paths or None, repo_root=_repo_root())
+    if diags:
+        print(format_diagnostics(diags), file=out)
+    print(f"lint: {len(diags)} finding(s)", file=out)
+    return 1 if diags else 0
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static verification: plan linter, kernel audit, "
+                    "repo lint")
+    sub = p.add_subparsers(dest="cmd", required=True)
+    pl = sub.add_parser("planlint", help="verify plans over a suite")
+    pl.add_argument("--suite", default="mini")
+    au = sub.add_parser("audit", help="static Pallas kernel audit")
+    au.add_argument("--out", default=None,
+                    help="write the report table to this path")
+    li = sub.add_parser("lint", help="repo-wide AST lint")
+    li.add_argument("paths", nargs="*", help="files/dirs (default: src, "
+                    "benchmarks, examples)")
+    al = sub.add_parser("all", help="planlint + audit + lint (CI gate)")
+    al.add_argument("--suite", default="mini")
+    al.add_argument("--audit-out", default=None)
+    args = p.parse_args(argv)
+
+    if args.cmd == "planlint":
+        return run_planlint(args.suite)
+    if args.cmd == "audit":
+        return run_audit(args.out)
+    if args.cmd == "lint":
+        return run_repo_lint(args.paths)
+    rc = run_repo_lint(None)          # cheapest first: no jax import
+    rc = run_planlint(args.suite) or rc
+    rc = run_audit(args.audit_out) or rc
+    return rc

@@ -1,0 +1,30 @@
+"""Shared diagnostic record for the static-analysis subsystem.
+
+Every analysis leg (plan linter, kernel audit, repo lint) reports
+findings as :class:`Diagnostic` rows so the CLI can render them
+uniformly: ``<where>: <CODE> <message>``.  ``where`` is a ``file:line``
+location for source-level findings and a plan path (``plan.fwd.slot_nz``,
+``shard[2].meta.l_pad``) for structural ones.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    """One finding: a stable code, a location, and a message."""
+
+    code: str           # e.g. "P020", "K101", "RL001"
+    where: str          # file:line or plan path
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.where}: {self.code} {self.message}"
+
+
+def format_diagnostics(diags, *, header: str | None = None) -> str:
+    """Render diagnostics one per line (with an optional header)."""
+    lines = [] if header is None else [header]
+    lines.extend(str(d) for d in diags)
+    return "\n".join(lines)

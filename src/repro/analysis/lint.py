@@ -1,0 +1,292 @@
+"""AST-based repo lint: the call-site disciplines review keeps re-enforcing.
+
+Rules (suppress a line with ``# noqa: RLxxx`` or a bare ``# noqa``):
+
+* **RL001** — no host-sync calls (``.item()``, ``np.asarray``/``np.array``,
+  ``float(traced)``) inside jit-reachable functions.  A function is
+  jit-reachable when it is decorated with ``jit``/``custom_vjp``/
+  ``custom_vmap`` (directly or through ``functools.partial``), registered
+  via ``X.defvjp(...)``/``X.def_vmap(...)``, or is a Pallas kernel body
+  (calls ``pl.program_id``/``pl.when``/``pl.load``/``pl.store``).  Host
+  syncs there either crash under trace (the ``_require_concrete`` rule
+  from PR 2) or silently block the device stream.
+* **RL002** — no legacy pre-v1 kwargs at first-party call sites: the bare
+  ``method=``/``interpret=``/... shims on ``spmm``/``execute_plan``/
+  ``execute_sharded``/``get_plan`` warn at runtime and fold into
+  ``PlanPolicy``/``ExecutionConfig``; first-party code must use the v1
+  spelling (tests of the deprecation shims themselves are exempt).
+* **RL003** — every ``MethodSpec(...)`` registration supplies the complete
+  hook set as keywords; a positional or partial registration compiles
+  but strands the method outside the tuner/heuristic/audit machinery.
+* **RL004** — every ``benchmarks/bench_*.py`` on disk is referenced in
+  ``benchmarks/run.py::_mods`` (PR 7's ``check_registration``, proven
+  statically so the gap is caught before any benchmark imports jax).
+
+``run_lint(paths)`` returns ``Diagnostic`` rows with ``file:line``
+locations; the CLI (``python -m repro.analysis lint``) exits non-zero on
+any finding.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from collections.abc import Iterable
+
+from .diagnostics import Diagnostic
+
+_JIT_MARKERS = {"jit", "custom_vjp", "custom_vmap", "pallas_call"}
+_KERNEL_MARKERS = {"program_id", "when", "load", "store"}
+_NP_ALIASES = {"np", "numpy", "onp"}
+_HOST_SYNC_NP = {"asarray", "array"}
+
+#: first-party entry point -> pre-v1 kwargs that fold into
+#: PlanPolicy/ExecutionConfig (see core/spmm.py, engine/cache.py).
+LEGACY_KWARGS = {
+    "spmm": {"method", "l_pad", "t", "heuristic", "interpret", "impl",
+             "tk"},
+    "execute_plan": {"interpret", "impl", "tk"},
+    "execute_sharded": {"interpret", "impl", "tk"},
+    "get_plan": {"method", "heuristic", "t", "tl", "l_pad",
+                 "with_transpose", "tunedb"},
+}
+
+#: the complete MethodSpec hook set (kernels/registry.py) — RL003.
+METHODSPEC_FIELDS = {
+    "name", "description", "build_structure", "execute", "inline",
+    "resolve_params", "tune_candidates", "heuristic_rank",
+}
+
+_NOQA_RE = re.compile(r"#\s*noqa(?::\s*(?P<codes>[A-Z0-9, ]+))?",
+                      re.IGNORECASE)
+
+
+def _suppressed(lines: list[str], lineno: int, code: str) -> bool:
+    if not 1 <= lineno <= len(lines):
+        return False
+    m = _NOQA_RE.search(lines[lineno - 1])
+    if not m:
+        return False
+    codes = m.group("codes")
+    if codes is None:
+        return True
+    return code in {c.strip().upper() for c in codes.split(",")}
+
+
+def _dotted_names(node: ast.AST) -> Iterable[str]:
+    """Every Name id / Attribute attr under ``node`` (decorator scan)."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name):
+            yield sub.id
+        elif isinstance(sub, ast.Attribute):
+            yield sub.attr
+
+
+def _call_name(call: ast.Call) -> str | None:
+    """The final identifier of the called object (``f`` / ``mod.f``)."""
+    f = call.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return None
+
+
+def _defvjp_targets(tree: ast.Module) -> set[str]:
+    """Function names registered through ``X.defvjp(f, g)`` / def_vmap."""
+    out: set[str] = set()
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in ("defvjp", "def_vmap")):
+            for arg in node.args:
+                if isinstance(arg, ast.Name):
+                    out.add(arg.id)
+    return out
+
+
+def _is_jit_reachable(fn: ast.FunctionDef, vjp_targets: set[str]) -> bool:
+    if fn.name in vjp_targets:
+        return True
+    for dec in fn.decorator_list:
+        if _JIT_MARKERS.intersection(_dotted_names(dec)):
+            return True
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and isinstance(node.func.value, ast.Name)
+                and node.func.value.id == "pl"
+                and node.func.attr in _KERNEL_MARKERS):
+            return True
+    return False
+
+
+def _check_host_sync(fn: ast.FunctionDef, path: str, lines,
+                     diags: list) -> None:
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        where = f"{path}:{node.lineno}"
+        f = node.func
+        if isinstance(f, ast.Attribute) and f.attr == "item" \
+                and not node.args:
+            msg = (f"host sync `.item()` inside jit-reachable "
+                   f"`{fn.name}` — return the array (or gate on "
+                   "concreteness via _require_concrete)")
+        elif (isinstance(f, ast.Attribute)
+              and f.attr in _HOST_SYNC_NP
+              and isinstance(f.value, ast.Name)
+              and f.value.id in _NP_ALIASES):
+            msg = (f"`{f.value.id}.{f.attr}(...)` inside jit-reachable "
+                   f"`{fn.name}` pulls a traced value to host — use "
+                   "jnp, or hoist to plan build time")
+        elif (isinstance(f, ast.Name) and f.id == "float" and node.args
+              and not isinstance(node.args[0], ast.Constant)):
+            msg = (f"`float(...)` on a non-literal inside jit-reachable "
+                   f"`{fn.name}` forces a device sync under trace")
+        else:
+            continue
+        if not _suppressed(lines, node.lineno, "RL001"):
+            diags.append(Diagnostic("RL001", where, msg))
+
+
+def _check_legacy_kwargs(tree, path: str, lines, diags: list) -> None:
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _call_name(node)
+        legacy = LEGACY_KWARGS.get(name or "")
+        if not legacy:
+            continue
+        used = sorted(kw.arg for kw in node.keywords
+                      if kw.arg in legacy)
+        if used and not _suppressed(lines, node.lineno, "RL002"):
+            diags.append(Diagnostic(
+                "RL002", f"{path}:{node.lineno}",
+                f"legacy pre-v1 kwargs {used} on `{name}` — fold into "
+                "PlanPolicy/ExecutionConfig (README: Migrating to API "
+                "v1)"))
+
+
+def _check_methodspec(tree, path: str, lines, diags: list) -> None:
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if _call_name(node) != "MethodSpec":
+            continue
+        if _suppressed(lines, node.lineno, "RL003"):
+            continue
+        where = f"{path}:{node.lineno}"
+        if node.args:
+            diags.append(Diagnostic(
+                "RL003", where,
+                "MethodSpec must be constructed with keywords only, so "
+                "the full hook set is auditable"))
+            continue
+        given = {kw.arg for kw in node.keywords if kw.arg}
+        missing = sorted(METHODSPEC_FIELDS - given)
+        if missing:
+            diags.append(Diagnostic(
+                "RL003", where,
+                f"MethodSpec registration missing hooks {missing} — "
+                "every method supplies the complete set (explicit None "
+                "is fine) so tuner/heuristic/audit coverage is total"))
+
+
+def _bench_mentions(run_py: str) -> set[str]:
+    """bench_* identifiers referenced inside run.py::_mods."""
+    with open(run_py, encoding="utf-8") as f:
+        tree = ast.parse(f.read(), run_py)
+    out: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef) and node.name == "_mods":
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.alias):
+                    out.add(sub.name)
+                elif isinstance(sub, ast.Name):
+                    out.add(sub.id)
+    return {n for n in out if n.startswith("bench_")}
+
+
+def check_bench_registration(bench_dir: str, diags: list) -> None:
+    run_py = os.path.join(bench_dir, "run.py")
+    if not os.path.exists(run_py):
+        return
+    on_disk = {f[:-3] for f in sorted(os.listdir(bench_dir))
+               if f.startswith("bench_") and f.endswith(".py")}
+    mentioned = _bench_mentions(run_py)
+    for stem in sorted(on_disk - mentioned):
+        diags.append(Diagnostic(
+            "RL004", f"{run_py}:1",
+            f"benchmarks/{stem}.py is not registered in run.py::_mods — "
+            "it will never run in CI"))
+    for stem in sorted(mentioned - on_disk):
+        diags.append(Diagnostic(
+            "RL004", f"{run_py}:1",
+            f"run.py::_mods references {stem} but benchmarks/{stem}.py "
+            "does not exist"))
+
+
+def lint_file(path: str, *, rules=("RL001", "RL002", "RL003"),
+              _exempt_legacy=("tests/test_api.py",)) -> list[Diagnostic]:
+    with open(path, encoding="utf-8") as f:
+        src = f.read()
+    lines = src.splitlines()
+    try:
+        tree = ast.parse(src, path)
+    except SyntaxError as e:
+        return [Diagnostic("RL000", f"{path}:{e.lineno or 1}",
+                           f"does not parse: {e.msg}")]
+    diags: list[Diagnostic] = []
+    if "RL001" in rules:
+        vjp_targets = _defvjp_targets(tree)
+        for node in ast.walk(tree):
+            if isinstance(node, ast.FunctionDef) and \
+                    _is_jit_reachable(node, vjp_targets):
+                _check_host_sync(node, path, lines, diags)
+    norm = path.replace(os.sep, "/")
+    if "RL002" in rules and not any(norm.endswith(e)
+                                    for e in _exempt_legacy):
+        _check_legacy_kwargs(tree, path, lines, diags)
+    if "RL003" in rules:
+        _check_methodspec(tree, path, lines, diags)
+    return diags
+
+
+def _default_roots(repo_root: str) -> list[str]:
+    roots = []
+    for rel in ("src", "benchmarks", "examples"):
+        p = os.path.join(repo_root, rel)
+        if os.path.isdir(p):
+            roots.append(p)
+    return roots
+
+
+def _py_files(paths: Iterable[str]) -> list[str]:
+    out = []
+    for p in paths:
+        if os.path.isfile(p):
+            out.append(p)
+            continue
+        for dirpath, dirnames, filenames in os.walk(p):
+            dirnames[:] = [d for d in dirnames
+                           if d not in ("__pycache__", ".git")]
+            out.extend(os.path.join(dirpath, f)
+                       for f in sorted(filenames) if f.endswith(".py"))
+    return sorted(out)
+
+
+def run_lint(paths: Iterable[str] | None = None, *,
+             repo_root: str | None = None) -> list[Diagnostic]:
+    """Lint ``paths`` (default: src/, benchmarks/, examples/ under the
+    repo root) and the benchmark registration; returns diagnostics."""
+    if repo_root is None:
+        repo_root = os.getcwd()
+    targets = list(paths) if paths else _default_roots(repo_root)
+    diags: list[Diagnostic] = []
+    for path in _py_files(targets):
+        diags.extend(lint_file(path))
+    bench_dir = os.path.join(repo_root, "benchmarks")
+    if paths is None and os.path.isdir(bench_dir):
+        check_bench_registration(bench_dir, diags)
+    return diags

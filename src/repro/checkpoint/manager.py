@@ -21,7 +21,6 @@ import os
 import shutil
 
 import jax
-import jax.numpy as jnp
 import msgpack
 import numpy as np
 

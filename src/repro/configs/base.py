@@ -7,7 +7,6 @@ same-family variant for CPU tests).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
@@ -28,7 +27,7 @@ class ModelConfig:
     # segments: ((pattern, repeat), ...) where pattern is a tuple of block
     # types from {"attn", "moe", "ssd", "rglru"}; "attn" blocks carry an MLP,
     # per standard pre-norm transformer blocks.
-    segments: Tuple[Tuple[Tuple[str, ...], int], ...] = ()
+    segments: tuple[tuple[tuple[str, ...], int], ...] = ()
 
     # --- attention --------------------------------------------------------
     attention: str = "full"     # full | swa | local
@@ -69,7 +68,7 @@ class ModelConfig:
     param_dtype: str = "float32"
     compute_dtype: str = "bfloat16"
 
-    # --- distribution ---------------------------------------------------------
+    # --- distribution ----------------------------------------------------
     # layout of the (b, s, d) residual stream between blocks:
     #   ("dp", None, None)     — batch-sharded, d replicated (TP classic)
     #   ("dp", "model", None)  — + sequence-parallel over the model axis
@@ -113,12 +112,14 @@ class ModelConfig:
             n += v * d
         for bt in self.block_types():
             if bt == "attn":
-                n += d * (self.num_heads * hd) + 2 * d * (self.num_kv_heads * hd)
+                n += d * (self.num_heads * hd)
+                n += 2 * d * (self.num_kv_heads * hd)
                 n += (self.num_heads * hd) * d
                 if ff:
                     n += 3 * d * ff  # SwiGLU
             elif bt == "moe":
-                n += d * (self.num_heads * hd) + 2 * d * (self.num_kv_heads * hd)
+                n += d * (self.num_heads * hd)
+                n += 2 * d * (self.num_kv_heads * hd)
                 n += (self.num_heads * hd) * d
                 n += self.num_experts * 3 * d * ff + d * self.num_experts
             elif bt == "ssd":

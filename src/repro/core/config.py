@@ -30,7 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 from repro import obs as _obs
 from repro.obs import trace as _trace
@@ -46,7 +46,7 @@ _resolve_total = _obs.registry.counter(
     labels=("rung", "method"))
 
 
-def _canon_dtype(x) -> Optional[str]:
+def _canon_dtype(x) -> str | None:
     """Normalize a dtype-ish to its canonical name string (or None).
 
     Stored as a string so ExecutionConfig stays hashable and printable
@@ -74,7 +74,7 @@ class _DefaultTuneDB:
     resolution and falls back to the analytic heuristic.
     """
 
-    _instance: Optional["_DefaultTuneDB"] = None
+    _instance: "_DefaultTuneDB" | None = None
 
     def __new__(cls):
         if cls._instance is None:
@@ -103,9 +103,9 @@ class ShardSpec:
     Hashable — a ShardSpec is part of the engine's plan-cache key.
     """
 
-    n: Optional[int] = None
+    n: int | None = None
     dim: str = "rows"
-    axis: Optional[str] = None        # default: "data" (rows) / "model"
+    axis: str | None = None        # default: "data" (rows) / "model"
     mesh: Any = None                  # jax.sharding.Mesh | None
 
     def __post_init__(self):
@@ -135,7 +135,7 @@ class ShardSpec:
         return self.n if self.n is not None else self.mesh.shape[self.axis]
 
 
-def _as_shard_spec(shards) -> Optional[ShardSpec]:
+def _as_shard_spec(shards) -> ShardSpec | None:
     if shards is None or isinstance(shards, ShardSpec):
         return shards
     if isinstance(shards, int):
@@ -151,7 +151,7 @@ class ResolvedPlan(NamedTuple):
     method: str
     t: int
     tl: int
-    l_pad: Optional[int]
+    l_pad: int | None
     extra: tuple                  # hashable method-specific statics
 
 
@@ -168,13 +168,13 @@ class PlanPolicy:
     """
 
     method: str = "auto"
-    t: Optional[int] = None            # merge: nonzeroes per chunk
-    tl: Optional[int] = None           # rowsplit/rowgroup: row batch size
-    l_pad: Optional[int] = None        # rowsplit: static max row length
-    heuristic: Optional[Heuristic] = None
+    t: int | None = None            # merge: nonzeroes per chunk
+    tl: int | None = None           # rowsplit/rowgroup: row batch size
+    l_pad: int | None = None        # rowsplit: static max row length
+    heuristic: Heuristic | None = None
     tunedb: Any = DEFAULT_TUNEDB       # TuneDB | None (opt out) | default
     with_transpose: bool = True        # build the backward (CSC) plan
-    shards: Optional[ShardSpec] = None  # device sharding (int = n shards)
+    shards: ShardSpec | None = None  # device sharding (int = n shards)
 
     def __post_init__(self):
         object.__setattr__(self, "shards", _as_shard_spec(self.shards))
@@ -309,11 +309,11 @@ class ExecutionConfig:
     """
 
     impl: str = "pallas"
-    interpret: Optional[bool] = None
-    tk: Optional[int] = None
-    epilogue: Optional[Epilogue] = None
-    acc_dtype: Optional[str] = None
-    out_dtype: Optional[str] = None
+    interpret: bool | None = None
+    tk: int | None = None
+    epilogue: Epilogue | None = None
+    acc_dtype: str | None = None
+    out_dtype: str | None = None
 
     def __post_init__(self):
         object.__setattr__(self, "acc_dtype", _canon_dtype(self.acc_dtype))
@@ -373,7 +373,7 @@ def _coalesce(context: str, new_name: str, new_obj, cls, legacy: dict):
     return cls(**given)
 
 
-def coalesce_policy(context: str, policy: Optional[PlanPolicy], *,
+def coalesce_policy(context: str, policy: PlanPolicy | None, *,
                     method=_UNSET, t=_UNSET, l_pad=_UNSET,
                     heuristic=_UNSET) -> PlanPolicy:
     """Fold pre-v1 plan kwargs into a PlanPolicy (warn once; conflicts
@@ -384,7 +384,7 @@ def coalesce_policy(context: str, policy: Optional[PlanPolicy], *,
     return out if out is not None else PlanPolicy()
 
 
-def coalesce_exec(context: str, exec_: Optional[ExecutionConfig], *,
+def coalesce_exec(context: str, exec_: ExecutionConfig | None, *,
                   impl=_UNSET, interpret=_UNSET,
                   tk=_UNSET) -> ExecutionConfig:
     """Fold pre-v1 execution kwargs into an ExecutionConfig."""

@@ -8,8 +8,6 @@ kernel can consume them harmlessly).  Shape ``(m, k)`` is static metadata.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +22,7 @@ class CSR:
     row_ptr: jax.Array  # (m + 1,) int32, row_ptr[m] == nnz_true
     col_ind: jax.Array  # (nnz_pad,) int32, padded with 0
     vals: jax.Array     # (nnz_pad,) dtype, padded with 0
-    shape: Tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+    shape: tuple[int, int] = dataclasses.field(metadata=dict(static=True))
 
     @property
     def m(self) -> int:

@@ -24,7 +24,6 @@ everywhere).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 _ACTIVATIONS = ("none", "relu", "gelu")
 
@@ -44,7 +43,7 @@ class Epilogue:
     bias: bool = False
     activation: str = "none"
     residual: bool = False
-    scale: Optional[float] = None
+    scale: float | None = None
 
     def __post_init__(self):
         if self.activation not in _ACTIVATIONS:
@@ -72,7 +71,7 @@ def activation_fn(name: str):
     raise ValueError(f"unknown epilogue activation {name!r}")
 
 
-def apply_epilogue(c, ep: Optional[Epilogue], bias=None, residual=None):
+def apply_epilogue(c, ep: Epilogue | None, bias=None, residual=None):
     """Apply ``ep`` to an accumulator array *in its dtype*.
 
     ``c`` is ``(..., m, n)`` (or a kernel's ``(tm, tn)`` tile);  ``bias``

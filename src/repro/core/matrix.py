@@ -19,7 +19,6 @@ plan survives the value swap.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 
@@ -34,7 +33,7 @@ class SparseMatrix:
     """CSR pattern + values + (lazily attached) execution plan."""
 
     data: CSR
-    spmm_plan: Optional[SpmmPlan] = None
+    spmm_plan: SpmmPlan | None = None
 
     def __post_init__(self):
         p = self.spmm_plan
@@ -49,19 +48,19 @@ class SparseMatrix:
 
     @classmethod
     def from_csr(cls, csr: CSR,
-                 policy: Optional[PlanPolicy] = None) -> "SparseMatrix":
+                 policy: PlanPolicy | None = None) -> "SparseMatrix":
         """Wrap a CSR; with ``policy`` given, attach its plan eagerly."""
         mtx = cls(csr)
         return mtx.plan(policy) if policy is not None else mtx
 
     @classmethod
-    def from_dense(cls, dense, nnz_pad: Optional[int] = None,
-                   policy: Optional[PlanPolicy] = None) -> "SparseMatrix":
+    def from_dense(cls, dense, nnz_pad: int | None = None,
+                   policy: PlanPolicy | None = None) -> "SparseMatrix":
         return cls.from_csr(_csr_from_dense(dense, nnz_pad), policy)
 
     @classmethod
     def prune(cls, w, keep_fraction: float,
-              policy: Optional[PlanPolicy] = None) -> "SparseMatrix":
+              policy: PlanPolicy | None = None) -> "SparseMatrix":
         """Magnitude-prune a dense weight (top ``keep_fraction`` per row)."""
         return cls.from_csr(prune_to_csr(w, keep_fraction), policy)
 
@@ -95,7 +94,7 @@ class SparseMatrix:
         return self.data.nnz()
 
     @property
-    def method(self) -> Optional[str]:
+    def method(self) -> str | None:
         """The planned kernel method, or None while un-planned."""
         return self.spmm_plan.meta.method if self.spmm_plan else None
 
@@ -104,7 +103,7 @@ class SparseMatrix:
 
     # ------------------------------------------------------------- plans ---
 
-    def plan(self, policy: Optional[PlanPolicy] = None) -> "SparseMatrix":
+    def plan(self, policy: PlanPolicy | None = None) -> "SparseMatrix":
         """Attach the engine-cached plan for this pattern (host-side).
 
         Identity-cheap when the pattern's plan is already cached; the
@@ -145,9 +144,9 @@ class SparseMatrix:
             return self.plan(PlanPolicy(
                 method=meta.method, with_transpose=meta.has_transpose))
 
-    def shard(self, mesh=None, *, n: Optional[int] = None,
-              dim: str = "rows", axis: Optional[str] = None,
-              policy: Optional[PlanPolicy] = None) -> "SparseMatrix":
+    def shard(self, mesh=None, *, n: int | None = None,
+              dim: str = "rows", axis: str | None = None,
+              policy: PlanPolicy | None = None) -> "SparseMatrix":
         """Attach a device-sharded plan: nnz-balanced shards, one local
         plan per shard (``repro.distributed.spmm``).
 
@@ -176,9 +175,9 @@ class SparseMatrix:
 
     # --------------------------------------------------------- execution ---
 
-    def matmul(self, b: jax.Array, exec: Optional[ExecutionConfig] = None,
-               *, bias: Optional[jax.Array] = None,
-               residual: Optional[jax.Array] = None, **legacy) -> jax.Array:
+    def matmul(self, b: jax.Array, exec: ExecutionConfig | None = None,
+               *, bias: jax.Array | None = None,
+               residual: jax.Array | None = None, **legacy) -> jax.Array:
         """C = A @ B (``b`` (..., k, n) → (..., m, n)), differentiable.
 
         ``bias``/``residual`` feed the fused epilogue (flags in

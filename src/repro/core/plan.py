@@ -33,11 +33,12 @@ pattern, with ``repro.engine.get_plan``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.analysis import _flags as _verify_flags
 
 from .csr import CSR
 from .heuristic import Heuristic
@@ -48,14 +49,29 @@ class PlanMeta:
     """Static (hashable) metadata of an SpmmPlan — safe as a jit constant."""
 
     method: str                  # a registered method name (e.g. "merge")
-    shape: Tuple[int, int]       # (m, k) of A
+    shape: tuple[int, int]       # (m, k) of A
     nnz_pad: int                 # static nonzero capacity
     t: int                       # merge: nonzeroes per chunk
     tl: int                      # rowsplit: nonzeroes per row batch
-    l_pad: Optional[int]         # rowsplit: static max row length
+    l_pad: int | None         # rowsplit: static max row length
     has_transpose: bool          # backward (CSC-view) plan present
     extra: tuple = ()            # method-specific statics (hashable), e.g.
                                  # rowgroup's ((m_g, l_g), ...) group table
+
+    def __post_init__(self):
+        # PlanMeta rides through jit as a static (hashable) constant; an
+        # unhashable ``extra`` would otherwise surface much later as an
+        # opaque "unhashable type" error deep inside jax's caching.  Fail
+        # here, at construction, with the actual culprit named.
+        try:
+            hash(self.extra)
+        except TypeError:
+            raise TypeError(
+                f"PlanMeta.extra must be hashable (it is a jit-static "
+                f"constant), got {type(self.extra).__name__}: "
+                f"{self.extra!r}. Use nested tuples instead of "
+                "lists/dicts/arrays for method-specific statics."
+            ) from None
 
     @property
     def m(self) -> int:
@@ -72,7 +88,7 @@ class SpmmPlan:
     """Pattern-derived execute state for C = A @ B (and its VJP)."""
 
     fwd: dict                    # forward structure + nz coordinate arrays
-    bwd: Optional[dict]          # transpose merge structure (CSC view)
+    bwd: dict | None          # transpose merge structure (CSC view)
     meta: PlanMeta = dataclasses.field(metadata=dict(static=True))
 
     @property
@@ -80,7 +96,7 @@ class SpmmPlan:
         return self.meta.method
 
     @property
-    def l_pad(self) -> Optional[int]:
+    def l_pad(self) -> int | None:
         return self.meta.l_pad
 
 
@@ -226,7 +242,14 @@ def build_plan(a: CSR, *, method: str = "auto",
         # Backward slots index *original* vals: compose chunk slots with the
         # transpose permutation once, at build time.
         bwd["slot_nz"] = _compose_slots(bwd["slot_nz"], perm, nnz_pad)
-    return SpmmPlan(fwd=fwd, bwd=bwd, meta=meta)
+    plan = SpmmPlan(fwd=fwd, bwd=bwd, meta=meta)
+    if _verify_flags.verify_plans:
+        # Opt-in debug hook (REPRO_VERIFY_PLANS=1): full host-side
+        # structural verification of the freshly built plan.  One module
+        # attribute read when off — the obs gating pattern.
+        from repro.analysis.planlint import check_plan
+        check_plan(plan, a)
+    return plan
 
 
 _fingerprint_memo: dict = {}

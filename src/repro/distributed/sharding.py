@@ -17,7 +17,9 @@ Scheme (MaxText-style 2D + optional pod axis):
 """
 from __future__ import annotations
 
-from typing import Optional
+
+import contextlib
+import threading
 
 import jax
 import numpy as np
@@ -200,9 +202,6 @@ def replicated(mesh: Mesh):
 # no-op unless a launcher activates a mesh via ``use_mesh`` (CPU unit tests
 # run unconstrained).
 
-import contextlib
-import threading
-
 _TLS = threading.local()
 
 
@@ -218,7 +217,7 @@ def use_mesh(mesh: Mesh):
         _TLS.mesh = prev
 
 
-def active_mesh() -> Optional[Mesh]:
+def active_mesh() -> Mesh | None:
     return getattr(_TLS, "mesh", None)
 
 

@@ -40,7 +40,6 @@ either level.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -49,8 +48,9 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import obs as _obs
-from repro.core.config import (ExecutionConfig, PlanPolicy, ShardSpec,
-                               _UNSET, coalesce_exec)
+from repro.analysis import _flags as _verify_flags
+from repro.core.config import (ExecutionConfig, PlanPolicy, _UNSET,
+                               coalesce_exec)
 from repro.core.csr import CSR
 from repro.core.plan import SpmmPlan, build_plan
 from repro.core.spmm import execute_plan
@@ -101,18 +101,18 @@ class CsrShards:
     """
 
     dim: str                        # "rows" | "cols"
-    shape: Tuple[int, int]          # global (m, k)
+    shape: tuple[int, int]          # global (m, k)
     nnz_pad: int                    # global static nonzero capacity
-    bounds: Tuple[int, ...]         # n_shards+1 cuts over rows (or cols)
-    csrs: Tuple[CSR, ...]           # padded local patterns, uniform shapes
-    vals_slots: Tuple[jax.Array, ...]
-    b_rows: Optional[Tuple[jax.Array, ...]]   # cols-dim only
+    bounds: tuple[int, ...]         # n_shards+1 cuts over rows (or cols)
+    csrs: tuple[CSR, ...]           # padded local patterns, uniform shapes
+    vals_slots: tuple[jax.Array, ...]
+    b_rows: tuple[jax.Array, ...] | None   # cols-dim only
 
     @property
     def n_shards(self) -> int:
         return len(self.csrs)
 
-    def sizes(self) -> Tuple[int, ...]:
+    def sizes(self) -> tuple[int, ...]:
         """True (unpadded) rows/cols per shard."""
         return tuple(self.bounds[i + 1] - self.bounds[i]
                      for i in range(self.n_shards))
@@ -131,7 +131,7 @@ class CsrShards:
         rows = self.bounds[i + 1] - self.bounds[i]
         return CSR(c.row_ptr[:rows + 1], c.col_ind, c.vals, (rows, c.shape[1]))
 
-    def nnz_per_shard(self) -> Tuple[int, ...]:
+    def nnz_per_shard(self) -> tuple[int, ...]:
         return tuple(int(np.asarray(c.row_ptr)[-1]) for c in self.csrs)
 
 
@@ -223,14 +223,26 @@ def shard_csr_by_nnz(a: CSR, n_shards: int, *, dim: str = "rows") -> CsrShards:
 class ShardedMeta:
     """Static (hashable) metadata of a ShardedSpmmPlan."""
 
-    shape: Tuple[int, int]          # global (m, k)
+    shape: tuple[int, int]          # global (m, k)
     nnz_pad: int                    # global static nonzero capacity
     dim: str                        # "rows" | "cols"
-    bounds: Tuple[int, ...]
+    bounds: tuple[int, ...]
     axis: str                       # mesh axis name
-    mesh: Optional[jax.sharding.Mesh]
+    mesh: jax.sharding.Mesh | None
     uniform: bool                   # all shards share method + statics
     local_metas: tuple              # one PlanMeta per shard
+
+    def __post_init__(self):
+        # Like PlanMeta: this is a jit-static constant — an unhashable
+        # field must fail loudly at assembly, not inside jax's cache.
+        try:
+            hash((self.bounds, self.local_metas))
+        except TypeError:
+            raise TypeError(
+                "ShardedMeta must be hashable (it is a jit-static "
+                f"constant): bounds={self.bounds!r} and every local "
+                "PlanMeta must be built from tuples, not lists/arrays."
+            ) from None
 
     @property
     def n_shards(self) -> int:
@@ -250,7 +262,7 @@ class ShardedMeta:
         return methods.pop() if len(methods) == 1 else "mixed"
 
     @property
-    def l_pad(self) -> Optional[int]:
+    def l_pad(self) -> int | None:
         pads = {lm.l_pad for lm in self.local_metas}
         return pads.pop() if len(pads) == 1 else None
 
@@ -279,9 +291,9 @@ class ShardedSpmmPlan:
     sharded ``SparseMatrix``).
     """
 
-    shards: Tuple[SpmmPlan, ...]
-    vals_slots: Tuple[jax.Array, ...]
-    b_rows: Optional[Tuple[jax.Array, ...]]
+    shards: tuple[SpmmPlan, ...]
+    vals_slots: tuple[jax.Array, ...]
+    b_rows: tuple[jax.Array, ...] | None
     meta: ShardedMeta
 
     @property
@@ -428,8 +440,16 @@ def build_sharded_plan(a: CSR, policy: PlanPolicy,
                        bounds=shards.bounds, axis=spec.axis, mesh=spec.mesh,
                        uniform=uniform, local_metas=tuple(p.meta
                                                           for p in plans))
-    return ShardedSpmmPlan(shards=plans, vals_slots=shards.vals_slots,
+    plan = ShardedSpmmPlan(shards=plans, vals_slots=shards.vals_slots,
                            b_rows=shards.b_rows, meta=meta)
+    if _verify_flags.verify_plans:
+        # REPRO_VERIFY_PLANS debug hook: the per-shard plans were each
+        # verified by build_plan; this checks the assembly — bounds tile
+        # the global span, the values gather covers every global nonzero
+        # exactly once, b_rows slice per shard (repro.analysis.planlint).
+        from repro.analysis.planlint import check_plan
+        check_plan(plan, a)
+    return plan
 
 
 # -------------------------------------------------------------- execution ---

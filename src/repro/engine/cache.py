@@ -21,6 +21,7 @@ import threading
 from collections import OrderedDict
 
 from repro import obs as _obs
+from repro.analysis import _flags as _verify_flags
 from repro.core.config import (DEFAULT_TUNEDB, PlanPolicy, _UNSET,
                                _warn_deprecated)
 from repro.core.csr import CSR
@@ -46,6 +47,15 @@ _cache_ids = itertools.count()
 
 # Legacy sentinel: "no tunedb argument given — use the process default".
 _USE_DEFAULT = DEFAULT_TUNEDB
+
+
+def _verify_hit(plan, a: CSR) -> None:
+    """REPRO_VERIFY_PLANS debug hook on cache hits: misses verify inside
+    ``build_plan`` itself, but a hit serves a stored plan keyed by content
+    fingerprint — re-verify it against the CSR actually presented, so a
+    fingerprint collision or stale alias fails here, not in a kernel."""
+    from repro.analysis.planlint import check_plan
+    check_plan(plan, a)
 
 # Process-wide empirical tuning database (repro.tune.TuneDB).  When set,
 # every "auto" plan request resolves its method through measurements
@@ -194,6 +204,8 @@ class PlanCache:
                 if _trace._enabled:
                     _trace.event("cache.hit", cat="cache", cache=self.name,
                                  alias=True, method=plan.meta.method)
+                if _verify_flags.verify_plans:
+                    _verify_hit(plan, a)
                 return plan
         r = policy.resolve(a)
         key = (raw[0], a.shape, a.nnz_pad, r.method, r.t, r.tl, r.l_pad,
@@ -207,6 +219,8 @@ class PlanCache:
                 if _trace._enabled:
                     _trace.event("cache.hit", cat="cache", cache=self.name,
                                  alias=False, method=plan.meta.method)
+                if _verify_flags.verify_plans:
+                    _verify_hit(plan, a)
                 return plan
         # Build outside the lock — plans are pure functions of the key.
         if _trace._enabled:
@@ -268,6 +282,8 @@ class PlanCache:
                 if _trace._enabled:
                     _trace.event("cache.hit", cat="cache", cache=self.name,
                                  alias=False, sharded=True)
+                if _verify_flags.verify_plans:
+                    _verify_hit(plan, a)
                 return plan
         # Build outside the lock; the per-shard plans recurse through
         # self.get (each takes the lock for its own entry).

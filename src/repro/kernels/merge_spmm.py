@@ -42,9 +42,9 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.experimental.pallas.tpu as pltpu
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-import jax.experimental.pallas.tpu as pltpu
 
 from repro.core.csr import CSR, rows_from_row_ptr
 from repro.core.epilogue import apply_epilogue
@@ -111,7 +111,7 @@ def plan_merge_structure(a: CSR, *, t: int = DEFAULT_T, tm: int = TM):
     n_tiles_m = -(-m // tm)
     n_chunks = -(-nnz_pad // t) + n_tiles_m
 
-    rows = rows_from_row_ptr(a.row_ptr, nnz_pad)          # (nnz,) row ids, pad→m
+    rows = rows_from_row_ptr(a.row_ptr, nnz_pad)   # (nnz,) row ids, pad→m
     tile_of_nz = jnp.minimum(rows // tm, n_tiles_m - 1)    # pad entries clamp
     # nonzero count per row tile, and each nonzero's rank within its tile
     # (tile_of_nz is non-decreasing: CSR order, pads at the end).
@@ -119,7 +119,8 @@ def plan_merge_structure(a: CSR, *, t: int = DEFAULT_T, tm: int = TM):
         tile_of_nz, jnp.arange(n_tiles_m, dtype=jnp.int32), side="left"
     ).astype(jnp.int32)
     tile_counts = jnp.diff(jnp.append(tile_starts, nnz_pad))
-    pos_in_tile = jnp.arange(nnz_pad, dtype=jnp.int32) - tile_starts[tile_of_nz]
+    pos_in_tile = (jnp.arange(nnz_pad, dtype=jnp.int32)
+                   - tile_starts[tile_of_nz])
     # chunks allocated per tile: ceil(count/t), min 1 so that every C row
     # tile is visited (and zeroed) at least once; exclusive prefix sum.
     chunks_per_tile = jnp.maximum(1, -(-tile_counts // t))

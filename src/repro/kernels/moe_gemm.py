@@ -15,9 +15,9 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.experimental.pallas.tpu as pltpu
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-import jax.experimental.pallas.tpu as pltpu
 
 TT = 64    # tokens per grid step (the merge chunk)
 TDN = 128  # output-feature lanes

@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Optional, Sequence
+from collections.abc import Callable, Sequence
 
 import jax
 import numpy as np
@@ -74,10 +74,10 @@ class MethodSpec:
     description: str
     build_structure: Callable
     execute: Callable
-    inline: Optional[Callable]
+    inline: Callable | None
     resolve_params: Callable
     tune_candidates: Callable
-    heuristic_rank: Optional[Callable]
+    heuristic_rank: Callable | None
 
 
 _REGISTRY: dict[str, MethodSpec] = {}

@@ -28,9 +28,9 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.experimental.pallas.tpu as pltpu
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-import jax.experimental.pallas.tpu as pltpu
 
 from repro.core.csr import CSR
 

@@ -27,9 +27,9 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.experimental.pallas.tpu as pltpu
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-import jax.experimental.pallas.tpu as pltpu
 
 TN = 128   # lanes of the dense axis per grid step
 TQ = 128   # nonzeroes per chunk

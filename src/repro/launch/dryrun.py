@@ -32,12 +32,11 @@ import jax
 
 from repro.configs import ARCHS, SHAPES, get_config, shape_cells
 from repro.distributed import sharding as sh
+from repro.launch import hlo_stats
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import input_specs
-from repro.launch import hlo_stats
 from repro.optim import adamw
 from repro.runtime import steps as R
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 
 def default_microbatches(cfg, global_batch: int = 256,

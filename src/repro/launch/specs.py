@@ -7,7 +7,6 @@ import jax.numpy as jnp
 
 from repro.configs import SHAPES, get_config
 from repro.models import model as M
-from repro.optim import adamw
 from repro.runtime import steps as R
 
 

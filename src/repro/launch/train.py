@@ -8,17 +8,14 @@ watermarking, and deterministic data.
 from __future__ import annotations
 
 import argparse
-import os
-import time
 
 import jax
-import jax.numpy as jnp
 
 from repro import obs
 from repro.checkpoint import CheckpointManager
 from repro.configs import ARCHS, get_config, get_smoke_config
 from repro.data import DataConfig, make_source
-from repro.distributed import fault, sharding as sh
+from repro.distributed import fault
 from repro.launch.mesh import make_local_mesh
 from repro.optim import adamw
 from repro.runtime import steps as R

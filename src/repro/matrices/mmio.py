@@ -16,7 +16,8 @@ from __future__ import annotations
 
 import io
 import os
-from typing import IO, Iterable
+from collections.abc import Iterable
+from typing import IO
 
 import jax.numpy as jnp
 import numpy as np

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Callable, Dict, List, Tuple
+from collections.abc import Callable
 
 from repro.core.csr import CSR
 
@@ -36,8 +36,8 @@ class MatrixSpec:
         return self.build()
 
 
-_SPECS: Dict[str, MatrixSpec] = {}
-_SUITES: Dict[str, Tuple[str, ...]] = {}
+_SPECS: dict[str, MatrixSpec] = {}
+_SUITES: dict[str, tuple[str, ...]] = {}
 
 
 def register_spec(spec: MatrixSpec) -> MatrixSpec:
@@ -47,7 +47,7 @@ def register_spec(spec: MatrixSpec) -> MatrixSpec:
     return spec
 
 
-def register_suite(name: str, spec_names: Tuple[str, ...]) -> None:
+def register_suite(name: str, spec_names: tuple[str, ...]) -> None:
     missing = [s for s in spec_names if s not in _SPECS]
     if missing:
         raise ValueError(f"suite {name!r} references unknown specs "
@@ -55,18 +55,18 @@ def register_suite(name: str, spec_names: Tuple[str, ...]) -> None:
     _SUITES[name] = tuple(spec_names)
 
 
-def suite_names() -> List[str]:
+def suite_names() -> list[str]:
     return sorted(_SUITES)
 
 
-def get_suite(name: str) -> List[MatrixSpec]:
+def get_suite(name: str) -> list[MatrixSpec]:
     if name not in _SUITES:
         raise KeyError(f"unknown suite {name!r}; available: "
                        f"{suite_names()}")
     return [_SPECS[s] for s in _SUITES[name]]
 
 
-def specs_from_mtx_dir(path: str | os.PathLike) -> List[MatrixSpec]:
+def specs_from_mtx_dir(path: str | os.PathLike) -> list[MatrixSpec]:
     """One spec per ``.mtx`` file in ``path`` (sorted, non-recursive)."""
     specs = []
     for fname in sorted(os.listdir(path)):

@@ -8,8 +8,6 @@ bounded at 32k prefill and the HLO stays compact for the dry-run.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -59,7 +57,7 @@ def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
     half = dh // 2
     freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
     ang = positions[..., None].astype(jnp.float32) * freq   # (..., s, half)
-    ang = ang[..., None, :]                                  # (..., s, 1, half)
+    ang = ang[..., None, :]                            # (..., s, 1, half)
     cos, sin = jnp.cos(ang), jnp.sin(ang)
     x1, x2 = x[..., :half], x[..., half:]
     out = jnp.concatenate(
@@ -105,7 +103,7 @@ def _attend_block(q, k, v, qpos, kpos, carry, *, scale, window, softcap):
     return m_new, l, acc
 
 
-def flash_attention(q, k, v, *, q_offset=0, window: Optional[int] = None,
+def flash_attention(q, k, v, *, q_offset=0, window: int | None = None,
                     q_chunk: int = 512, kv_chunk: int = 512,
                     softcap: float = 0.0) -> jax.Array:
     """Causal blockwise attention.  q (b,sq,h,dh), k/v (b,skv,kv,dh).
@@ -172,7 +170,7 @@ def flash_attention(q, k, v, *, q_offset=0, window: Optional[int] = None,
 
 
 def decode_attention(q, k_cache, v_cache, pos, *,
-                     window: Optional[int] = None,
+                     window: int | None = None,
                      softcap: float = 0.0) -> jax.Array:
     """One-token attention against a cache.  q (b,1,h,dh); caches
     (b,S,kv,dh); pos (b,) current position (number of tokens already in
@@ -311,7 +309,8 @@ def init_mlp(key, cfg, d_ff=None) -> dict:
     s = d ** -0.5
     if getattr(cfg, "mlp", "swiglu") == "gelu":
         return {"w1": jax.random.normal(ks[0], (d, ff), cfg.pdtype) * s,
-                "w2": jax.random.normal(ks[1], (ff, d), cfg.pdtype) * ff ** -0.5}
+                "w2": (jax.random.normal(ks[1], (ff, d), cfg.pdtype)
+                       * ff ** -0.5)}
     return {"w1": jax.random.normal(ks[0], (d, ff), cfg.pdtype) * s,
             "w3": jax.random.normal(ks[1], (d, ff), cfg.pdtype) * s,
             "w2": jax.random.normal(ks[2], (ff, d), cfg.pdtype) * ff ** -0.5}

@@ -14,8 +14,7 @@ the dry-run shapes: ``loss_and_aux`` (train), ``prefill``, ``decode_step``.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -68,7 +67,7 @@ def init_block_cache(btype: str, cfg, batch: int, cache_len: int):
     raise ValueError(btype)
 
 
-def _window(cfg) -> Optional[int]:
+def _window(cfg) -> int | None:
     return None if cfg.attention == "full" else cfg.window
 
 
@@ -237,7 +236,7 @@ def loss_and_aux(params, cfg, batch, *, remat: bool = True,
     return nll + aux_weight * aux, {"nll": nll, "aux": aux, "tokens": cnt}
 
 
-def prefill(params, cfg, batch, *, cache_len: Optional[int] = None):
+def prefill(params, cfg, batch, *, cache_len: int | None = None):
     """Forward pass that fills caches.  Returns (caches, last_logits, pos)."""
     h = embed_inputs(params, cfg, batch)
     b, s, _ = h.shape

@@ -25,7 +25,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import constrain
-from repro.kernels import moe_gemm as _moe_kernel
 from repro.kernels import ops as _ops
 
 TT = 64  # tokens per block (the merge chunk size for experts)

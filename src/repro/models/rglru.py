@@ -29,7 +29,8 @@ def init_rglru(key, cfg) -> dict:
     return {
         "wx_in": jax.random.normal(ks[0], (d, w), cfg.pdtype) * s,
         "wg_in": jax.random.normal(ks[1], (d, w), cfg.pdtype) * s,
-        "conv": jax.random.normal(ks[2], (cfg.conv_width, w), cfg.pdtype) * 0.1,
+        "conv": (jax.random.normal(ks[2], (cfg.conv_width, w), cfg.pdtype)
+                 * 0.1),
         "gate_a": jnp.zeros((w,), jnp.float32),
         "gate_x": jnp.zeros((w,), jnp.float32),
         "lam": lam,

@@ -18,7 +18,6 @@ activations.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -54,12 +53,12 @@ def _legacy_heuristic(context: str, heuristic, policy):
 @dataclasses.dataclass(frozen=True)
 class SparseLinear:
     weight: CSR                    # (d_out, d_in)
-    plan: Optional[SpmmPlan]       # pattern plan (None = plan on first use)
+    plan: SpmmPlan | None       # pattern plan (None = plan on first use)
 
     @classmethod
     def from_dense(cls, w: jax.Array, keep_fraction: float,
-                   heuristic: Optional[Heuristic] = _UNSET, *,
-                   policy: Optional[PlanPolicy] = None) -> "SparseLinear":
+                   heuristic: Heuristic | None = _UNSET, *,
+                   policy: PlanPolicy | None = None) -> "SparseLinear":
         """Prune w (d_in, d_out) — stored transposed as (d_out, d_in).
 
         ``policy`` pins the plan request (method, static params, TuneDB);
@@ -81,8 +80,8 @@ class SparseLinear:
         """This layer's weight as the v1 ``SparseMatrix`` frontend."""
         return SparseMatrix(self.weight, self.plan)
 
-    def with_plan(self, heuristic: Optional[Heuristic] = _UNSET, *,
-                  policy: Optional[PlanPolicy] = None) -> "SparseLinear":
+    def with_plan(self, heuristic: Heuristic | None = _UNSET, *,
+                  policy: PlanPolicy | None = None) -> "SparseLinear":
         """(Re)attach the engine-cached plan for this weight's pattern.
 
         Identity-cheap when the plan is already cached — use after
@@ -101,9 +100,9 @@ class SparseLinear:
             mtx = SparseMatrix(self.weight).plan(policy or PlanPolicy())
         return dataclasses.replace(self, plan=mtx.spmm_plan)
 
-    def shard(self, mesh=None, *, n: Optional[int] = None,
-              dim: str = "rows", axis: Optional[str] = None,
-              policy: Optional[PlanPolicy] = None) -> "SparseLinear":
+    def shard(self, mesh=None, *, n: int | None = None,
+              dim: str = "rows", axis: str | None = None,
+              policy: PlanPolicy | None = None) -> "SparseLinear":
         """Re-plan this layer's weight with a device-sharded plan.
 
         nnz-balanced shards, one local plan per shard, executed under
@@ -119,13 +118,13 @@ class SparseLinear:
         return self.plan.meta.method if self.plan is not None else "auto"
 
     @property
-    def l_pad(self) -> Optional[int]:
+    def l_pad(self) -> int | None:
         return self.plan.meta.l_pad if self.plan is not None else None
 
     def __call__(self, x: jax.Array,
-                 exec: Optional[ExecutionConfig] = None, *,
-                 bias: Optional[jax.Array] = None,
-                 residual: Optional[jax.Array] = None, **kw) -> jax.Array:
+                 exec: ExecutionConfig | None = None, *,
+                 bias: jax.Array | None = None,
+                 residual: jax.Array | None = None, **kw) -> jax.Array:
         """x (..., d_in) → (..., d_out).  Differentiable in x and vals.
 
         ``exec`` is the per-call :class:`ExecutionConfig` (bare
@@ -170,7 +169,7 @@ jax.tree_util.register_pytree_node(
 
 
 def prune_mlp(mlp_params: dict, keep_fraction: float,
-              policy: Optional[PlanPolicy] = None) -> dict:
+              policy: PlanPolicy | None = None) -> dict:
     """Convert a dense MLP param dict (w1/w2[/w3]) to SparseLinear layers.
 
     ``policy`` pins every layer's plan request (e.g.
@@ -183,7 +182,7 @@ def prune_mlp(mlp_params: dict, keep_fraction: float,
 
 
 def sparse_mlp_apply(sparse_p: dict, x: jax.Array, cfg,
-                     exec: Optional[ExecutionConfig] = None) -> jax.Array:
+                     exec: ExecutionConfig | None = None) -> jax.Array:
     """Apply a pruned MLP block (gelu or swiglu, by the param dict's keys).
 
     The gelu variant fuses the activation into w1's SpMM epilogue — C is

@@ -30,7 +30,8 @@ def init_ssd(key, cfg) -> dict:
         "a_log": jnp.log(jnp.linspace(1.0, 16.0, heads)).astype(jnp.float32),
         "d_skip": jnp.ones((heads,), jnp.float32),
         "dt_bias": jnp.zeros((heads,), jnp.float32),
-        "out_proj": jax.random.normal(ks[2], (din, d), cfg.pdtype) * din ** -0.5,
+        "out_proj": (jax.random.normal(ks[2], (din, d), cfg.pdtype)
+                     * din ** -0.5),
     }
 
 

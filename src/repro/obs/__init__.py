@@ -18,8 +18,6 @@ engine modules may import it freely without cycles.
 """
 from __future__ import annotations
 
-from . import metrics as _metrics_mod
-from . import roofline as _roofline_mod
 from . import trace as trace
 from .metrics import (Counter, Gauge, Histogram, MetricFamily,
                       MetricsRegistry)

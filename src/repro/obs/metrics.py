@@ -22,7 +22,7 @@ import math
 import os
 import threading
 from collections import deque
-from typing import Iterable, Optional, Sequence
+from collections.abc import Iterable, Sequence
 
 DEFAULT_RESERVOIR = 1024
 
@@ -278,7 +278,7 @@ class MetricsRegistry:
         return self._declare(name, "histogram", help, labels,
                              reservoir=reservoir)
 
-    def get(self, name: str) -> Optional[MetricFamily]:
+    def get(self, name: str) -> MetricFamily | None:
         with self._lock:
             return self._families.get(name)
 

@@ -28,7 +28,6 @@ import json
 import os
 import threading
 import time
-from typing import Optional
 
 # ------------------------------------------------------ bytes/flops model ---
 
@@ -67,12 +66,12 @@ def fused_epilogue_ceiling(m: int, k: int, n: int, nnz: int, *,
 _DTYPE_BYTES = {"float64": 8, "float32": 4, "bfloat16": 2, "float16": 2}
 
 
-def _dtype_bytes(name: Optional[str]) -> int:
+def _dtype_bytes(name: str | None) -> int:
     return _DTYPE_BYTES.get(str(name), 4)
 
 
 def plan_min_bytes(meta, n: int, *, val_dtype: str = "float32",
-                   out_dtype: Optional[str] = None) -> int:
+                   out_dtype: str | None = None) -> int:
     """Compulsory bytes of executing a plan against an n-column B.
 
     ``meta`` is a ``core.plan.PlanMeta`` or ``distributed.spmm.
@@ -238,7 +237,7 @@ class RooflineAccountant:
 
     def account_plan(self, meta, n: int, *, wall_us: float,
                      impl: str = "pallas", val_dtype: str = "float32",
-                     out_dtype: Optional[str] = None, calls: int = 1,
+                     out_dtype: str | None = None, calls: int = 1,
                      kind: str = "spmm", hlo_bytes: float = 0.0) -> None:
         """Record executions of a plan (``meta``: PlanMeta/ShardedMeta)
         against an n-column B, deriving bytes/flops from the model."""

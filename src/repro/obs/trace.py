@@ -29,13 +29,12 @@ import os
 import threading
 import time
 from collections import deque
-from typing import Optional
 
 DEFAULT_CAPACITY = 65536
 
 # Fast-path flag: instrumentation sites read this attribute directly.
 _enabled: bool = False
-_tracer: Optional["Tracer"] = None
+_tracer: "Tracer" | None = None
 _lock = threading.Lock()
 
 
@@ -211,7 +210,7 @@ def is_enabled() -> bool:
     return _enabled
 
 
-def get_tracer() -> Optional[Tracer]:
+def get_tracer() -> Tracer | None:
     """The active Tracer, or None when tracing is disabled."""
     return _tracer
 

@@ -8,7 +8,6 @@ ZeRO-style sharded optimizer state for free.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

@@ -16,8 +16,6 @@ dispatch amortizer on top of the engine's batched plan execution.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -93,7 +91,7 @@ def make_train_step(cfg, opt_cfg: adamw.AdamWConfig, *,
     return train_step
 
 
-def make_prefill_step(cfg, *, cache_len: Optional[int] = None):
+def make_prefill_step(cfg, *, cache_len: int | None = None):
     def prefill_step(params, batch):
         caches, logits, pos = M.prefill(params, cfg, batch,
                                         cache_len=cache_len)
@@ -150,7 +148,7 @@ def ensure_spmm_plans(tree, policy=None, mesh=None):
 
 def make_sparse_train_step(sparse_p: dict, *, lr: float = 1e-2,
                            impl: str = "pallas",
-                           interpret: Optional[bool] = None):
+                           interpret: bool | None = None):
     """SGD step over the CSR *values* of a SparseLinear MLP (sparse
     fine-tuning: the pruned pattern — and therefore every plan — is
     frozen; values are the degrees of freedom).

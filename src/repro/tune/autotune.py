@@ -15,7 +15,7 @@ timings land in ``TuneRecord.timings``.
 from __future__ import annotations
 
 import math
-from typing import Callable, Iterable
+from collections.abc import Callable, Iterable
 
 import jax
 import jax.numpy as jnp

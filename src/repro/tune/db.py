@@ -31,7 +31,6 @@ import json
 import math
 import os
 import warnings
-from typing import Dict, Optional, Tuple
 
 import numpy as np
 
@@ -90,10 +89,10 @@ class TuneRecord:
     d: float                     # mean row length
     cv: float                    # row-length coefficient of variation
     n: int                       # dense B columns used for timing
-    l_pad: Optional[int] = None  # winning rowsplit pad (None: pattern max)
-    t: Optional[int] = None      # winning merge chunk size (None: default)
+    l_pad: int | None = None  # winning rowsplit pad (None: pattern max)
+    t: int | None = None      # winning merge chunk size (None: default)
     name: str = ""               # corpus spec name, for reports
-    timings: Optional[Dict[str, float]] = None  # per-method best, in us
+    timings: dict[str, float] | None = None  # per-method best, in us
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -113,11 +112,11 @@ class TuneDB:
 
     def __init__(self, backend: str | None = None):
         self.backend = backend or backend_key()
-        self.entries: Dict[str, TuneRecord] = {}
-        self.threshold: Optional[float] = None
-        self.threshold_accuracy: Optional[float] = None
-        self._classes: Dict[str, Dict[str, float]] = {}
-        self._digest: Optional[str] = None
+        self.entries: dict[str, TuneRecord] = {}
+        self.threshold: float | None = None
+        self.threshold_accuracy: float | None = None
+        self._classes: dict[str, dict[str, float]] = {}
+        self._digest: str | None = None
 
     # ------------------------------------------------------- mutation ---
 
@@ -138,7 +137,7 @@ class TuneDB:
         agg["merge_us"] += sgn * rec.merge_us
         agg["rowsplit_us"] += sgn * rec.rowsplit_us
 
-    def calibrate_threshold(self) -> Tuple[float, float]:
+    def calibrate_threshold(self) -> tuple[float, float]:
         """Fit the analytic-fallback threshold from this DB's timings."""
         if not self.entries:
             raise ValueError("cannot calibrate an empty TuneDB")
@@ -155,10 +154,10 @@ class TuneDB:
     def __len__(self) -> int:
         return len(self.entries)
 
-    def lookup_exact(self, fingerprint: str) -> Optional[TuneRecord]:
+    def lookup_exact(self, fingerprint: str) -> TuneRecord | None:
         return self.entries.get(fingerprint)
 
-    def lookup_class(self, signature: str) -> Optional[str]:
+    def lookup_class(self, signature: str) -> str | None:
         agg = self._classes.get(signature)
         if agg is None or (agg["merge_wins"] + agg["rowsplit_wins"]) <= 0:
             return None
@@ -174,14 +173,14 @@ class TuneDB:
             return Heuristic(threshold=self.threshold)
         return Heuristic()
 
-    def lookup_class_for(self, a: CSR) -> Optional[str]:
+    def lookup_class_for(self, a: CSR) -> str | None:
         """Class-rung lookup for a concrete pattern (no exact check)."""
         from repro.matrices.stats import compute_stats
 
         s = compute_stats(a)
         return self.lookup_class(class_signature(s.m, s.k, s.d, s.cv))
 
-    def resolve(self, a: CSR) -> Tuple[Optional[str], str]:
+    def resolve(self, a: CSR) -> tuple[str | None, str]:
         """Method for a concrete pattern: ``(method, source)``.
 
         ``source`` is ``"exact"``, ``"class"``, or ``"miss"`` (method

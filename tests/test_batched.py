@@ -13,10 +13,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import repro.models.sparse as S
 from repro.core import (CSR, ExecutionConfig, PlanPolicy, build_plan,
                         execute_plan, random_csr, spmm)
 from repro.kernels import ref
-import repro.models.sparse as S
+
+EC = ExecutionConfig  # keep call sites within the line limit
 
 TOL = dict(rtol=1e-5, atol=1e-5)
 METHODS = ["merge", "rowsplit"]
@@ -32,7 +34,7 @@ def _case(seed=0, m=40, k=32, n=16, npr=(0, 10)):
 
 
 def _loop(plan, vals, bs, impl):
-    return jnp.stack([execute_plan(plan, vals, bs[i], ExecutionConfig(impl=impl))
+    return jnp.stack([execute_plan(plan, vals, bs[i], EC(impl=impl))
                       for i in range(bs.shape[0])])
 
 
@@ -44,7 +46,7 @@ def _loop(plan, vals, bs, impl):
 def test_batched_matches_per_matrix_loop(method, impl):
     a, bs, _ = _case()
     plan = build_plan(a, method=method)
-    got = execute_plan(plan, a.vals, bs, ExecutionConfig(impl=impl))
+    got = execute_plan(plan, a.vals, bs, EC(impl=impl))
     want = _loop(plan, a.vals, bs, impl)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
     dense = np.asarray(a.to_dense())
@@ -58,7 +60,7 @@ def test_batched_matches_per_matrix_loop(method, impl):
 def test_vmap_matches_per_matrix_loop(method, impl):
     a, bs, _ = _case(seed=3)
     plan = build_plan(a, method=method)
-    got = jax.vmap(lambda b: execute_plan(plan, a.vals, b, ExecutionConfig(impl=impl)))(bs)
+    got = jax.vmap(lambda b: execute_plan(plan, a.vals, b, EC(impl=impl)))(bs)
     np.testing.assert_allclose(np.asarray(got),
                                np.asarray(_loop(plan, a.vals, bs, impl)),
                                **TOL)
@@ -69,7 +71,7 @@ def test_batched_under_jit_and_leading_dims():
     a, bs, _ = _case(seed=4)
     plan = build_plan(a, method="merge")
     b4 = jnp.stack([bs, 2.0 * bs])                 # (2, BATCH, k, n)
-    got = jax.jit(lambda v, b: execute_plan(plan, v, b, ExecutionConfig(impl="pallas")))(
+    got = jax.jit(lambda v, b: execute_plan(plan, v, b, EC(impl="pallas")))(
         a.vals, b4)
     assert got.shape == (2, BATCH, a.m, bs.shape[-1])
     np.testing.assert_allclose(np.asarray(got[1]),
@@ -99,11 +101,12 @@ def test_batched_grad_matches_loop(method, impl):
     plan = build_plan(a, method=method)
 
     def loss(vals, b):
-        return jnp.sum(execute_plan(plan, vals, b, ExecutionConfig(impl=impl)) * w)
+        return jnp.sum(execute_plan(plan, vals, b, EC(impl=impl)) * w)
 
     def loss_loop(vals, b):
-        return sum(jnp.sum(execute_plan(plan, vals, b[i], ExecutionConfig(impl=impl)) * w[i])
-                   for i in range(BATCH))
+        return sum(
+            jnp.sum(execute_plan(plan, vals, b[i], EC(impl=impl)) * w[i])
+            for i in range(BATCH))
 
     gv, gb = jax.grad(loss, argnums=(0, 1))(a.vals, bs)
     wv, wb = jax.grad(loss_loop, argnums=(0, 1))(a.vals, bs)
@@ -118,12 +121,12 @@ def test_grad_of_vmap_matches_loop(method):
 
     def loss(vals, b):
         out = jax.vmap(lambda bi: execute_plan(plan, vals, bi,
-                                               ExecutionConfig(impl="pallas")))(b)
+                                               EC(impl="pallas")))(b)
         return jnp.sum(out * w)
 
     def loss_loop(vals, b):
         return sum(jnp.sum(execute_plan(plan, vals, b[i],
-                                        ExecutionConfig(impl="pallas")) * w[i])
+                                        EC(impl="pallas")) * w[i])
                    for i in range(BATCH))
 
     gv, gb = jax.grad(loss, argnums=(0, 1))(a.vals, bs)
@@ -139,7 +142,7 @@ def test_vmap_of_grad_per_example(method):
     plan = build_plan(a, method=method)
 
     def one_loss(vals, b, wi):
-        return jnp.sum(execute_plan(plan, vals, b, ExecutionConfig(impl="pallas")) * wi)
+        return jnp.sum(execute_plan(plan, vals, b, EC(impl="pallas")) * wi)
 
     per = jax.vmap(jax.grad(one_loss), in_axes=(None, 0, 0))(a.vals, bs, w)
     want = jnp.stack([jax.grad(one_loss)(a.vals, bs[i], w[i])
@@ -157,7 +160,7 @@ def test_batched_grad_matches_dense_oracle():
         return jnp.sum(jnp.einsum("mk,bkn->bmn", dense, b) * w)
 
     gv, gb = jax.grad(
-        lambda v, b: jnp.sum(execute_plan(plan, v, b, ExecutionConfig(impl="pallas")) * w),
+        lambda v, b: jnp.sum(execute_plan(plan, v, b, EC(impl="pallas")) * w),
         argnums=(0, 1))(a.vals, bs)
     wv, wb = jax.grad(dense_loss, argnums=(0, 1))(a.vals, bs)
     np.testing.assert_allclose(np.asarray(gv), np.asarray(wv),
@@ -176,8 +179,8 @@ def test_ktile_bitmatches_whole_k(method):
     a = random_csr(jax.random.PRNGKey(10), 48, 96, nnz_per_row=(0, 12))
     b = jax.random.normal(jax.random.PRNGKey(11), (96, 128))
     plan = build_plan(a, method=method)
-    o_default = execute_plan(plan, a.vals, b, ExecutionConfig(impl="pallas"))
-    o_whole = execute_plan(plan, a.vals, b, ExecutionConfig(impl="pallas", tk=96))
+    o_default = execute_plan(plan, a.vals, b, EC(impl="pallas"))
+    o_whole = execute_plan(plan, a.vals, b, EC(impl="pallas", tk=96))
     np.testing.assert_array_equal(np.asarray(o_default), np.asarray(o_whole))
 
 
@@ -192,8 +195,8 @@ def test_ktile_bitmatch_on_mini_suite(method):
         vals = jnp.asarray(rng.standard_normal(a.nnz_pad), jnp.float32)
         b = jnp.asarray(rng.standard_normal((a.k, 128)), jnp.float32)
         plan = build_plan(a, method=method, with_transpose=False)
-        o_default = execute_plan(plan, vals, b, ExecutionConfig(impl="pallas"))
-        o_whole = execute_plan(plan, vals, b, ExecutionConfig(impl="pallas", tk=a.k))
+        o_default = execute_plan(plan, vals, b, EC(impl="pallas"))
+        o_whole = execute_plan(plan, vals, b, EC(impl="pallas", tk=a.k))
         np.testing.assert_array_equal(np.asarray(o_default),
                                       np.asarray(o_whole), err_msg=spec.name)
         dense = CSR(a.row_ptr, a.col_ind, vals, a.shape).to_dense()
@@ -208,14 +211,14 @@ def test_ktile_stream_matches_oracle(method, tk):
     """Forcing multiple K panels (accumulator carry) stays correct."""
     a, bs, w = _case(seed=12, k=96, npr=(0, 20))
     plan = build_plan(a, method=method)
-    got = execute_plan(plan, a.vals, bs, ExecutionConfig(impl="pallas", tk=tk))
+    got = execute_plan(plan, a.vals, bs, EC(impl="pallas", tk=tk))
     np.testing.assert_allclose(np.asarray(got),
                                np.asarray(_loop(plan, a.vals, bs, "pallas")),
                                **TOL)
     gv = jax.grad(lambda v: jnp.sum(
-        execute_plan(plan, v, bs, ExecutionConfig(impl="pallas", tk=tk)) * w))(a.vals)
+        execute_plan(plan, v, bs, EC(impl="pallas", tk=tk)) * w))(a.vals)
     wv = jax.grad(lambda v: jnp.sum(
-        execute_plan(plan, v, bs, ExecutionConfig(impl="xla")) * w))(a.vals)
+        execute_plan(plan, v, bs, EC(impl="xla")) * w))(a.vals)
     np.testing.assert_allclose(np.asarray(gv), np.asarray(wv), **TOL)
 
 
@@ -255,13 +258,13 @@ def test_degenerate_forward_and_grad(name, method, impl):
     bs = jax.random.normal(jax.random.PRNGKey(15), (2, 8, 16))
     dense = np.asarray(a.to_dense())
     plan = build_plan(a, method=method)
-    got = execute_plan(plan, a.vals, b, ExecutionConfig(impl=impl))
+    got = execute_plan(plan, a.vals, b, EC(impl=impl))
     np.testing.assert_allclose(np.asarray(got), dense @ np.asarray(b), **TOL)
-    got3 = execute_plan(plan, a.vals, bs, ExecutionConfig(impl=impl))
+    got3 = execute_plan(plan, a.vals, bs, EC(impl=impl))
     assert got3.shape == (2, a.m, 16)
     w = jnp.ones((2, a.m, 16))
     gv, gb = jax.grad(
-        lambda v, bb: jnp.sum(execute_plan(plan, v, bb, ExecutionConfig(impl=impl)) * w),
+        lambda v, bb: jnp.sum(execute_plan(plan, v, bb, EC(impl=impl)) * w),
         argnums=(0, 1))(a.vals, bs)
     assert gv.shape == a.vals.shape and gb.shape == bs.shape
     nnz = int(np.asarray(a.row_ptr)[-1])
@@ -272,7 +275,7 @@ def test_degenerate_forward_and_grad(name, method, impl):
 def test_degenerate_through_spmm_api():
     for name, a in _degenerates().items():
         b = jax.random.normal(jax.random.PRNGKey(16), (8, 16))
-        got = spmm(a, b, exec=ExecutionConfig(impl="xla"))
+        got = spmm(a, b, exec=EC(impl="xla"))
         np.testing.assert_allclose(np.asarray(got),
                                    np.asarray(a.to_dense()) @ np.asarray(b),
                                    err_msg=name, **TOL)
@@ -294,7 +297,7 @@ def test_undersized_l_pad_raises():
     # exact bound and larger are fine
     for lp in (16, 24):
         got = spmm(a, b, PlanPolicy(method="rowsplit", l_pad=lp),
-                   ExecutionConfig(impl="xla"))
+                   EC(impl="xla"))
         np.testing.assert_allclose(np.asarray(got),
                                    np.asarray(ref.spmm_dense_ref(a, b)),
                                    **TOL)
@@ -312,7 +315,7 @@ def test_plan_override_conflicts_raise():
         spmm(a, b, PlanPolicy(l_pad=64), plan=plan)
     # agreeing overrides execute fine
     got = spmm(a, b, PlanPolicy(method="merge", t=plan.meta.t),
-               ExecutionConfig(impl="xla"), plan=plan)
+               EC(impl="xla"), plan=plan)
     np.testing.assert_allclose(np.asarray(got),
                                np.asarray(ref.spmm_dense_ref(a, b)), **TOL)
     rplan = build_plan(a, method="rowsplit")
@@ -335,14 +338,14 @@ def test_sparse_linear_batched_path_matches_flat(monkeypatch):
     w = jnp.asarray(rng.standard_normal((24, 32)), jnp.float32)
     sl = S.SparseLinear.from_dense(w, 0.25)
     x = jnp.asarray(rng.standard_normal((2, 5, 24)), jnp.float32)
-    flat = sl(x, ExecutionConfig(impl="xla"))
+    flat = sl(x, EC(impl="xla"))
     monkeypatch.setattr(S, "BATCHED_MIN_TOKENS", 1)
     for impl in IMPLS:
-        np.testing.assert_allclose(np.asarray(sl(x, ExecutionConfig(impl=impl))),
+        np.testing.assert_allclose(np.asarray(sl(x, EC(impl=impl))),
                                    np.asarray(flat), **TOL)
-    g_b = jax.grad(lambda xx: jnp.sum(sl(xx, ExecutionConfig(impl="xla")) ** 2))(x)
+    g_b = jax.grad(lambda xx: jnp.sum(sl(xx, EC(impl="xla")) ** 2))(x)
     monkeypatch.setattr(S, "BATCHED_MIN_TOKENS", 128)
-    g_f = jax.grad(lambda xx: jnp.sum(sl(xx, ExecutionConfig(impl="xla")) ** 2))(x)
+    g_f = jax.grad(lambda xx: jnp.sum(sl(xx, EC(impl="xla")) ** 2))(x)
     np.testing.assert_allclose(np.asarray(g_b), np.asarray(g_f), **TOL)
 
 
@@ -352,9 +355,9 @@ def test_sparse_linear_vmap():
     w = jnp.asarray(rng.standard_normal((16, 24)), jnp.float32)
     sl = S.SparseLinear.from_dense(w, 0.3)
     x = jnp.asarray(rng.standard_normal((4, 6, 16)), jnp.float32)
-    got = jax.vmap(lambda xi: sl(xi, ExecutionConfig(impl="pallas")))(x)
+    got = jax.vmap(lambda xi: sl(xi, EC(impl="pallas")))(x)
     np.testing.assert_allclose(np.asarray(got),
-                               np.asarray(sl(x, ExecutionConfig(impl="xla"))), **TOL)
+                               np.asarray(sl(x, EC(impl="xla"))), **TOL)
 
 
 # ----------------------------------------------------------- microbatching ---

@@ -1,6 +1,5 @@
 """CSR container: roundtrips, invariants (property-based)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -9,7 +8,7 @@ pytest.importorskip(
     "requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import CSR, from_dense, prune_to_csr, random_csr
+from repro.core import from_dense, prune_to_csr, random_csr
 from repro.core.csr import rows_from_row_ptr
 
 jax.config.update("jax_platform_name", "cpu")

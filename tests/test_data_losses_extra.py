@@ -1,7 +1,7 @@
 """Coverage extras: PackedFileSource, masked/capped chunked CE."""
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.data import DataConfig, PackedFileSource
 from repro.models.losses import chunked_cross_entropy

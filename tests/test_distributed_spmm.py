@@ -20,9 +20,9 @@ import pytest
 from repro.core import (CSR, ExecutionConfig, PlanPolicy, ShardSpec,
                         SparseMatrix, execute_plan, random_csr)
 from repro.core.csr import from_dense
+from repro.distributed.spmm import (ShardedSpmmPlan, execute_sharded,
+                                    shard_csr_by_nnz)
 from repro.engine import PlanCache
-from repro.distributed.spmm import (ShardedSpmmPlan, build_sharded_plan,
-                                    execute_sharded, shard_csr_by_nnz)
 
 NDEV = 8
 IN_CHILD = bool(os.environ.get("_REPRO_FORCED_CHILD"))

@@ -14,7 +14,7 @@ import numpy as np
 import pytest
 
 from repro import engine
-from repro.core import (CSR, ExecutionConfig, Heuristic, PlanPolicy,
+from repro.core import (ExecutionConfig, Heuristic, PlanPolicy,
                         build_plan, execute_plan, pattern_fingerprint,
                         random_csr, spmm)
 from repro.kernels import merge_spmm, ops, ref, rowsplit_spmm

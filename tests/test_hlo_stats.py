@@ -2,7 +2,6 @@
 unrolled modules (exact flop counts) and hand-built collectives."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch import hlo_stats

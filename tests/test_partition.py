@@ -1,6 +1,5 @@
 """Nonzero-split partitioning invariants (paper §4.2 Phase 1)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -10,7 +9,6 @@ pytest.importorskip(
 from hypothesis import given, settings, strategies as st
 
 from repro.core import partition_spmm, chunk_segments, random_csr
-from repro.core.csr import rows_from_row_ptr
 from repro.kernels.merge_spmm import plan_merge
 
 

@@ -3,7 +3,6 @@ no-op behaviour, elastic validation."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_smoke_config

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs import ARCHS, SHAPES, get_config, shape_cells
-from repro.launch.specs import batch_specs, cache_specs, input_specs
+from repro.launch.specs import input_specs
 
 
 @pytest.mark.parametrize("arch", ARCHS)

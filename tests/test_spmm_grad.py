@@ -18,6 +18,8 @@ from repro.core import (CSR, ExecutionConfig, PlanPolicy, build_plan,
 from repro.models.sparse import SparseLinear, prune_mlp
 from repro.runtime import steps as R
 
+EC = ExecutionConfig  # keep call sites within the line limit
+
 TOL = dict(rtol=1e-4, atol=1e-5)
 
 
@@ -45,7 +47,7 @@ def test_grad_matches_dense_oracle(method, impl):
     plan = build_plan(a, method=method)
 
     def loss(vals, bb):
-        return jnp.sum(execute_plan(plan, vals, bb, ExecutionConfig(impl=impl)) * w)
+        return jnp.sum(execute_plan(plan, vals, bb, EC(impl=impl)) * w)
 
     g_vals, g_b = jax.grad(loss, argnums=(0, 1))(a.vals, b)
     want_vals, want_b = jax.grad(_dense_loss(a, w), argnums=(0, 1))(a.vals, b)
@@ -61,7 +63,7 @@ def test_grad_through_spmm_api(method):
 
     def loss(bb):
         return jnp.sum(spmm(a, bb, PlanPolicy(method=method),
-                            ExecutionConfig(impl="xla")) * w)
+                            EC(impl="xla")) * w)
 
     g = jax.grad(loss)(b)
     want = jax.grad(lambda bb: _dense_loss(a, w)(a.vals, bb))(b)
@@ -76,7 +78,7 @@ def test_grad_under_jit(method):
     @jax.jit
     def grads(vals, bb):
         return jax.grad(
-            lambda v, x: jnp.sum(execute_plan(plan, v, x, ExecutionConfig(impl="xla")) * w),
+            lambda v, x: jnp.sum(execute_plan(plan, v, x, EC(impl="xla")) * w),
             argnums=(0, 1))(vals, bb)
 
     g_vals, g_b = grads(a.vals, b)
@@ -92,7 +94,7 @@ def test_grad_empty_and_degenerate_rows():
     for method in ("merge", "rowsplit"):
         plan = build_plan(a, method=method)
         g_vals = jax.grad(lambda v: jnp.sum(
-            execute_plan(plan, v, b, ExecutionConfig(impl="xla")) * w))(a.vals)
+            execute_plan(plan, v, b, EC(impl="xla")) * w))(a.vals)
         want = jax.grad(
             lambda v: _dense_loss(a, w)(v, b))(a.vals)
         np.testing.assert_allclose(np.asarray(g_vals), np.asarray(want),
@@ -105,7 +107,8 @@ def test_grad_empty_and_degenerate_rows():
 def test_sparse_linear_loss_grad():
     """jax.grad of a SparseLinear loss vs. the dense-autodiff oracle."""
     rng = np.random.default_rng(0)
-    w = jnp.asarray(rng.standard_normal((24, 32)), jnp.float32)  # (d_in, d_out)
+    # (d_in, d_out)
+    w = jnp.asarray(rng.standard_normal((24, 32)), jnp.float32)
     x = jnp.asarray(rng.standard_normal((8, 24)), jnp.float32)
     y = jnp.asarray(rng.standard_normal((8, 32)), jnp.float32)
     sl = SparseLinear.from_dense(w, 0.25)
@@ -113,10 +116,11 @@ def test_sparse_linear_loss_grad():
     def loss_sparse(vals):
         layer = dataclasses.replace(
             sl, weight=dataclasses.replace(sl.weight, vals=vals))
-        return jnp.mean((layer(x, ExecutionConfig(impl="xla")) - y) ** 2)
+        return jnp.mean((layer(x, EC(impl="xla")) - y) ** 2)
 
     def loss_dense(vals):
-        wd = dataclasses.replace(sl.weight, vals=vals).to_dense()  # (d_out, d_in)
+        # (d_out, d_in)
+        wd = dataclasses.replace(sl.weight, vals=vals).to_dense()
         return jnp.mean((x @ wd.T - y) ** 2)
 
     g = jax.grad(loss_sparse)(sl.weight.vals)

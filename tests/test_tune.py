@@ -8,7 +8,6 @@ benchmarking.  The recorded oracles are chosen to contradict the analytic
 heuristic where possible, so the assertion can only pass if the DB (not
 the fallback) drives the decision.
 """
-import dataclasses
 import json
 
 import numpy as np
@@ -19,8 +18,7 @@ from repro.core import Heuristic, PlanPolicy, build_plan, calibrate
 from repro.core.plan import pattern_fingerprint
 from repro.engine.cache import PlanCache
 from repro.matrices import compute_stats, get_suite, power_law, uniform
-from repro.tune import (SCHEMA_VERSION, TuneDB, TuneRecord,
-                        class_signature, tune_suite)
+from repro.tune import SCHEMA_VERSION, TuneDB, TuneRecord, tune_suite
 
 
 def _rec(method, merge_us, rowsplit_us, a, **kw):
