@@ -3,14 +3,14 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: ci test test-sharded smoke examples-smoke bench tune tune-smoke \
 	bench-batched-smoke bench-sharded-smoke bench-epilogue-smoke \
-	bench-obs-smoke trace-smoke lint analyze
+	bench-obs-smoke trace-smoke lint analyze traffic-baseline
 
 # examples-smoke subsumes the quickstart smoke (runs it in full), so ci
 # doesn't run it twice.
 ci: test examples-smoke
 
 # Style lint: ruff (E/F/W/I/UP per pyproject.toml) when installed, plus
-# the repo-specific AST rules (RL001-RL004).  ruff is a dev dependency
+# the repo-specific AST rules (RL001-RL006).  ruff is a dev dependency
 # (requirements-dev.txt); a container without it still runs the RL leg.
 lint:
 	@if $(PY) -m ruff --version >/dev/null 2>&1; then \
@@ -21,12 +21,22 @@ lint:
 	$(PY) -m repro.analysis lint
 
 # Static verification gate (CI-required): repo lint + plan-invariant
-# linter over the mini suite + registry-driven kernel audit.  The audit
-# report lands in artifacts/ and is uploaded by CI.
+# linter over the mini suite + registry-driven kernel audit + the
+# bytes-moved/coalescing traffic gate diffed against the committed
+# baseline (artifacts/traffic_baseline.json).  Reports land in
+# artifacts/ and are uploaded by CI.
 analyze: lint
 	mkdir -p artifacts
 	$(PY) -m repro.analysis planlint --suite mini
 	$(PY) -m repro.analysis audit --out artifacts/kernel_audit.txt
+	$(PY) -m repro.analysis traffic --check \
+	    --json artifacts/traffic_report.json
+
+# Regenerate the static bytes-moved baseline after an *intentional*
+# traffic change (new kernel, tiling change); commit the diff with the
+# change that caused it.
+traffic-baseline:
+	$(PY) -m repro.analysis traffic --update
 
 # Tier-1 verify (ROADMAP.md).  DeprecationWarnings are errors: first-party
 # code and tests must use the v1 policy=/exec= spellings (the shim tests

@@ -14,7 +14,7 @@ a program boundary per primitive.  Three timings per (matrix × dtype):
   ``Epilogue(bias=True, activation="gelu")``: the tail is applied at the
   accumulator flush inside the same program and the activated output is
   written once.  ``derived`` reports unfused/fused next to the
-  bytes-moved ceiling from ``benchmarks.roofline.fused_epilogue_ceiling``
+  bytes-moved ceiling from ``repro.obs.roofline.fused_epilogue_ceiling``
   (a bandwidth-bound bound: CPU caches soften the round-trip it counts,
   dispatch savings add back),
 * ``block``   — both steps inside *one* jit, unfused at the source level:
@@ -45,8 +45,8 @@ import jax.numpy as jnp
 
 from repro.core import Epilogue, ExecutionConfig, build_plan, execute_plan
 from repro.matrices import get_suite
+from repro.obs.roofline import fused_epilogue_ceiling
 from .common import make_matrix, timeit
-from .roofline import fused_epilogue_ceiling
 
 N = 64
 EP = Epilogue(bias=True, activation="gelu")

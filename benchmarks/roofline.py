@@ -5,10 +5,10 @@ from the dry-run's compiled artifacts.
     memory     = HLO_HBM_bytes_per_device        / HBM_bw          [819e9]
     collective = collective_wire_bytes_per_device / link_bw        [50e9]
 
-FLOPs/bytes come from the trip-count-scaled HLO parse (launch/hlo_stats —
-``cost_analysis`` counts while bodies once and is useless for scanned
-graphs; the parse is validated against unrolled modules in
-tests/test_hlo_stats.py).  The dominant term is the bottleneck; the
+FLOPs/bytes come from the trip-count-scaled HLO parse
+(``repro.analysis.hlo`` — ``cost_analysis`` counts while bodies once and
+is useless for scanned graphs; the parse is validated against unrolled
+modules in tests/test_hlo_stats.py).  The dominant term is the bottleneck; the
 "useful" ratio MODEL_FLOPS / (HLO_FLOPs × chips) catches remat/padding/
 overcompute waste.
 
@@ -111,10 +111,11 @@ def table(recs, md=False):
 
 # --- SpMM traffic model (moved to repro.obs.roofline in the obs PR) -------
 #
-# The compulsory-bytes model now lives with the live roofline accountant
-# so the engine can report achieved-bandwidth-vs-roof at run time;
-# re-exported here for the benchmarks that import it
-# (bench_epilogue.fused_epilogue_ceiling and callers of spmm_min_bytes).
+# DEPRECATED re-export, kept only so third-party scripts keep running:
+# the compulsory-bytes model lives in ``repro.obs.roofline`` (with the
+# live roofline accountant).  First-party code must import from there —
+# repo lint rule RL005 rejects new imports of this shim, and the
+# re-export will be dropped once external callers have migrated.
 
 from repro.obs.roofline import (epilogue_tail_bytes, fused_epilogue_ceiling,
                                 spmm_min_bytes)  # noqa: F401,E402

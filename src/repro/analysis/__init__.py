@@ -11,7 +11,14 @@ Three legs behind one CLI (``python -m repro.analysis``):
   the Pallas lowerings (VMEM budget, index-map bounds, single-writer
   flush, accumulator dtype) without executing a kernel.
 * :mod:`repro.analysis.lint` — AST rules for repo-wide call-site
-  discipline (RL001–RL004).
+  discipline (RL001–RL006).
+* :mod:`repro.analysis.traffic` — static bytes-moved analyzer over
+  every method × impl × dtype/epilogue variant × {fwd, bwd}, with the
+  committed-baseline regression gate (``traffic --check``).
+* :mod:`repro.analysis.access` — machine-checked coalescing: every
+  BlockSpec index map proven unit-stride/monotone over its full grid.
+* :mod:`repro.analysis.hlo` — the post-optimization HLO parser the
+  traffic analyzer and ``launch.dryrun`` share.
 
 This package is imported at load time by ``repro.core.plan`` (for the
 ``_flags`` gate), so the top level stays import-light: the heavy legs
@@ -31,9 +38,12 @@ __all__ = [
     "planlint",
     "kernel_audit",
     "lint",
+    "traffic",
+    "access",
+    "hlo",
 ]
 
-_LAZY = ("planlint", "kernel_audit", "lint")
+_LAZY = ("planlint", "kernel_audit", "lint", "traffic", "access", "hlo")
 
 
 def __getattr__(name):

@@ -1,0 +1,220 @@
+"""Machine-checked coalescing: paper principle (ii) as a static proof.
+
+The paper's second design principle is coalesced, streaming access: the
+minor (lane) dimension of every operand tile must be contiguous and
+advance with unit stride as the grid walks, and the k-tile stream must
+advance monotonically so the B panel is read as a forward stream, never
+re-wound mid-pass.  The kernels encode this in their BlockSpec index
+maps; this module *proves* it by enumerating every registered launch
+model (``MethodSpec.traffic`` → ``repro.kernels.introspect``) over its
+full grid:
+
+* **T110** — a minor-dimension block-index delta outside ``{0, +1}``
+  along some grid axis: the lane dimension strides or rewinds, breaking
+  coalescing (e.g. a transposed B index map).
+* **T120** — a non-minor delta outside ``{0, +1}``: a k-tile or row-tile
+  stream that skips or rewinds (the merge ``tile[c]`` stream and the
+  ``kk`` axis must both be monotone, one step at a time).
+* **T130/T131** — the rowgroup permutation invariants: ``inv_pos`` must
+  be a permutation of the rows, and within each length bucket the
+  source rows must stay in original (ascending) order — the stable-sort
+  guarantee that keeps per-group gathers themselves streaming.
+* **T101/T102** — bidirectional coverage (the K001/K002 idiom): a
+  kernel-defining module in ``repro.kernels`` that no ``traffic`` hook
+  or :data:`EXTRA_KERNELS` entry models is T101; a stale
+  ``EXTRA_KERNELS`` entry naming a module with no kernel is T102.
+
+``EXTRA_KERNELS`` covers launches outside the per-method registry —
+today the backward SDDMM (``kernels.sddmm``), which no forward
+``MethodSpec`` dispatches.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from .diagnostics import Diagnostic
+
+
+def _sddmm_models(plan, n, batch):
+    from repro.kernels import sddmm as _sddmm
+    meta = plan.meta
+    return _sddmm.launch_models(nnz_pad=meta.nnz_pad, m=meta.m,
+                                k=meta.k, n=n, batch=batch)
+
+
+def _flash_models(plan, n, batch):
+    from repro.kernels import flash_attention as _fa
+    # Representative serving shape: 2 batch × 2 heads, 2×2 q/kv blocks.
+    return _fa.launch_models(bh=2 * batch, s=256, dh=128)
+
+
+def _moe_models(plan, n, batch):
+    from repro.kernels import moe_gemm as _moe
+    # 4 experts, one 64-token block each (dense routing: the be stream
+    # advances one expert at a time, the case the checker proves).
+    be = np.arange(4, dtype=np.int32)
+    return _moe.launch_models(be, tokens=256, d_in=1024, d_out=256,
+                              n_experts=4)
+
+
+#: kernels with no MethodSpec of their own: name of the defining module
+#: in ``repro.kernels`` -> builder(plan, n, batch) -> [KernelLaunch].
+EXTRA_KERNELS = {
+    "sddmm": _sddmm_models,
+    "flash_attention": _flash_models,
+    "moe_gemm": _moe_models,
+}
+
+
+def check_launch(model, *, where: str = "") -> list[Diagnostic]:
+    """Enumerate per-axis block-index deltas of every in/out block.
+
+    For each grid axis ``a`` and point ``p`` the delta is
+    ``index_map(p + e_a) - index_map(p)`` componentwise; the minor
+    (last) component must stay in ``{0, +1}`` (T110) and every other
+    component too (T120).  One diagnostic per (block, axis) — the first
+    violating point is named.
+    """
+    diags = []
+    label = f"{where}:{model.label}" if where else model.label
+    for blk in model.blocks:
+        if blk.index_map is None or blk.kind not in ("in", "out"):
+            continue
+        for axis in range(len(model.grid)):
+            if model.grid[axis] < 2:
+                continue
+            hit = False
+            for point in np.ndindex(*model.grid):
+                if hit or point[axis] + 1 >= model.grid[axis]:
+                    continue
+                nxt = list(point)
+                nxt[axis] += 1
+                i0 = tuple(int(x) for x in blk.index_map(*point))
+                i1 = tuple(int(x) for x in blk.index_map(*nxt))
+                delta = tuple(b - a for a, b in zip(i0, i1))
+                if delta[-1] not in (0, 1):
+                    hit = True
+                    diags.append(Diagnostic(
+                        "T110", f"{label}:{blk.name}",
+                        f"minor-dim block index steps by {delta[-1]} "
+                        f"along grid axis {axis} at {tuple(point)} — "
+                        "the lane dimension must advance contiguously "
+                        "(unit stride) or hold"))
+                elif any(d not in (0, 1) for d in delta[:-1]):
+                    hit = True
+                    diags.append(Diagnostic(
+                        "T120", f"{label}:{blk.name}",
+                        f"non-minor block index delta {delta[:-1]} "
+                        f"along grid axis {axis} at {tuple(point)} — "
+                        "tile streams must advance monotonically, one "
+                        "step at a time (no rewinds, no skips)"))
+    return diags
+
+
+def check_rowgroup_plan(plan, *, where: str = "rowgroup") -> \
+        list[Diagnostic]:
+    """T130/T131: the un-grouping gather must be a permutation and the
+    per-group gathers must read source rows in ascending order."""
+    diags = []
+    inv = np.asarray(plan.fwd["inv_pos"])
+    m = inv.shape[0]
+    if not np.array_equal(np.sort(inv), np.arange(m)):
+        diags.append(Diagnostic(
+            "T130", f"{where}:inv_pos",
+            "inv_pos is not a permutation of the rows — the un-grouping "
+            "gather would drop or duplicate output rows"))
+        return diags
+    order = np.argsort(inv)
+    start = 0
+    for g, (m_g, _) in enumerate(plan.meta.extra):
+        rows = order[start:start + m_g]
+        start += m_g
+        if rows.size > 1 and np.any(np.diff(rows) <= 0):
+            diags.append(Diagnostic(
+                "T131", f"{where}[g{g}]",
+                "source rows within the length bucket are not in "
+                "ascending original order — the stable-sort guarantee "
+                "behind streaming per-group gathers is broken"))
+    return diags
+
+
+def _kernel_modules() -> set[str]:
+    """Module names under ``repro.kernels`` that define a Pallas kernel
+    (contain a ``pl.pallas_call``)."""
+    import repro.kernels as kpkg
+    root = os.path.dirname(kpkg.__file__)
+    out = set()
+    for fname in sorted(os.listdir(root)):
+        if not fname.endswith(".py"):
+            continue
+        with open(os.path.join(root, fname), encoding="utf-8") as f:
+            if "pl.pallas_call" in f.read():
+                out.add(fname[:-3])
+    return out
+
+
+def check_coverage() -> list[Diagnostic]:
+    """T101/T102: every kernel-defining module must be modeled; every
+    :data:`EXTRA_KERNELS` entry must still name a kernel module."""
+    from repro.kernels import registry
+    diags = []
+    defined = _kernel_modules()
+    covered = set(EXTRA_KERNELS)
+    for name in registry.method_names():
+        spec = registry.get_method(name)
+        if spec.traffic is None:
+            diags.append(Diagnostic(
+                "T101", name,
+                "registered method has no MethodSpec.traffic launch "
+                "model — its access patterns are unverifiable (the "
+                "checker never skips silently)"))
+        else:
+            covered.add(spec.traffic.__module__.rsplit(".", 1)[-1])
+    for mod in sorted(defined - covered):
+        diags.append(Diagnostic(
+            "T101", f"repro.kernels.{mod}",
+            "module defines a pallas_call that no MethodSpec.traffic "
+            "hook or access.EXTRA_KERNELS entry models"))
+    for mod in sorted(set(EXTRA_KERNELS) - defined):
+        diags.append(Diagnostic(
+            "T102", f"repro.kernels.{mod}",
+            "EXTRA_KERNELS entry for a module that defines no kernel "
+            "(stale entry?)"))
+    return diags
+
+
+def check_all(*, n: int = 256, batch: int = 2, tk: int | None = 64) -> \
+        list[Diagnostic]:
+    """Run the coalescing checks over every registered method ×
+    representative variant, the extra kernels, and coverage."""
+    from repro.core.plan import build_plan
+    from repro.kernels import registry
+
+    from .kernel_audit import _representative, _variants
+
+    diags = check_coverage()
+    a = _representative()
+    merge_plan = None
+    for name in registry.method_names():
+        spec = registry.get_method(name)
+        if spec.traffic is None:
+            continue                     # already T101 via check_coverage
+        plan = build_plan(a, method=name)
+        if name == "merge":
+            merge_plan = plan
+        for var in _variants():
+            for model in spec.traffic(plan, n, batch, var, tk):
+                diags.extend(check_launch(
+                    model, where=f"{name}/{var.name}"))
+        if name == "rowgroup":
+            diags.extend(check_rowgroup_plan(plan))
+    if merge_plan is None:
+        merge_plan = build_plan(a, method="merge")
+    for kname, builder in EXTRA_KERNELS.items():
+        if kname not in _kernel_modules():
+            continue                     # already T102
+        for model in builder(merge_plan, n, batch):
+            diags.extend(check_launch(model, where=f"extra/{kname}"))
+    return diags

@@ -1,6 +1,6 @@
-"""``python -m repro.analysis {planlint,audit,lint,all}``.
+"""``python -m repro.analysis {planlint,audit,lint,traffic,all}``.
 
-One entry point for the three static-analysis legs:
+One entry point for the four static-analysis legs:
 
 * ``planlint`` — build a plan per registered method (plus row- and
   column-sharded plans) for every matrix in a suite and run the full
@@ -8,13 +8,21 @@ One entry point for the three static-analysis legs:
   kernel would read the structure.
 * ``audit``    — the registry-driven kernel audit; ``--out`` writes the
   per-method report table (the CI artifact).
-* ``lint``     — the repo-wide AST rules (RL001–RL004).
-* ``all``      — all three; exit status is non-zero iff any leg found
+* ``lint``     — the repo-wide AST rules (RL001–RL006).
+* ``traffic``  — the static bytes-moved analyzer + coalescing checker;
+  ``--check`` also diffs against the committed baseline (the CI
+  regression gate), ``--update`` regenerates it.
+* ``all``      — every leg; exit status is non-zero iff any leg found
   anything, which is the CI gate.
+
+Every subcommand takes ``--json PATH`` to write a machine-readable
+report (``{"command", "exit", "diagnostics": [{code, where, message}],
+...}``); ``all --json`` nests the per-leg payloads.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 
 from .diagnostics import format_diagnostics
@@ -30,7 +38,22 @@ def _repo_root() -> str:
     return os.getcwd()
 
 
-def run_planlint(suite: str = "mini", out=None) -> int:
+def _diag_dicts(diags):
+    return [{"code": d.code, "where": d.where, "message": d.message}
+            for d in diags]
+
+
+def _write_json(path, payload) -> None:
+    if not path:
+        return
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+
+
+def run_planlint(suite: str = "mini", out=None, *, json_path=None,
+                 payload=None) -> int:
     """Self-check: verify every (suite matrix × method × sharding) plan."""
     from repro.analysis import planlint
     from repro.core.config import PlanPolicy, ShardSpec
@@ -39,7 +62,7 @@ def run_planlint(suite: str = "mini", out=None) -> int:
     from repro.kernels import registry
     from repro.matrices.suites import get_suite
 
-    failures = 0
+    all_diags = []
     checked = 0
     for spec in get_suite(suite):
         a = spec.build()
@@ -48,7 +71,7 @@ def run_planlint(suite: str = "mini", out=None) -> int:
             diags = planlint.verify_plan(plan, a)
             checked += 1
             if diags:
-                failures += len(diags)
+                all_diags.extend(diags)
                 print(format_diagnostics(
                     diags, header=f"{spec.name} × {method}:"), file=out)
         for dim in ("rows", "cols"):
@@ -57,16 +80,23 @@ def run_planlint(suite: str = "mini", out=None) -> int:
             diags = planlint.verify_sharded_plan(plan, a)
             checked += 1
             if diags:
-                failures += len(diags)
+                all_diags.extend(diags)
                 print(format_diagnostics(
                     diags, header=f"{spec.name} × sharded/{dim}:"),
                     file=out)
     print(f"planlint: {checked} plan(s) verified on suite {suite!r}, "
-          f"{failures} finding(s)", file=out)
-    return 1 if failures else 0
+          f"{len(all_diags)} finding(s)", file=out)
+    rc = 1 if all_diags else 0
+    rec = {"command": "planlint", "exit": rc, "suite": suite,
+           "plans_checked": checked, "diagnostics": _diag_dicts(all_diags)}
+    if payload is not None:
+        payload["planlint"] = rec
+    _write_json(json_path, rec)
+    return rc
 
 
-def run_audit(report_path=None, out=None) -> int:
+def run_audit(report_path=None, out=None, *, json_path=None,
+              payload=None) -> int:
     from repro.analysis import kernel_audit
 
     rows, diags = kernel_audit.audit_all()
@@ -77,45 +107,118 @@ def run_audit(report_path=None, out=None) -> int:
         with open(report_path, "w", encoding="utf-8") as f:
             f.write(report + "\n")
         print(f"audit: report written to {report_path}", file=out)
-    return 1 if diags else 0
+    rc = 1 if diags else 0
+    rec = {"command": "audit", "exit": rc,
+           "rows": [{"method": r.method, "impl": r.impl,
+                     "variant": r.variant, "vmem_bytes": r.vmem_bytes}
+                    for r in rows],
+           "diagnostics": _diag_dicts(diags)}
+    if payload is not None:
+        payload["audit"] = rec
+    _write_json(json_path, rec)
+    return rc
 
 
-def run_repo_lint(paths=None, out=None) -> int:
+def run_repo_lint(paths=None, out=None, *, json_path=None,
+                  payload=None) -> int:
     from repro.analysis import lint
 
     diags = lint.run_lint(paths or None, repo_root=_repo_root())
     if diags:
         print(format_diagnostics(diags), file=out)
     print(f"lint: {len(diags)} finding(s)", file=out)
-    return 1 if diags else 0
+    rc = 1 if diags else 0
+    rec = {"command": "lint", "exit": rc,
+           "diagnostics": _diag_dicts(diags)}
+    if payload is not None:
+        payload["lint"] = rec
+    _write_json(json_path, rec)
+    return rc
+
+
+def run_traffic(*, check: bool = False, update: bool = False,
+                baseline_path=None, out=None, json_path=None,
+                payload=None) -> int:
+    """Bytes-moved analysis + coalescing checks (+ the baseline gate)."""
+    from repro.analysis import access, traffic
+
+    baseline_path = baseline_path or os.path.join(
+        _repo_root(), traffic.BASELINE_PATH)
+    rows, diags = traffic.analyze_all()
+    diags = list(diags) + access.check_all()
+    base_diags = []
+    if update:
+        traffic.update_baseline(rows, baseline_path)
+        print(f"traffic: baseline written to {baseline_path}", file=out)
+    elif check:
+        base_diags = traffic.check_baseline(
+            rows, traffic.load_baseline(baseline_path))
+        diags += base_diags
+    print(traffic.format_report(rows, diags), file=out)
+    rc = 1 if diags else 0
+    rec = {"command": "traffic", "exit": rc,
+           "baseline": os.path.relpath(baseline_path, _repo_root()),
+           "checked_baseline": bool(check and not update),
+           "rows": [r.to_dict() for r in rows],
+           "diagnostics": _diag_dicts(diags)}
+    if payload is not None:
+        payload["traffic"] = rec
+    _write_json(json_path, rec)
+    return rc
 
 
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="static verification: plan linter, kernel audit, "
-                    "repo lint")
+                    "repo lint, traffic analyzer")
     sub = p.add_subparsers(dest="cmd", required=True)
     pl = sub.add_parser("planlint", help="verify plans over a suite")
     pl.add_argument("--suite", default="mini")
+    pl.add_argument("--json", default=None, dest="json_path",
+                    help="write a machine-readable report to this path")
     au = sub.add_parser("audit", help="static Pallas kernel audit")
     au.add_argument("--out", default=None,
                     help="write the report table to this path")
+    au.add_argument("--json", default=None, dest="json_path")
     li = sub.add_parser("lint", help="repo-wide AST lint")
     li.add_argument("paths", nargs="*", help="files/dirs (default: src, "
                     "benchmarks, examples)")
-    al = sub.add_parser("all", help="planlint + audit + lint (CI gate)")
+    li.add_argument("--json", default=None, dest="json_path")
+    tr = sub.add_parser(
+        "traffic", help="static bytes-moved + coalescing analysis")
+    tr.add_argument("--check", action="store_true",
+                    help="also diff against the committed baseline "
+                    "(exit 1 on unexplained growth)")
+    tr.add_argument("--update", action="store_true",
+                    help="regenerate the baseline from the current tree")
+    tr.add_argument("--baseline", default=None,
+                    help="baseline path (default: "
+                    "<repo>/artifacts/traffic_baseline.json)")
+    tr.add_argument("--json", default=None, dest="json_path")
+    al = sub.add_parser("all",
+                        help="planlint + audit + lint + traffic (CI gate)")
     al.add_argument("--suite", default="mini")
     al.add_argument("--audit-out", default=None)
+    al.add_argument("--json", default=None, dest="json_path")
     args = p.parse_args(argv)
 
     if args.cmd == "planlint":
-        return run_planlint(args.suite)
+        return run_planlint(args.suite, json_path=args.json_path)
     if args.cmd == "audit":
-        return run_audit(args.out)
+        return run_audit(args.out, json_path=args.json_path)
     if args.cmd == "lint":
-        return run_repo_lint(args.paths)
-    rc = run_repo_lint(None)          # cheapest first: no jax import
-    rc = run_planlint(args.suite) or rc
-    rc = run_audit(args.audit_out) or rc
+        return run_repo_lint(args.paths, json_path=args.json_path)
+    if args.cmd == "traffic":
+        return run_traffic(check=args.check, update=args.update,
+                           baseline_path=args.baseline,
+                           json_path=args.json_path)
+    payload: dict = {}
+    rcs = [run_repo_lint(None, payload=payload)]  # cheapest: no jax
+    rcs.append(run_planlint(args.suite, payload=payload))
+    rcs.append(run_audit(args.audit_out, payload=payload))
+    rcs.append(run_traffic(check=True, payload=payload))
+    rc = max(rcs)
+    _write_json(args.json_path,
+                {"command": "all", "exit": rc, "legs": payload})
     return rc

@@ -22,12 +22,15 @@ running it* and checks, statically:
   promotion of the input dtypes (PR 6's runtime guard, proven per
   variant).
 
-The launch models live in :data:`_AUDITS`, keyed by method name.  A
-method registered in ``repro.kernels.registry`` without an entry here is
-a *hard failure* (``K001``), not a silent skip — new methods must either
-provide a model or explicitly inherit one.  :func:`audit_all` returns
-``(rows, diagnostics)``; ``rows`` is the per-launch report table that
-``make analyze`` uploads as a CI artifact.
+The launch models live with the kernels: each method's ``MethodSpec``
+supplies them through its ``traffic`` hook (``repro.kernels.introspect``
+— the same models feed ``repro.analysis.access`` and ``.traffic``), and
+:data:`_AUDITS` is an override table (``register_audit``) for tests and
+out-of-tree methods.  A method registered in ``repro.kernels.registry``
+with neither is a *hard failure* (``K001``), not a silent skip — new
+methods must either provide a model or explicitly inherit one.
+:func:`audit_all` returns ``(rows, diagnostics)``; ``rows`` is the
+per-launch report table that ``make analyze`` uploads as a CI artifact.
 """
 from __future__ import annotations
 
@@ -36,6 +39,8 @@ from collections import Counter as _Counter
 from collections.abc import Callable
 
 import numpy as np
+
+from repro.kernels.introspect import KernelBlock, KernelLaunch
 
 from .diagnostics import Diagnostic
 
@@ -70,183 +75,23 @@ def _variants():
     )
 
 
-@dataclasses.dataclass(frozen=True)
-class Block:
-    """One BlockSpec of a modeled launch (or a scratch/scalar operand)."""
-
-    name: str
-    shape: tuple                 # block shape
-    dtype: str
-    index_map: Callable | None   # grid point -> block index, or None
-    array_shape: tuple           # full operand shape
-    kind: str                    # "in" | "out" | "scratch" | "scalar"
-
-    def nbytes(self) -> int:
-        import jax.numpy as jnp
-        n = int(np.prod(self.shape)) if self.shape else 1
-        return n * jnp.dtype(self.dtype).itemsize
-
-
-@dataclasses.dataclass(frozen=True)
-class LaunchModel:
-    """A statically checkable model of one ``pallas_call``."""
-
-    label: str
-    grid: tuple
-    blocks: tuple                # Block, ... (includes the out block)
-    flush: Callable              # grid point -> bool (writes out block?)
-    out: Block
-
-    def vmem_bytes(self) -> int:
-        """Modeled VMEM residency: in/out blocks double-buffered (the
-        Mosaic DMA pipeline), scratch and scalar-prefetch counted once."""
-        total = 0
-        for b in self.blocks:
-            total += b.nbytes() * (2 if b.kind in ("in", "out") else 1)
-        return total
-
-
-# ----------------------------------------------------------- launch models ---
-
-
-def _kdims(meta, tk):
-    from repro.kernels.merge_spmm import resolve_tk
-    return resolve_tk(meta.k, tk)
-
-
-def _vals_block(meta, dtype):
-    from repro.kernels.merge_spmm import TN
-    nv = TN * (-(-(meta.nnz_pad + 1) // TN))
-    return Block("vals", (1, nv), dtype, lambda *_: (0, 0), (1, nv), "in")
-
-
-def _merge_models(plan, n, batch, var, tk):
-    from repro.kernels.merge_spmm import TM, TN
-    meta, fwd = plan.meta, plan.fwd
-    c_n, t = fwd["cols"].shape
-    tile = np.asarray(fwd["tile"])
-    last = np.asarray(fwd["last"])
-    tk, n_k = _kdims(meta, tk)
-    m_pad = TM * (-(-meta.m // TM))
-    ep = var.epilogue
-    odt = var.out_dtype or var.b_dtype
-    blocks = [
-        Block("tile", (c_n,), "int32", None, (c_n,), "scalar"),
-        Block("first", (c_n,), "int32", None, (c_n,), "scalar"),
-        Block("last", (c_n,), "int32", None, (c_n,), "scalar"),
-        Block("cols", (1, t), "int32",
-              lambda bb, j, c, kk: (c, 0), (c_n, t), "in"),
-        Block("slot_nz", (1, t), "int32",
-              lambda bb, j, c, kk: (c, 0), (c_n, t), "in"),
-        Block("lrow", (1, t), "int32",
-              lambda bb, j, c, kk: (c, 0), (c_n, t), "in"),
-        _vals_block(meta, var.vals_dtype),
-        Block("b", (1, tk, TN), var.b_dtype,
-              lambda bb, j, c, kk: (bb, kk, j),
-              (batch, n_k * tk, n), "in"),
-    ]
-    if ep is not None and ep.bias:
-        blocks.append(Block(
-            "bias", (1, TM), var.b_dtype,
-            lambda bb, j, c, kk: (tile[c], 0), (m_pad // TM, TM), "in"))
-    if ep is not None and ep.residual:
-        blocks.append(Block(
-            "residual", (1, TM, TN), var.b_dtype,
-            lambda bb, j, c, kk: (bb, tile[c], j),
-            (batch, m_pad, n), "in"))
-    out = Block("out", (1, TM, TN), odt,
-                lambda bb, j, c, kk: (bb, tile[c], j),
-                (batch, m_pad, n), "out")
-    blocks += [out, Block("acc", (TM, TN), var.acc_dtype, None,
-                          (TM, TN), "scratch")]
-    return [LaunchModel(
-        label="merge", grid=(batch, n // TN, c_n, n_k),
-        blocks=tuple(blocks),
-        flush=lambda bb, j, c, kk: bool(last[c] == 1) and kk == n_k - 1,
-        out=out)]
-
-
-def _ell_model(label, meta, slot_shape, tl, n, batch, var, tk, *,
-               with_bias, with_residual, out_dtype):
-    """One row-split-kernel launch over an (m_pad, L) ELL block — shared
-    by the rowsplit method and rowgroup's per-group launches."""
-    from repro.kernels.rowsplit_spmm import TM, TN
-    m_pad, length = slot_shape
-    n_l = length // tl
-    tk, n_k = _kdims(meta, tk)
-    blocks = [
-        Block("cols", (TM, tl), "int32",
-              lambda bb, i, j, ll, kk: (i, ll), (m_pad, length), "in"),
-        Block("slot_nz", (TM, tl), "int32",
-              lambda bb, i, j, ll, kk: (i, ll), (m_pad, length), "in"),
-        _vals_block(meta, var.vals_dtype),
-        Block("b", (1, tk, TN), var.b_dtype,
-              lambda bb, i, j, ll, kk: (bb, kk, j),
-              (batch, n_k * tk, n), "in"),
-    ]
-    if with_bias:
-        blocks.append(Block(
-            "bias", (1, TM), var.b_dtype,
-            lambda bb, i, j, ll, kk: (i, 0), (m_pad // TM, TM), "in"))
-    if with_residual:
-        blocks.append(Block(
-            "residual", (1, TM, TN), var.b_dtype,
-            lambda bb, i, j, ll, kk: (bb, i, j),
-            (batch, m_pad, n), "in"))
-    out = Block("out", (1, TM, TN), out_dtype,
-                lambda bb, i, j, ll, kk: (bb, i, j),
-                (batch, m_pad, n), "out")
-    blocks += [out, Block("acc", (TM, TN), var.acc_dtype, None,
-                          (TM, TN), "scratch")]
-    return LaunchModel(
-        label=label,
-        grid=(batch, m_pad // TM, n // TN, n_l, n_k),
-        blocks=tuple(blocks),
-        flush=lambda bb, i, j, ll, kk: ll == n_l - 1 and kk == n_k - 1,
-        out=out)
-
-
-def _rowsplit_models(plan, n, batch, var, tk):
-    ep = var.epilogue
-    return [_ell_model(
-        "rowsplit", plan.meta, tuple(plan.fwd["slot_nz"].shape),
-        plan.meta.tl, n, batch, var, tk,
-        with_bias=ep is not None and ep.bias,
-        with_residual=ep is not None and ep.residual,
-        out_dtype=var.out_dtype or var.b_dtype)]
-
-
-def _rowgroup_models(plan, n, batch, var, tk):
-    # One row-split launch per length bucket.  The residual never fuses
-    # into the groups (it applies after the un-grouping gather) and a
-    # flagged residual forces the groups to flush in acc precision
-    # (rowgroup_execute_parts defers the single out cast past the add).
-    ep = var.epilogue
-    residual = ep is not None and ep.residual
-    odt = var.acc_dtype if residual else (var.out_dtype or var.b_dtype)
-    models = []
-    for g, gs in enumerate(plan.fwd["groups"]):
-        models.append(_ell_model(
-            f"rowgroup[g{g}]", plan.meta, tuple(gs["slot_nz"].shape),
-            plan.meta.tl, n, batch, var, tk,
-            with_bias=ep is not None and ep.bias,
-            with_residual=False, out_dtype=odt))
-    return models
+# The model classes live next to the kernels (repro.kernels.introspect);
+# these aliases keep the audit's public vocabulary and existing callers.
+Block = KernelBlock
+LaunchModel = KernelLaunch
 
 
 #: method name -> model builder(plan, n, batch, variant, tk) ->
-#: [LaunchModel].  Every registered MethodSpec MUST have an entry —
-#: audit_all fails loudly (K001) otherwise.
-_AUDITS: dict[str, Callable] = {
-    "merge": _merge_models,
-    "rowsplit": _rowsplit_models,
-    "rowgroup": _rowgroup_models,
-}
+#: [LaunchModel] — *overrides* for the registry's ``MethodSpec.traffic``
+#: hook (tests, out-of-tree methods).  Built-in methods ship their
+#: models on the spec itself; a method with neither is K001.
+_AUDITS: dict[str, Callable] = {}
 
 
 def register_audit(name: str, models: Callable, *,
                    override: bool = False) -> None:
-    """Provide launch models for a registered method (see ``_AUDITS``)."""
+    """Override the launch models for a registered method (takes
+    precedence over its ``MethodSpec.traffic`` hook)."""
     if name in _AUDITS and not override:
         raise ValueError(f"audit for method {name!r} already registered")
     _AUDITS[name] = models
@@ -391,14 +236,15 @@ def audit_method(name: str, *, n: int = 256, batch: int = 2,
     from repro.kernels import registry
 
     spec = registry.get_method(name)
-    models_fn = _AUDITS.get(name)
+    models_fn = _AUDITS.get(name, spec.traffic)
     rows, diags = [], []
     if models_fn is None:
         diags.append(Diagnostic(
             "K001", name,
-            "registered method has no kernel-audit launch model — add "
-            "one via repro.analysis.kernel_audit.register_audit (the "
-            "audit never skips silently)"))
+            "registered method has no static launch model — set the "
+            "MethodSpec.traffic hook or override via "
+            "repro.analysis.kernel_audit.register_audit (the audit "
+            "never skips silently)"))
         return rows, diags
     a = _representative()
     plan = build_plan(a, method=name)
@@ -510,9 +356,9 @@ def scale_rows(*, k: int = 29568) -> list[str]:
 def audit_all(*, n: int = 256, batch: int = 2, tk: int | None = 64):
     """Audit every registered method; returns ``(rows, diagnostics)``.
 
-    Coverage is bidirectional and loud: a registered method without an
-    ``_AUDITS`` model is K001; a stale ``_AUDITS`` entry naming an
-    unregistered method is K002.
+    Coverage is bidirectional and loud: a registered method with neither
+    a ``MethodSpec.traffic`` hook nor an ``_AUDITS`` override is K001; a
+    stale ``_AUDITS`` override naming an unregistered method is K002.
     """
     from repro.kernels import registry
     rows, diags = [], []

@@ -21,6 +21,14 @@ Rules (suppress a line with ``# noqa: RLxxx`` or a bare ``# noqa``):
 * **RL004** — every ``benchmarks/bench_*.py`` on disk is referenced in
   ``benchmarks/run.py::_mods`` (PR 7's ``check_registration``, proven
   statically so the gap is caught before any benchmark imports jax).
+* **RL005** — no new imports of the deprecated ``benchmarks.roofline``
+  re-export shim: the roofline model lives in ``repro.obs.roofline``
+  (the shim file itself is exempt; it stays only so external scripts
+  keep importing).
+* **RL006** — the Makefile keeps the analysis gates wired: the
+  ``analyze`` recipe must run the traffic gate (``traffic --check``)
+  and a ``traffic-baseline`` regeneration target must exist, so the
+  bytes-moved baseline cannot silently drop out of CI.
 
 ``run_lint(paths)`` returns ``Diagnostic`` rows with ``file:line``
 locations; the CLI (``python -m repro.analysis lint``) exits non-zero on
@@ -54,7 +62,7 @@ LEGACY_KWARGS = {
 #: the complete MethodSpec hook set (kernels/registry.py) — RL003.
 METHODSPEC_FIELDS = {
     "name", "description", "build_structure", "execute", "inline",
-    "resolve_params", "tune_candidates", "heuristic_rank",
+    "resolve_params", "tune_candidates", "heuristic_rank", "traffic",
 }
 
 _NOQA_RE = re.compile(r"#\s*noqa(?::\s*(?P<codes>[A-Z0-9, ]+))?",
@@ -193,6 +201,54 @@ def _check_methodspec(tree, path: str, lines, diags: list) -> None:
                 "is fine) so tuner/heuristic/audit coverage is total"))
 
 
+def _check_roofline_shim(tree, path: str, lines, diags: list) -> None:
+    norm = path.replace(os.sep, "/")
+    if norm.endswith("benchmarks/roofline.py"):
+        return                      # the shim itself is exempt
+    in_benchmarks = "benchmarks/" in norm
+    for node in ast.walk(tree):
+        hit = None
+        if isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            if mod == "benchmarks.roofline" or mod.endswith(
+                    ".roofline") and "benchmarks" in mod:
+                hit = mod
+            elif in_benchmarks and node.level == 1 and mod == "roofline":
+                hit = ".roofline"
+        elif isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name == "benchmarks.roofline" or \
+                        alias.name.endswith(".roofline") and \
+                        "benchmarks" in alias.name:
+                    hit = alias.name
+        if hit is None or _suppressed(lines, node.lineno, "RL005"):
+            continue
+        diags.append(Diagnostic(
+            "RL005", f"{path}:{node.lineno}",
+            f"import of the deprecated `{hit}` re-export shim — the "
+            "roofline model lives in repro.obs.roofline"))
+
+
+def check_makefile_targets(repo_root: str, diags: list) -> None:
+    """RL006: the analysis gates must stay wired into the Makefile."""
+    makefile = os.path.join(repo_root, "Makefile")
+    if not os.path.exists(makefile):
+        return
+    with open(makefile, encoding="utf-8") as f:
+        text = f.read()
+    analyze = re.search(r"^analyze:.*\n((?:\t.*\n?)*)", text, re.M)
+    if analyze is None or "traffic --check" not in analyze.group(1):
+        diags.append(Diagnostic(
+            "RL006", f"{makefile}:1",
+            "the `analyze` recipe does not run `traffic --check` — the "
+            "bytes-moved regression gate is not in CI"))
+    if re.search(r"^traffic-baseline:", text, re.M) is None:
+        diags.append(Diagnostic(
+            "RL006", f"{makefile}:1",
+            "no `traffic-baseline` target — the committed traffic "
+            "baseline has no documented regeneration path"))
+
+
 def _bench_mentions(run_py: str) -> set[str]:
     """bench_* identifiers referenced inside run.py::_mods."""
     with open(run_py, encoding="utf-8") as f:
@@ -227,7 +283,8 @@ def check_bench_registration(bench_dir: str, diags: list) -> None:
             "does not exist"))
 
 
-def lint_file(path: str, *, rules=("RL001", "RL002", "RL003"),
+def lint_file(path: str, *,
+              rules=("RL001", "RL002", "RL003", "RL005"),
               _exempt_legacy=("tests/test_api.py",)) -> list[Diagnostic]:
     with open(path, encoding="utf-8") as f:
         src = f.read()
@@ -250,6 +307,8 @@ def lint_file(path: str, *, rules=("RL001", "RL002", "RL003"),
         _check_legacy_kwargs(tree, path, lines, diags)
     if "RL003" in rules:
         _check_methodspec(tree, path, lines, diags)
+    if "RL005" in rules:
+        _check_roofline_shim(tree, path, lines, diags)
     return diags
 
 
@@ -289,4 +348,6 @@ def run_lint(paths: Iterable[str] | None = None, *,
     bench_dir = os.path.join(repo_root, "benchmarks")
     if paths is None and os.path.isdir(bench_dir):
         check_bench_registration(bench_dir, diags)
+    if paths is None:
+        check_makefile_targets(repo_root, diags)
     return diags

@@ -1,0 +1,489 @@
+"""Static bytes-moved analyzer + baseline regression gate.
+
+The paper's verdict criterion is distance to the memory-bandwidth roof,
+so the quantity to protect in review is *bytes moved*.  This module
+computes, without running anything, the HBM traffic of every registered
+``MethodSpec`` × impl × dtype/epilogue variant × {fwd, bwd} on the
+audit's representative problem, and holds it against the compulsory
+floor (``repro.obs.roofline``):
+
+* ``impl="pallas"`` — the transition-counted DMA model of the kernel's
+  launch models (``MethodSpec.traffic`` → ``repro.kernels.introspect``):
+  a block fetch is counted only when its index map's value changes
+  between consecutive grid steps (Mosaic elides unchanged-index
+  copies).  The backward adds the transpose-merge dB launch (over
+  ``plan.bwd``) and the SDDMM dvals launch.
+* ``impl="xla"`` — the parsed post-optimization HLO of the jitted
+  program (``repro.analysis.hlo``), with the plan arrays passed as
+  parameters so plan reads are visible.  The backward is the full
+  fwd+vjp program.
+
+Diagnostics (all bidirectionally loud, like the K-codes):
+
+* **T010** — static bytes exceed the compulsory floor by more than the
+  per-(method, impl, pass) tolerance calibrated at HEAD: a hidden copy,
+  a widened materialization, or a tiling regression.
+* **T011** — more ``transpose`` ops in the traced program than the
+  calibrated allowance: an unexpected layout flip.
+* **T012** — more floating-widening ``convert_element_type`` bytes than
+  the allowance: a silent bf16→f32 materialization at HBM level
+  (in-kernel VMEM converts inside ``pallas_call`` are free and not
+  counted).
+* **T020/T021/T022** — the baseline gate: current bytes grew beyond the
+  committed ``artifacts/traffic_baseline.json`` (+2% slack), a variant
+  is missing from the baseline (or the backend has none), or the
+  baseline carries a stale variant.
+
+``python -m repro.analysis traffic --check`` runs the gate in CI;
+``make traffic-baseline`` regenerates the baseline after an intentional
+traffic change.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import types
+
+from .diagnostics import Diagnostic
+
+SCHEMA_VERSION = 1
+BASELINE_PATH = os.path.join("artifacts", "traffic_baseline.json")
+IMPLS = ("pallas", "xla")
+PASSES = ("fwd", "bwd")
+#: baseline growth slack (T020): fractional headroom for harmless
+#: lowering jitter before a growth is a finding.
+BASELINE_SLACK = 0.02
+
+
+def _variants():
+    """The full dtype × epilogue grid the analyzer sweeps (a superset of
+    the kernel audit's two corners)."""
+    from repro.core.epilogue import Epilogue
+
+    from .kernel_audit import Variant
+    epi = Epilogue(bias=True, activation="gelu", residual=True)
+    return (
+        Variant("f32", "float32", "float32", "float32", None, None),
+        Variant("f32+epi", "float32", "float32", "float32", None, epi),
+        Variant("bf16_acc32", "bfloat16", "bfloat16", "float32",
+                "bfloat16", None),
+        Variant("bf16_acc32+epi", "bfloat16", "bfloat16", "float32",
+                "bfloat16", epi),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficRow:
+    """One analyzed program: method × impl × variant × pass."""
+
+    method: str
+    impl: str
+    variant: str
+    pass_: str                  # "fwd" | "bwd"
+    bytes: int
+    min_bytes: int
+    transposes: int
+    widen_bytes: int
+
+    @property
+    def key(self) -> str:
+        return f"{self.method}/{self.impl}/{self.variant}/{self.pass_}"
+
+    @property
+    def ratio(self) -> float:
+        return self.bytes / self.min_bytes if self.min_bytes else 0.0
+
+    def to_dict(self) -> dict:
+        return {"method": self.method, "impl": self.impl,
+                "variant": self.variant, "pass": self.pass_,
+                "bytes": self.bytes, "min_bytes": self.min_bytes,
+                "transposes": self.transposes,
+                "widen_bytes": self.widen_bytes}
+
+
+# ------------------------------------------------------------ calibration ---
+
+# Per-(method, impl, pass) ceilings on bytes/min_bytes, calibrated at
+# HEAD on the fixed representative problem (kernel_audit's
+# _representative: PRNGKey(0), m=48, k=192, nnz_per_row=(1, 23),
+# n=256, batch=2, tk=64): the worst variant's ratio with ~25% headroom.
+# The merge kernel re-streams the B panel once per (chunk, k-tile)
+# pair, so its pallas DMA bytes sit well above the compulsory floor by
+# design — the tolerance pins today's re-streaming factor so any
+# *further* growth (an extra copy, a lost block-index elision) still
+# fires.  The XLA bwd numbers are dominated by the parser's
+# trip-count-scaled accounting of the ref merge's chunk scan (the
+# carried state is re-read every trip), hence the large pinned ratios
+# there; the 2%-slack baseline gate (T020) is the precision instrument
+# on top of this structural floor.
+_TOLERANCE = {
+    ("merge", "pallas", "fwd"): 44.0,
+    ("merge", "pallas", "bwd"): 18.0,
+    ("merge", "xla", "fwd"): 5900.0,
+    ("merge", "xla", "bwd"): 5600.0,
+    ("rowsplit", "pallas", "fwd"): 13.0,
+    ("rowsplit", "pallas", "bwd"): 7.0,
+    ("rowsplit", "xla", "fwd"): 41.0,
+    ("rowsplit", "xla", "bwd"): 4200.0,
+    ("rowgroup", "pallas", "fwd"): 12.0,
+    ("rowgroup", "pallas", "bwd"): 7.0,
+    ("rowgroup", "xla", "fwd"): 59.0,
+    ("rowgroup", "xla", "bwd"): 4200.0,
+}
+_DEFAULT_TOLERANCE = 6.0
+
+# transpose-op allowances per (method, impl, pass): zero everywhere at
+# HEAD — even the dB path reaches the CSC view through the precomputed
+# plan.bwd structure, never a runtime transpose.  Any transpose is T011.
+_TRANSPOSE_ALLOW = {}
+_DEFAULT_TRANSPOSE = 0
+
+# floating-widening convert bytes per (method, impl, pass): exact HEAD
+# maxima over the variants (widen bytes are deterministic, so no
+# headroom).  Every bwd carries the dc.astype(f32) cotangent cast
+# (batch*m*n*4 = 98,304 here; +residual cotangent with the epilogue);
+# the XLA ref casts gathered operands to the accumulator dtype, so
+# bf16 xla variants carry real widen bytes; rowgroup's fused-epilogue
+# fwd un-groups in f32 before the output cast.
+_WIDEN_ALLOW = {
+    ("merge", "pallas", "fwd"): 0,
+    ("merge", "pallas", "bwd"): 196_608,
+    ("merge", "xla", "fwd"): 248_768,
+    ("merge", "xla", "bwd"): 1_013_568,
+    ("rowsplit", "pallas", "fwd"): 0,
+    ("rowsplit", "pallas", "bwd"): 196_608,
+    ("rowsplit", "xla", "fwd"): 252_096,
+    ("rowsplit", "xla", "bwd"): 1_016_896,
+    ("rowgroup", "pallas", "fwd"): 98_304,
+    ("rowgroup", "pallas", "bwd"): 196_608,
+    ("rowgroup", "xla", "fwd"): 1_283_776,
+    ("rowgroup", "xla", "bwd"): 1_999_424,
+}
+_DEFAULT_WIDEN = 0
+
+
+# -------------------------------------------------------- program tracing ---
+
+
+def _operands(plan, var, n, batch):
+    import jax.numpy as jnp
+    meta = plan.meta
+    ep = var.epilogue
+    vals = jnp.zeros((meta.nnz_pad,), var.vals_dtype)
+    b = jnp.zeros((batch, meta.k, n), var.b_dtype)
+    bias = jnp.zeros((meta.m,), var.b_dtype) \
+        if ep is not None and ep.bias else None
+    residual = jnp.zeros((batch, meta.m, n), var.b_dtype) \
+        if ep is not None and ep.residual else None
+    return vals, b, bias, residual
+
+
+def _make_program(plan, var, impl, pass_, n, batch, tk):
+    """The traced program of one row: ``fn(*args)`` with the plan arrays
+    as pytree-leaf parameters (so plan reads are HLO parameters, not
+    baked-in constants) — fwd executes the plan, bwd is fwd + the full
+    custom-VJP pullback over every differentiable operand."""
+    import jax
+
+    from repro.core.config import ExecutionConfig
+    from repro.core.spmm import execute_plan
+
+    cfg = ExecutionConfig(impl=impl, interpret=True, tk=tk,
+                          epilogue=var.epilogue, acc_dtype=var.acc_dtype,
+                          out_dtype=var.out_dtype)
+    leaves, treedef = jax.tree.flatten(plan)
+    vals, b, bias, residual = _operands(plan, var, n, batch)
+    has_bias = bias is not None
+    has_res = residual is not None
+    prims = tuple(x for x in (vals, b, bias, residual) if x is not None)
+
+    def call(p, prims2):
+        it = iter(prims2)
+        v, bb = next(it), next(it)
+        bi = next(it) if has_bias else None
+        r = next(it) if has_res else None
+        return execute_plan(p, v, bb, cfg, bias=bi, residual=r)
+
+    if pass_ == "fwd":
+        def fn(leaves, *prims2):
+            p = jax.tree.unflatten(treedef, leaves)
+            return call(p, prims2)
+        return fn, (leaves, *prims)
+
+    out = jax.eval_shape(lambda *pr: call(plan, pr), *prims)
+    dc = jax.numpy.zeros(out.shape, out.dtype)
+
+    def fn(leaves, dc, *prims2):
+        p = jax.tree.unflatten(treedef, leaves)
+        _, vjp = jax.vjp(lambda *pr: call(p, pr), *prims2)
+        return vjp(dc)
+    return fn, (leaves, dc, *prims)
+
+
+def _subjaxprs(v):
+    from .kernel_audit import _subjaxprs as sub
+    return sub(v)
+
+
+def _jaxpr_stats(jaxpr):
+    """(transpose count, floating-widening convert bytes) of the outer
+    graph — recursion stops at ``pallas_call`` (in-kernel VMEM converts
+    never touch HBM)."""
+    import jax.numpy as jnp
+    import numpy as np
+    transposes = 0
+    widen = 0
+
+    def visit(jx):
+        nonlocal transposes, widen
+        for eqn in jx.eqns:
+            name = eqn.primitive.name
+            if name == "transpose":
+                transposes += 1
+            elif name == "convert_element_type":
+                iav = eqn.invars[0].aval
+                oav = eqn.outvars[0].aval
+                if (hasattr(iav, "dtype")
+                        and jnp.issubdtype(iav.dtype, jnp.floating)
+                        and jnp.dtype(oav.dtype).itemsize
+                        > jnp.dtype(iav.dtype).itemsize):
+                    widen += (int(np.prod(oav.shape))
+                              * jnp.dtype(oav.dtype).itemsize)
+            if name == "pallas_call":
+                continue
+            for v in eqn.params.values():
+                for sub in _subjaxprs(v):
+                    visit(sub)
+
+    visit(jaxpr)
+    return transposes, widen
+
+
+# ------------------------------------------------------------ bytes models ---
+
+
+def _pallas_bytes(spec, plan, var, pass_, n, batch, tk):
+    """Transition-counted DMA bytes of the launch models; the backward
+    adds the transpose-merge dB launch and the SDDMM dvals launch."""
+    from repro.kernels import merge_spmm as _merge
+    from repro.kernels import sddmm as _sddmm
+
+    from .kernel_audit import Variant
+
+    total = sum(m.hbm_bytes()
+                for m in spec.traffic(plan, n, batch, var, tk))
+    if pass_ == "fwd":
+        return total
+    meta = plan.meta
+    # dB = Aᵀ @ g through the transpose-merge plan: B-operand is the f32
+    # cotangent, the output flushes f32 before the cast back to B's dtype.
+    meta_t = dataclasses.replace(meta, shape=(meta.k, meta.m))
+    shim = types.SimpleNamespace(meta=meta_t, fwd=plan.bwd)
+    db_var = Variant("db", var.vals_dtype, "float32", "float32",
+                     "float32", None)
+    total += sum(m.hbm_bytes()
+                 for m in _merge.launch_models(shim, n, batch, db_var, tk))
+    total += sum(m.hbm_bytes() for m in _sddmm.launch_models(
+        nnz_pad=meta.nnz_pad, m=meta.m, k=meta.k, n=n, batch=batch,
+        dc_dtype="float32", b_dtype=var.b_dtype))
+    return total
+
+
+def _min_bytes(meta, var, pass_, n, batch):
+    from repro.obs.roofline import plan_bwd_min_bytes, plan_min_bytes
+    total = plan_min_bytes(meta, n, val_dtype=var.vals_dtype,
+                           out_dtype=var.out_dtype, batch=batch,
+                           epilogue=var.epilogue, b_dtype=var.b_dtype)
+    if pass_ == "bwd":
+        total += plan_bwd_min_bytes(meta, n, val_dtype=var.vals_dtype,
+                                    b_dtype=var.b_dtype, batch=batch)
+    return total
+
+
+# --------------------------------------------------------------- analysis ---
+
+
+def analyze_variant(spec, plan, var, impl, pass_, *, n: int = 256,
+                    batch: int = 2, tk: int | None = 64) -> TrafficRow:
+    """One row: trace the program for jaxpr stats, model its bytes."""
+    import jax
+
+    from . import hlo
+
+    fn, args = _make_program(plan, var, impl, pass_, n, batch, tk)
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    transposes, widen = _jaxpr_stats(jaxpr.jaxpr)
+    if impl == "pallas":
+        nbytes = int(_pallas_bytes(spec, plan, var, pass_, n, batch, tk))
+    else:
+        nbytes = int(hlo.parse_compiled(fn, *args)["hbm_bytes"])
+    return TrafficRow(
+        method=spec.name, impl=impl, variant=var.name, pass_=pass_,
+        bytes=nbytes,
+        min_bytes=int(_min_bytes(plan.meta, var, pass_, n, batch)),
+        transposes=transposes, widen_bytes=widen)
+
+
+def _check_row(row: TrafficRow) -> list[Diagnostic]:
+    diags = []
+    k = (row.method, row.impl, row.pass_)
+    tol = _TOLERANCE.get(k, _DEFAULT_TOLERANCE)
+    if row.min_bytes and row.bytes > row.min_bytes * tol:
+        diags.append(Diagnostic(
+            "T010", row.key,
+            f"static bytes {row.bytes:,} exceed the compulsory floor "
+            f"{row.min_bytes:,} by {row.ratio:.1f}x (tolerance {tol}x) "
+            "— hidden copy, widened materialization, or tiling "
+            "regression"))
+    allow_t = _TRANSPOSE_ALLOW.get(k, _DEFAULT_TRANSPOSE)
+    if row.transposes > allow_t:
+        diags.append(Diagnostic(
+            "T011", row.key,
+            f"{row.transposes} transpose op(s) in the traced program "
+            f"(allowance {allow_t}) — unexpected layout flip"))
+    allow_w = _WIDEN_ALLOW.get(k, _DEFAULT_WIDEN)
+    if row.widen_bytes > allow_w:
+        diags.append(Diagnostic(
+            "T012", row.key,
+            f"{row.widen_bytes:,} floating-widening convert bytes "
+            f"(allowance {allow_w:,}) — silent low-precision operand "
+            "materialized wide at HBM level"))
+    return diags
+
+
+def analyze_all(*, n: int = 256, batch: int = 2, tk: int | None = 64):
+    """Every method × impl × variant × pass on the representative
+    problem; returns ``(rows, diagnostics)``.  Methods without a
+    ``traffic`` hook are skipped here — ``access.check_coverage``
+    reports them (T101), keeping the gap loud exactly once."""
+    from repro.core.plan import build_plan
+    from repro.kernels import registry
+
+    from .kernel_audit import _representative
+
+    rows, diags = [], []
+    a = _representative()
+    for name in registry.method_names():
+        spec = registry.get_method(name)
+        if spec.traffic is None:
+            continue
+        plan = build_plan(a, method=name, with_transpose=True)
+        for var in _variants():
+            for impl in IMPLS:
+                for pass_ in PASSES:
+                    row = analyze_variant(spec, plan, var, impl, pass_,
+                                          n=n, batch=batch, tk=tk)
+                    rows.append(row)
+                    diags.extend(_check_row(row))
+    return rows, diags
+
+
+# ---------------------------------------------------------------- baseline ---
+
+
+def _backend() -> str:
+    import jax
+    return jax.default_backend()
+
+
+def load_baseline(path: str = BASELINE_PATH) -> dict:
+    if not os.path.exists(path):
+        return {"schema": SCHEMA_VERSION, "backends": {}}
+    with open(path, encoding="utf-8") as f:
+        data = json.load(f)
+    if data.get("schema") != SCHEMA_VERSION:
+        raise ValueError(
+            f"traffic baseline {path} has schema "
+            f"{data.get('schema')!r}, expected {SCHEMA_VERSION} — "
+            "regenerate with `make traffic-baseline`")
+    return data
+
+
+def update_baseline(rows, path: str = BASELINE_PATH,
+                    backend: str | None = None) -> dict:
+    """Write the current rows as this backend's baseline (other
+    backends' entries are preserved, like the TuneDB)."""
+    backend = backend or _backend()
+    data = load_baseline(path) if os.path.exists(path) else \
+        {"schema": SCHEMA_VERSION, "backends": {}}
+    data["backends"][backend] = {
+        "rows": {r.key: {"bytes": r.bytes, "min_bytes": r.min_bytes,
+                         "transposes": r.transposes,
+                         "widen_bytes": r.widen_bytes}
+                 for r in sorted(rows, key=lambda r: r.key)}}
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return data
+
+
+def check_baseline(rows, data: dict, backend: str | None = None, *,
+                   slack: float = BASELINE_SLACK) -> list[Diagnostic]:
+    """Diff current rows against the committed baseline: unexplained
+    growth is T020, coverage gaps are T021, stale entries T022."""
+    backend = backend or _backend()
+    diags = []
+    rec = data.get("backends", {}).get(backend)
+    if rec is None:
+        return [Diagnostic(
+            "T021", f"baseline[{backend}]",
+            f"no committed traffic baseline for backend {backend!r} — "
+            "run `make traffic-baseline` and commit the result")]
+    base = rec.get("rows", {})
+    seen = set()
+    for r in rows:
+        seen.add(r.key)
+        b = base.get(r.key)
+        if b is None:
+            diags.append(Diagnostic(
+                "T021", r.key,
+                "variant missing from the committed baseline — run "
+                "`make traffic-baseline` and commit the diff"))
+            continue
+        ceiling = b["bytes"] * (1.0 + slack)
+        if r.bytes > ceiling:
+            diags.append(Diagnostic(
+                "T020", r.key,
+                f"static bytes grew {b['bytes']:,} -> {r.bytes:,} "
+                f"(>{slack * 100:.0f}% slack) — if intentional, "
+                "regenerate the baseline in the same commit"))
+        if r.transposes > b.get("transposes", 0):
+            diags.append(Diagnostic(
+                "T020", r.key,
+                f"transpose count grew {b.get('transposes', 0)} -> "
+                f"{r.transposes}"))
+        if r.widen_bytes > b.get("widen_bytes", 0):
+            diags.append(Diagnostic(
+                "T020", r.key,
+                f"widening convert bytes grew "
+                f"{b.get('widen_bytes', 0):,} -> {r.widen_bytes:,}"))
+    for key in sorted(set(base) - seen):
+        diags.append(Diagnostic(
+            "T022", key,
+            "baseline entry no longer produced by the analyzer (stale "
+            "variant?) — regenerate the baseline"))
+    return diags
+
+
+# ------------------------------------------------------------------ report ---
+
+
+def format_report(rows, diags) -> str:
+    header = (f"{'method':<10} {'impl':<7} {'variant':<16} {'pass':<4} "
+              f"{'bytes':>12} {'min':>12} {'x':>6} {'tr':>3} "
+              f"{'widen':>10}")
+    lines = ["static traffic report", header, "-" * len(header)]
+    for r in rows:
+        lines.append(
+            f"{r.method:<10} {r.impl:<7} {r.variant:<16} {r.pass_:<4} "
+            f"{r.bytes:>12,} {r.min_bytes:>12,} {r.ratio:>6.1f} "
+            f"{r.transposes:>3} {r.widen_bytes:>10,}")
+    if diags:
+        lines.append("")
+        lines.append(f"{len(diags)} finding(s):")
+        lines.extend(f"  {d}" for d in diags)
+    else:
+        lines.append("no findings")
+    return "\n".join(lines)

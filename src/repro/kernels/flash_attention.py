@@ -67,6 +67,36 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                     jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
+def launch_models(*, bh: int, s: int, dh: int, bq: int = DEFAULT_BQ,
+                  bk: int = DEFAULT_BK, dtype: str = "float32"):
+    """Static model of :func:`flash_attention_pallas` (introspect.py) —
+    mirrors the BlockSpecs below for the access/traffic analyses."""
+    from .introspect import KernelBlock, KernelLaunch
+    n_q = s // bq
+    n_k = s // bk
+    blocks = [
+        KernelBlock("q", (1, bq, dh), dtype,
+                    lambda b, z, i, j: (b, i, 0), (bh, s, dh), "in"),
+        KernelBlock("k", (1, bk, dh), dtype,
+                    lambda b, z, i, j: (b, j, 0), (bh, s, dh), "in"),
+        KernelBlock("v", (1, bk, dh), dtype,
+                    lambda b, z, i, j: (b, j, 0), (bh, s, dh), "in"),
+    ]
+    out = KernelBlock("o", (1, bq, dh), dtype,
+                      lambda b, z, i, j: (b, i, 0), (bh, s, dh), "out")
+    blocks += [
+        out,
+        KernelBlock("m", (bq, 1), "float32", None, (bq, 1), "scratch"),
+        KernelBlock("l", (bq, 1), "float32", None, (bq, 1), "scratch"),
+        KernelBlock("acc", (bq, dh), "float32", None, (bq, dh),
+                    "scratch"),
+    ]
+    return [KernelLaunch(
+        label="flash_attention", grid=(bh, 1, n_q, n_k),
+        blocks=tuple(blocks),
+        flush=lambda b, z, i, j: j == n_k - 1, out=out)]
+
+
 def flash_attention_pallas(q, k, v, *, bq: int = DEFAULT_BQ,
                            bk: int = DEFAULT_BK,
                            interpret: bool = False) -> jax.Array:

@@ -44,6 +44,7 @@ import functools
 import jax
 import jax.experimental.pallas.tpu as pltpu
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core.csr import CSR, rows_from_row_ptr
@@ -314,3 +315,68 @@ def merge_spmm_pallas(plan: dict, vals: jax.Array, b: jax.Array,
         out_shape=jax.ShapeDtypeStruct((batch, m_pad, n), out_dtype),
         interpret=interpret,
     )(plan["tile"], plan["first"], plan["last"], *operands)
+
+
+# ----------------------------------------------------- static launch model ---
+
+
+def vals_launch_block(nnz_pad: int, dtype: str):
+    """The whole-block ``(1, NV)`` values operand (see ``pack_vals``)."""
+    from .introspect import KernelBlock
+    nv = TN * (-(-(nnz_pad + 1) // TN))
+    return KernelBlock("vals", (1, nv), dtype, lambda *_: (0, 0), (1, nv),
+                       "in")
+
+
+def launch_models(plan, n, batch, var, tk):
+    """Static model of ``merge_spmm_pallas``'s one launch.
+
+    Mirrors the grid/BlockSpec construction above block-for-block (a
+    drifted model fails the kernel audit's in-bounds/single-writer
+    enumeration, which evaluates these maps against the real scalar
+    streams).  ``plan`` carries ``.meta``/``.fwd``; ``var`` the dtype/
+    epilogue corner (see ``repro.kernels.introspect``).
+    """
+    from .introspect import KernelBlock, KernelLaunch
+    meta, fwd = plan.meta, plan.fwd
+    c_n, t = fwd["cols"].shape
+    tile = np.asarray(fwd["tile"])
+    last = np.asarray(fwd["last"])
+    tk, n_k = resolve_tk(meta.k, tk)
+    m_pad = TM * (-(-meta.m // TM))
+    ep = var.epilogue
+    odt = var.out_dtype or var.b_dtype
+    blocks = [
+        KernelBlock("tile", (c_n,), "int32", None, (c_n,), "scalar"),
+        KernelBlock("first", (c_n,), "int32", None, (c_n,), "scalar"),
+        KernelBlock("last", (c_n,), "int32", None, (c_n,), "scalar"),
+        KernelBlock("cols", (1, t), "int32",
+                    lambda bb, j, c, kk: (c, 0), (c_n, t), "in"),
+        KernelBlock("slot_nz", (1, t), "int32",
+                    lambda bb, j, c, kk: (c, 0), (c_n, t), "in"),
+        KernelBlock("lrow", (1, t), "int32",
+                    lambda bb, j, c, kk: (c, 0), (c_n, t), "in"),
+        vals_launch_block(meta.nnz_pad, var.vals_dtype),
+        KernelBlock("b", (1, tk, TN), var.b_dtype,
+                    lambda bb, j, c, kk: (bb, kk, j),
+                    (batch, n_k * tk, n), "in"),
+    ]
+    if ep is not None and ep.bias:
+        blocks.append(KernelBlock(
+            "bias", (1, TM), var.b_dtype,
+            lambda bb, j, c, kk: (tile[c], 0), (m_pad // TM, TM), "in"))
+    if ep is not None and ep.residual:
+        blocks.append(KernelBlock(
+            "residual", (1, TM, TN), var.b_dtype,
+            lambda bb, j, c, kk: (bb, tile[c], j),
+            (batch, m_pad, n), "in"))
+    out = KernelBlock("out", (1, TM, TN), odt,
+                      lambda bb, j, c, kk: (bb, tile[c], j),
+                      (batch, m_pad, n), "out")
+    blocks += [out, KernelBlock("acc", (TM, TN), var.acc_dtype, None,
+                                (TM, TN), "scratch")]
+    return [KernelLaunch(
+        label="merge", grid=(batch, n // TN, c_n, n_k),
+        blocks=tuple(blocks),
+        flush=lambda bb, j, c, kk: bool(last[c] == 1) and kk == n_k - 1,
+        out=out)]

@@ -52,6 +52,37 @@ def _moe_kernel(be_ref, x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def launch_models(block_expert, *, tokens: int, d_in: int, d_out: int,
+                  n_experts: int, tt: int = TT, tdn: int = TDN,
+                  tdk: int = TDK, dtype: str = "float32"):
+    """Static model of :func:`moe_group_gemm_pallas` (introspect.py) —
+    mirrors the BlockSpecs below for the access/traffic analyses.
+    ``block_expert`` is the concrete (host) block→expert stream."""
+    import numpy as np
+
+    from .introspect import KernelBlock, KernelLaunch
+    be = np.asarray(block_expert)
+    n_k = d_in // tdk
+    n_b = tokens // tt
+    blocks = [
+        KernelBlock("block_expert", (n_b,), "int32", None, (n_b,),
+                    "scalar"),
+        KernelBlock("x", (tt, tdk), dtype,
+                    lambda bi, j, kk: (bi, kk), (tokens, d_in), "in"),
+        KernelBlock("w", (1, tdk, tdn), dtype,
+                    lambda bi, j, kk: (be[bi], kk, j),
+                    (n_experts, d_in, d_out), "in"),
+    ]
+    out = KernelBlock("o", (tt, tdn), dtype,
+                      lambda bi, j, kk: (bi, j), (tokens, d_out), "out")
+    blocks += [out, KernelBlock("acc", (tt, tdn), "float32", None,
+                                (tt, tdn), "scratch")]
+    return [KernelLaunch(
+        label="moe_gemm", grid=(n_b, d_out // tdn, n_k),
+        blocks=tuple(blocks),
+        flush=lambda bi, j, kk: kk == n_k - 1, out=out)]
+
+
 def moe_group_gemm_pallas(x: jax.Array, w: jax.Array,
                           block_expert: jax.Array, *, tt: int = TT,
                           tdn: int = TDN, tdk: int = TDK,

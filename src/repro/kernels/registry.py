@@ -68,6 +68,13 @@ class MethodSpec:
       lowest-ranked method wins ``method="auto"`` (ties go to the
       later-registered spec, preserving the paper rule's ``d >=
       threshold -> rowsplit``).
+    * ``traffic(plan, n, batch, var, tk) -> [KernelLaunch]`` — the
+      static launch model(s) of the method's ``impl="pallas"`` lowering
+      (``repro.kernels.introspect``), consumed by the kernel audit, the
+      coalescing checker and the bytes-moved analyzer
+      (``repro.analysis``).  ``None`` strands the method outside the
+      static-analysis gate and is itself a diagnostic (K001/T101) —
+      coverage is bidirectionally loud, never silently skipped.
     """
 
     name: str
@@ -78,6 +85,7 @@ class MethodSpec:
     resolve_params: Callable
     tune_candidates: Callable
     heuristic_rank: Callable | None
+    traffic: Callable | None = None
 
 
 _REGISTRY: dict[str, MethodSpec] = {}
@@ -260,6 +268,7 @@ register_method(MethodSpec(
     tune_candidates=_merge_candidates,
     # The paper's §5.4 rule as a cost: d below the threshold prefers merge.
     heuristic_rank=lambda a, h: h.mean_row_length(a) - h.threshold,
+    traffic=_merge.launch_models,
 ))
 
 register_method(MethodSpec(
@@ -272,4 +281,5 @@ register_method(MethodSpec(
     resolve_params=_rowsplit_resolve,
     tune_candidates=_rowsplit_candidates,
     heuristic_rank=lambda a, h: h.threshold - h.mean_row_length(a),
+    traffic=_rowsplit.launch_models,
 ))

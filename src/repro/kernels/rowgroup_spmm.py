@@ -155,6 +155,32 @@ def rowgroup_execute_parts(groups_meta: tuple, tl: int, fwd: dict,
     return out
 
 
+# ----------------------------------------------------- static launch model ---
+
+
+def launch_models(plan, n, batch, var, tk):
+    """Static model of the per-group row-split launches.
+
+    One row-split launch per length bucket.  The residual never fuses
+    into the groups (it applies after the un-grouping gather) and a
+    flagged residual forces the groups to flush in acc precision
+    (``rowgroup_execute_parts`` defers the single out cast past the
+    add).
+    """
+    from .rowsplit_spmm import ell_launch
+    ep = var.epilogue
+    residual = ep is not None and ep.residual
+    odt = var.acc_dtype if residual else (var.out_dtype or var.b_dtype)
+    models = []
+    for g, gs in enumerate(plan.fwd["groups"]):
+        models.append(ell_launch(
+            f"rowgroup[g{g}]", plan.meta, tuple(gs["slot_nz"].shape),
+            plan.meta.tl, n, batch, var, tk,
+            with_bias=ep is not None and ep.bias,
+            with_residual=False, out_dtype=odt))
+    return models
+
+
 # --------------------------------------------------- MethodSpec adapters ---
 
 
@@ -217,4 +243,5 @@ _registry.register_method(_registry.MethodSpec(
     resolve_params=_resolve,
     tune_candidates=lambda a, wide: [dict()],
     heuristic_rank=None,          # opt-in: explicit method= or TuneDB hits
+    traffic=launch_models,
 ))

@@ -190,3 +190,62 @@ def rowsplit_spmm_pallas(plan: dict, vals: jax.Array, b: jax.Array, *,
         scratch_shapes=[pltpu.VMEM((tm, tn), acc_dtype)],
         interpret=interpret,
     )(*operands)
+
+
+# ----------------------------------------------------- static launch model ---
+
+
+def ell_launch(label, meta, slot_shape, tl, n, batch, var, tk, *,
+               with_bias, with_residual, out_dtype):
+    """One row-split-kernel launch over an (m_pad, L) ELL block — shared
+    by the rowsplit method and rowgroup's per-group launches.  Mirrors
+    ``rowsplit_spmm_pallas``'s grid/BlockSpec construction block-for-
+    block (see ``repro.kernels.introspect``)."""
+    from .introspect import KernelBlock, KernelLaunch
+    from .merge_spmm import resolve_tk, vals_launch_block
+    m_pad, length = slot_shape
+    n_l = length // tl
+    tk, n_k = resolve_tk(meta.k, tk)
+    blocks = [
+        KernelBlock("cols", (TM, tl), "int32",
+                    lambda bb, i, j, ll, kk: (i, ll), (m_pad, length),
+                    "in"),
+        KernelBlock("slot_nz", (TM, tl), "int32",
+                    lambda bb, i, j, ll, kk: (i, ll), (m_pad, length),
+                    "in"),
+        vals_launch_block(meta.nnz_pad, var.vals_dtype),
+        KernelBlock("b", (1, tk, TN), var.b_dtype,
+                    lambda bb, i, j, ll, kk: (bb, kk, j),
+                    (batch, n_k * tk, n), "in"),
+    ]
+    if with_bias:
+        blocks.append(KernelBlock(
+            "bias", (1, TM), var.b_dtype,
+            lambda bb, i, j, ll, kk: (i, 0), (m_pad // TM, TM), "in"))
+    if with_residual:
+        blocks.append(KernelBlock(
+            "residual", (1, TM, TN), var.b_dtype,
+            lambda bb, i, j, ll, kk: (bb, i, j),
+            (batch, m_pad, n), "in"))
+    out = KernelBlock("out", (1, TM, TN), out_dtype,
+                      lambda bb, i, j, ll, kk: (bb, i, j),
+                      (batch, m_pad, n), "out")
+    blocks += [out, KernelBlock("acc", (TM, TN), var.acc_dtype, None,
+                                (TM, TN), "scratch")]
+    return KernelLaunch(
+        label=label,
+        grid=(batch, m_pad // TM, n // TN, n_l, n_k),
+        blocks=tuple(blocks),
+        flush=lambda bb, i, j, ll, kk: ll == n_l - 1 and kk == n_k - 1,
+        out=out)
+
+
+def launch_models(plan, n, batch, var, tk):
+    """Static model of ``rowsplit_spmm_pallas``'s one launch."""
+    ep = var.epilogue
+    return [ell_launch(
+        "rowsplit", plan.meta, tuple(plan.fwd["slot_nz"].shape),
+        plan.meta.tl, n, batch, var, tk,
+        with_bias=ep is not None and ep.bias,
+        with_residual=ep is not None and ep.residual,
+        out_dtype=var.out_dtype or var.b_dtype)]

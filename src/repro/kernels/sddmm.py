@@ -83,3 +83,40 @@ def sddmm_pallas(rows: jax.Array, cols: jax.Array, dc: jax.Array,
         scratch_shapes=[pltpu.VMEM((1, tq), acc_dtype)],
         interpret=interpret,
     )(rows, cols, dc, b)
+
+
+# ----------------------------------------------------- static launch model ---
+
+
+def launch_models(*, nnz_pad, m, k, n, batch, dc_dtype="float32",
+                  b_dtype="float32"):
+    """Static model of ``sddmm_pallas``'s one launch, as dispatched by
+    ``ops.sddmm``: the nonzero stream chunked ``(P, TQ)``, ``dc``/``b``
+    lane-padded to ``TN`` multiples, output ``(batch, P, TQ)`` f32.
+
+    This is the backward (values-cotangent) kernel the forward audits
+    never stage; ``repro.analysis.access``/``traffic`` pull it in
+    explicitly so the ``custom_vjp`` path gets the same coalescing and
+    bytes coverage as the forward launches.
+    """
+    from .introspect import KernelBlock, KernelLaunch
+    p = -(-nnz_pad // TQ)
+    n_pad = TN * (-(-n // TN))
+    n_j = n_pad // TN
+    blocks = [
+        KernelBlock("rows", (1, TQ), "int32",
+                    lambda bb, i, j: (i, 0), (p, TQ), "in"),
+        KernelBlock("cols", (1, TQ), "int32",
+                    lambda bb, i, j: (i, 0), (p, TQ), "in"),
+        KernelBlock("dc", (1, m, TN), dc_dtype,
+                    lambda bb, i, j: (bb, 0, j), (batch, m, n_pad), "in"),
+        KernelBlock("b", (1, k, TN), b_dtype,
+                    lambda bb, i, j: (bb, 0, j), (batch, k, n_pad), "in"),
+    ]
+    out = KernelBlock("out", (1, 1, TQ), "float32",
+                      lambda bb, i, j: (bb, i, 0), (batch, p, TQ), "out")
+    blocks += [out, KernelBlock("acc", (1, TQ), "float32", None, (1, TQ),
+                                "scratch")]
+    return [KernelLaunch(
+        label="sddmm", grid=(batch, p, n_j), blocks=tuple(blocks),
+        flush=lambda bb, i, j: j == n_j - 1, out=out)]

@@ -16,8 +16,9 @@ For every (architecture × input shape × mesh) cell::
         print(compiled.cost_analysis())     # FLOPs/bytes for §Roofline
 
 Failures (sharding mismatch, OOM at compile, unsupported collective) are
-bugs in the system.  Results land in results/dryrun/*.json for
-benchmarks/roofline.py.
+bugs in the system.  Results land in results/dryrun/*.json for the
+roofline CLI (``python -m benchmarks.roofline``, model in
+``repro.obs.roofline``).
 
 Usage:
     python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
@@ -30,9 +31,9 @@ import traceback
 
 import jax
 
+from repro.analysis import hlo as hlo_stats
 from repro.configs import ARCHS, SHAPES, get_config, shape_cells
 from repro.distributed import sharding as sh
-from repro.launch import hlo_stats
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import input_specs
 from repro.optim import adamw

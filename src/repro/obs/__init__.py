@@ -22,8 +22,8 @@ from . import trace as trace
 from .metrics import (Counter, Gauge, Histogram, MetricFamily,
                       MetricsRegistry)
 from .roofline import (Roof, RooflineAccountant, fused_epilogue_ceiling,
-                       measure_roof, plan_min_bytes, spmm_flops,
-                       spmm_min_bytes)
+                       measure_roof, plan_bwd_min_bytes, plan_min_bytes,
+                       sddmm_min_bytes, spmm_flops, spmm_min_bytes)
 from .trace import (Tracer, disable, enable, event, get_tracer, is_enabled,
                     span, tracing)
 
@@ -36,9 +36,9 @@ __all__ = [
     "Counter", "Gauge", "Histogram", "MetricFamily", "MetricsRegistry",
     "Roof", "RooflineAccountant", "Tracer", "accountant", "disable",
     "dump_metrics", "enable", "event", "fused_epilogue_ceiling",
-    "get_tracer", "is_enabled", "measure_roof", "plan_min_bytes",
-    "registry", "report", "reset", "span", "spmm_flops", "spmm_min_bytes",
-    "trace", "tracing",
+    "get_tracer", "is_enabled", "measure_roof", "plan_bwd_min_bytes",
+    "plan_min_bytes", "registry", "report", "reset", "sddmm_min_bytes",
+    "span", "spmm_flops", "spmm_min_bytes", "trace", "tracing",
 ]
 
 

@@ -8,6 +8,10 @@ an offline benchmark argument into an engine-wide measurement:
 * :func:`spmm_min_bytes` / :func:`plan_min_bytes` — the compulsory-traffic
   model (each operand/result crosses HBM once; moved here from
   ``benchmarks/roofline.py``, which now re-exports it),
+* :func:`plan_bwd_min_bytes` / :func:`sddmm_min_bytes` — the same model
+  for the custom-VJP backward (transpose-merge dB + SDDMM dvals), the
+  floor the static traffic analyzer (``repro.analysis.traffic``) holds
+  the backward programs against,
 * :func:`measure_roof` — a streaming (copy-scale) benchmark calibrating
   the backend's achievable bandwidth once, cached under ``artifacts/``
   keyed by backend,
@@ -71,18 +75,63 @@ def _dtype_bytes(name: str | None) -> int:
 
 
 def plan_min_bytes(meta, n: int, *, val_dtype: str = "float32",
-                   out_dtype: str | None = None) -> int:
+                   out_dtype: str | None = None, batch: int = 1,
+                   epilogue=None, b_dtype: str | None = None) -> int:
     """Compulsory bytes of executing a plan against an n-column B.
 
     ``meta`` is a ``core.plan.PlanMeta`` or ``distributed.spmm.
     ShardedMeta`` — both carry ``shape`` and ``nnz_pad`` (the static
     nonzero capacity the kernels actually stream, padding included).
+    ``batch`` scales the dense legs (B, C, a flagged residual);
+    ``b_dtype`` widens/narrows the B leg independently of the values
+    (defaults to ``val_dtype``); a fused ``epilogue`` adds its operand
+    reads (bias once, residual per batch).  The old
+    ``plan_min_bytes(meta, n, val_dtype=..., out_dtype=...)`` spelling
+    is unchanged.
     """
     m, k = meta.shape
     vb = _dtype_bytes(val_dtype)
+    bb = _dtype_bytes(b_dtype or val_dtype)
     ob = _dtype_bytes(out_dtype or val_dtype)
-    return spmm_min_bytes(m, k, n, meta.nnz_pad, val_bytes=vb,
-                          idx_bytes=4, out_bytes=ob)
+    total = (meta.nnz_pad * (vb + 4) + batch * k * n * bb
+             + batch * m * n * ob)
+    if epilogue is not None:
+        if getattr(epilogue, "bias", False):
+            total += m * bb
+        if getattr(epilogue, "residual", False):
+            total += batch * m * n * bb
+    return total
+
+
+def sddmm_min_bytes(nnz: int, m: int, k: int, n: int, *, batch: int = 1,
+                    dc_dtype: str = "float32",
+                    b_dtype: str = "float32") -> int:
+    """Compulsory traffic of the SDDMM values-cotangent pass: read the
+    output cotangent and B once, the nonzero coordinate streams once,
+    write one f32 value per nonzero (``kernels.sddmm``)."""
+    dcb = _dtype_bytes(dc_dtype)
+    bb = _dtype_bytes(b_dtype)
+    return (batch * m * n * dcb + batch * k * n * bb
+            + nnz * (4 + 4) + nnz * 4)
+
+
+def plan_bwd_min_bytes(meta, n: int, *, val_dtype: str = "float32",
+                       b_dtype: str | None = None,
+                       batch: int = 1) -> int:
+    """Compulsory *extra* bytes of the custom-VJP backward, on top of
+    the forward: the transpose-merge dB pass (stream the transposed
+    structure and values, read the f32 output cotangent, write dB in
+    B's dtype) plus the SDDMM dvals pass (:func:`sddmm_min_bytes`).
+    The static traffic analyzer holds the traced fwd+bwd program
+    against ``plan_min_bytes + plan_bwd_min_bytes``.
+    """
+    m, k = meta.shape
+    vb = _dtype_bytes(val_dtype)
+    bb = _dtype_bytes(b_dtype or val_dtype)
+    db = (meta.nnz_pad * (vb + 4) + batch * m * n * 4
+          + batch * k * n * bb)
+    return db + sddmm_min_bytes(meta.nnz_pad, m, k, n, batch=batch,
+                                b_dtype=b_dtype or val_dtype)
 
 
 def spmm_flops(nnz: int, n: int) -> float:

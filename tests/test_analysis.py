@@ -373,7 +373,9 @@ def test_audit_fails_loudly_on_uncovered_method():
     from repro.analysis import kernel_audit
     from repro.kernels import registry
     spec = registry.get_method("merge")
-    ghost = dataclasses.replace(spec, name="ghost")
+    # replace() would inherit merge's traffic hook — a ghost method with
+    # no launch model anywhere must trip K001.
+    ghost = dataclasses.replace(spec, name="ghost", traffic=None)
     registry.register_method(ghost)
     try:
         rows, diags = kernel_audit.audit_all()
@@ -506,7 +508,7 @@ def test_rl003_incomplete_methodspec(tmp_path):
         ok = registry.MethodSpec(
             name="y", description="d", build_structure=f, execute=g,
             inline=h, resolve_params=r, tune_candidates=None,
-            heuristic_rank=None)
+            heuristic_rank=None, traffic=None)
     """)
     assert [d.code for d in diags] == ["RL003"]
     assert "resolve_params" in diags[0].message

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.launch import hlo_stats
+from repro.analysis import hlo as hlo_stats
 
 
 def _parse(fn, *specs):
@@ -142,3 +142,25 @@ def test_parse_compiled_jit_wraps_plain_callables():
     plain = hlo_stats.parse_compiled(f, spec)
     jitted = hlo_stats.parse_compiled(jax.jit(f), spec)
     assert plain["flops"] == jitted["flops"] == 2 * 8 * 8 * 4
+
+
+def test_parse_compiled_detail_breakdown():
+    """detail=True must attribute flops to computations (the scan body,
+    not the entry) and surface the op histogram — additive keys only."""
+    def f(x):
+        y, _ = jax.lax.scan(lambda c, _: (c @ c, None), x, None, length=3)
+        return y.sum()
+
+    spec = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    plain = hlo_stats.parse_compiled(f, spec)
+    r = hlo_stats.parse_compiled(f, spec, detail=True)
+    assert {k: r[k] for k in plain} == plain
+    assert r["computations"] and r["fusion_ops"]
+    own = sum(c["flops"] for c in r["computations"].values())
+    assert 0 < own <= r["flops"]        # trip scaling only in the total
+
+
+def test_launch_hlo_stats_shim_reexports():
+    from repro.launch import hlo_stats as shim
+    assert shim.parse_module is hlo_stats.parse_module
+    assert shim.parse_compiled is hlo_stats.parse_compiled

@@ -1,0 +1,258 @@
+"""Traffic analyzer + access checker: clean at HEAD, loud under mutation.
+
+The contract under test is bidirectional:
+
+* the committed tree produces **zero** findings (T010/T011/T012 clean,
+  coalescing clean, committed baseline covers the full grid), and
+* each injected regression — a gratuitous transpose in the XLA ref, a
+  forced f32 materialization in the bf16 pallas path, a stride-permuted
+  BlockSpec index map, a dropped coverage entry — is caught by its
+  *specific* diagnostic code, not a generic failure.
+
+Mutation tests use :func:`traffic.analyze_variant` (one row) and
+:func:`access.check_launch` (one model) so the suite stays fast; the
+full 48-row sweep + baseline diff runs in ``make analyze``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import types
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import access, traffic
+from repro.analysis.kernel_audit import _representative
+from repro.core.plan import build_plan
+from repro.kernels import ops, ref, registry
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def merge_plan():
+    return build_plan(_representative(), method="merge")
+
+
+@pytest.fixture(scope="module")
+def merge_spec():
+    return registry.get_method("merge")
+
+
+def _variant(name):
+    return next(v for v in traffic._variants() if v.name == name)
+
+
+def _codes(diags):
+    return [d.code for d in diags]
+
+
+# ------------------------------------------------------------ clean tree ---
+
+
+def test_pallas_rows_clean_at_head(merge_plan, merge_spec):
+    for vname in ("f32", "bf16_acc32"):
+        for pass_ in ("fwd", "bwd"):
+            row = traffic.analyze_variant(
+                merge_spec, merge_plan, _variant(vname), "pallas", pass_)
+            assert traffic._check_row(row) == [], row.key
+            assert row.bytes > row.min_bytes > 0
+            assert row.transposes == 0
+
+
+def test_xla_row_clean_at_head(merge_plan, merge_spec):
+    row = traffic.analyze_variant(
+        merge_spec, merge_plan, _variant("f32"), "xla", "fwd")
+    assert traffic._check_row(row) == [], row.key
+    assert row.transposes == 0 and row.widen_bytes == 0
+
+
+def test_access_checker_clean_at_head():
+    assert access.check_all() == []
+
+
+def test_committed_baseline_covers_full_grid():
+    path = os.path.join(REPO_ROOT, traffic.BASELINE_PATH)
+    data = traffic.load_baseline(path)
+    assert data["schema"] == traffic.SCHEMA_VERSION
+    rows = data["backends"]["cpu"]["rows"]
+    methods = [n for n in registry.method_names()
+               if registry.get_method(n).traffic is not None]
+    want = {f"{m}/{i}/{v.name}/{p}"
+            for m in methods for i in traffic.IMPLS
+            for v in traffic._variants() for p in traffic.PASSES}
+    assert set(rows) == want
+    for rec in rows.values():
+        assert rec["bytes"] > rec["min_bytes"] > 0
+
+
+# -------------------------------------------------------- baseline gate ---
+
+
+def _fake_row(key, nbytes=1000):
+    method, impl, variant, pass_ = key.split("/")
+    return traffic.TrafficRow(method=method, impl=impl, variant=variant,
+                              pass_=pass_, bytes=nbytes, min_bytes=100,
+                              transposes=0, widen_bytes=0)
+
+
+def test_baseline_roundtrip_and_gate(tmp_path):
+    path = str(tmp_path / "base.json")
+    rows = [_fake_row("merge/pallas/f32/fwd"),
+            _fake_row("merge/xla/f32/fwd", 2000)]
+    data = traffic.update_baseline(rows, path, backend="cpu")
+    # round-trips through disk, clean against itself
+    assert traffic.load_baseline(path) == data
+    assert traffic.check_baseline(rows, data, "cpu") == []
+    # T020: bytes grew past the slack
+    grown = [dataclasses.replace(rows[0], bytes=1100), rows[1]]
+    assert _codes(traffic.check_baseline(grown, data, "cpu")) == ["T020"]
+    # within slack: still clean
+    jitter = [dataclasses.replace(rows[0], bytes=1010), rows[1]]
+    assert traffic.check_baseline(jitter, data, "cpu") == []
+    # T020 also guards the jaxpr stats, not just bytes
+    flipped = [dataclasses.replace(rows[0], transposes=1), rows[1]]
+    assert _codes(traffic.check_baseline(flipped, data, "cpu")) == ["T020"]
+    # T021: variant missing from the baseline / unknown backend
+    extra = rows + [_fake_row("merge/pallas/f32/bwd")]
+    assert _codes(traffic.check_baseline(extra, data, "cpu")) == ["T021"]
+    assert _codes(traffic.check_baseline(rows, data, "tpu")) == ["T021"]
+    # T022: stale baseline entry no longer produced
+    assert _codes(traffic.check_baseline(rows[:1], data, "cpu")) == ["T022"]
+
+
+def test_baseline_schema_mismatch_is_loud(tmp_path):
+    path = str(tmp_path / "base.json")
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump({"schema": 999, "backends": {}}, f)
+    with pytest.raises(ValueError, match="schema"):
+        traffic.load_baseline(path)
+
+
+# ---------------------------------------------------- injected mutations ---
+
+
+def test_gratuitous_transpose_fires_t011(merge_plan, merge_spec,
+                                         monkeypatch):
+    """Two cancelling swapaxes in the XLA ref: invisible to the output,
+    caught by the transpose census (the jaxpr, not the optimized HLO)."""
+    orig = ref.merge_execute_ref
+
+    def bad(structure, vals, b, *a, **kw):
+        b = jnp.swapaxes(jnp.swapaxes(b, -1, -2), -1, -2)
+        return orig(structure, vals, b, *a, **kw)
+
+    monkeypatch.setattr(ref, "merge_execute_ref", bad)
+    # the mutated call site sits inside jitted ops.merge_execute: drop
+    # its trace cache so the patch is traced (and again after, so the
+    # mutated trace can't leak into later tests)
+    ops.merge_execute.clear_cache()
+    try:
+        row = traffic.analyze_variant(
+            merge_spec, merge_plan, _variant("f32"), "xla", "fwd")
+    finally:
+        ops.merge_execute.clear_cache()
+    assert row.transposes == 2
+    assert "T011" in _codes(traffic._check_row(row))
+
+
+def test_forced_f32_materialization_fires_t012(merge_plan, merge_spec,
+                                               monkeypatch):
+    """Upcast-then-narrow of the bf16 B panel outside the kernel: a
+    silent HBM-level widening the DMA model alone would never see."""
+    orig = ops.merge_execute
+
+    def bad(structure, vals, b, **kw):
+        b = b.astype(jnp.float32).astype(b.dtype)
+        return orig(structure, vals, b, **kw)
+
+    monkeypatch.setattr(ops, "merge_execute", bad)
+    row = traffic.analyze_variant(
+        merge_spec, merge_plan, _variant("bf16_acc32"), "pallas", "fwd")
+    # batch * k * n * 4 widened bytes against a zero allowance
+    assert row.widen_bytes >= 2 * merge_plan.meta.k * 256 * 4
+    assert "T012" in _codes(traffic._check_row(row))
+
+
+def test_stride_permuted_index_map_fires_t110(merge_plan, merge_spec):
+    """Double the minor block index of the B panel (a stride-2 lane
+    walk): the coalescing proof must reject it."""
+    var = _variant("f32")
+    models = merge_spec.traffic(merge_plan, 256, 2, var, 64)
+    mutated = []
+    for model in models:
+        assert access.check_launch(model) == []   # clean before mutation
+        blocks = []
+        for blk in model.blocks:
+            if blk.name == "b":
+                orig_map = blk.index_map
+                blocks.append(dataclasses.replace(
+                    blk, index_map=lambda *p, _o=orig_map:
+                        (*_o(*p)[:-1], 2 * _o(*p)[-1])))
+            else:
+                blocks.append(blk)
+        mutated.append(dataclasses.replace(model, blocks=tuple(blocks)))
+    codes = [c for m in mutated for c in _codes(access.check_launch(m))]
+    assert "T110" in codes
+
+
+def test_rowgroup_permutation_mutations_fire_t130_t131():
+    plan = build_plan(_representative(), method="rowgroup")
+    assert access.check_rowgroup_plan(plan) == []
+    inv = np.asarray(plan.fwd["inv_pos"]).copy()
+    # T130: duplicate a destination slot — no longer a permutation
+    broken = inv.copy()
+    broken[1] = broken[0]
+    shim = types.SimpleNamespace(meta=plan.meta,
+                                 fwd={**plan.fwd, "inv_pos": broken})
+    assert _codes(access.check_rowgroup_plan(shim)) == ["T130"]
+    # T131: swap two source rows inside one bucket — still a
+    # permutation, but the stable-sort order is gone
+    order = np.argsort(inv)
+    start = 0
+    for m_g, _ in plan.meta.extra:
+        if m_g > 1:
+            r0, r1 = order[start], order[start + 1]
+            swapped = inv.copy()
+            swapped[r0], swapped[r1] = inv[r1], inv[r0]
+            break
+        start += m_g
+    else:
+        pytest.skip("no length bucket with >1 row in the representative")
+    shim = types.SimpleNamespace(meta=plan.meta,
+                                 fwd={**plan.fwd, "inv_pos": swapped})
+    assert "T131" in _codes(access.check_rowgroup_plan(shim))
+
+
+def test_coverage_is_bidirectional_t101_t102(monkeypatch):
+    # dropping a kernel's model entry is loud ...
+    pruned = {k: v for k, v in access.EXTRA_KERNELS.items()
+              if k != "sddmm"}
+    monkeypatch.setattr(access, "EXTRA_KERNELS", pruned)
+    diags = access.check_coverage()
+    assert ("T101", "repro.kernels.sddmm") in [(d.code, d.where)
+                                               for d in diags]
+    # ... and so is a stale entry for a kernel that no longer exists
+    stale = dict(access.EXTRA_KERNELS, ghost=lambda plan, n, batch: [])
+    monkeypatch.setattr(access, "EXTRA_KERNELS", stale)
+    diags = access.check_coverage()
+    assert ("T102", "repro.kernels.ghost") in [(d.code, d.where)
+                                               for d in diags]
+
+
+# ------------------------------------------------------------------- CLI ---
+
+
+def test_cli_json_report(tmp_path):
+    from repro.analysis import cli
+    path = str(tmp_path / "lint.json")
+    rc = cli.run_repo_lint(None, out=open(os.devnull, "w"),
+                           json_path=path)
+    with open(path, encoding="utf-8") as f:
+        rec = json.load(f)
+    assert rec["command"] == "lint"
+    assert rec["exit"] == rc == 0
+    assert rec["diagnostics"] == []
