@@ -3,7 +3,8 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: ci test test-sharded smoke examples-smoke bench tune tune-smoke \
 	bench-batched-smoke bench-sharded-smoke bench-epilogue-smoke \
-	bench-obs-smoke trace-smoke lint analyze traffic-baseline
+	bench-obs-smoke trace-smoke serve-smoke lint analyze \
+	traffic-baseline
 
 # examples-smoke subsumes the quickstart smoke (runs it in full), so ci
 # doesn't run it twice.
@@ -132,6 +133,24 @@ trace-smoke:
 	    --trace artifacts/train_trace.json \
 	    --metrics artifacts/train_metrics.json \
 	    --require-metrics train_step_latency_us
+
+# CI smoke: online serving under Poisson load — continuous batching vs
+# one-at-a-time (the >= 1.5x smoke throughput gate lives inside the
+# bench), plus a Pallas interpret-mode leg and the shed-accounting leg.
+# Trace + metrics artifacts are schema-validated: the serve.* spans and
+# the serving metric families must actually exist.
+serve-smoke:
+	mkdir -p artifacts
+	REPRO_BENCH_SERVING=smoke \
+	    REPRO_SERVING_TRACE_OUT=artifacts/serving_trace.json \
+	    REPRO_SERVING_METRICS_OUT=artifacts/serving_metrics.json \
+	    $(PY) -m benchmarks.run serving > artifacts/bench_serving.csv
+	cat artifacts/bench_serving.csv
+	$(PY) -m repro.obs.validate \
+	    --trace artifacts/serving_trace.json \
+	    --require-cats serve \
+	    --metrics artifacts/serving_metrics.json \
+	    --require-metrics serve_requests_total,serve_request_latency_us,serve_batch_occupancy,program_cache_events_total
 
 # CI smoke: shard-count sweep + nnz-vs-row balance on a forced 8-device
 # CPU mesh (bench_sharded forces the device count itself when run as a

@@ -19,8 +19,8 @@ def _mods():
                    bench_fig1_imbalance, bench_fig4_aspect,
                    bench_fig5_rows, bench_fig6_heuristic,
                    bench_fig7_density, bench_obs, bench_plan_reuse,
-                   bench_sharded, bench_table1_analysis, bench_train_step,
-                   bench_moe_balance)
+                   bench_serving, bench_sharded, bench_table1_analysis,
+                   bench_train_step, bench_moe_balance)
     return [
         ("fig1", bench_fig1_imbalance),
         ("fig4", bench_fig4_aspect),
@@ -36,6 +36,7 @@ def _mods():
         ("train", bench_train_step),
         ("corpus", bench_corpus),
         ("obs", bench_obs),
+        ("serving", bench_serving),
     ]
 
 

@@ -75,12 +75,21 @@ class StepTimer:
 
 
 def retry(fn, attempts: int = 3, backoff: float = 1.0,
-          exceptions=(IOError, OSError)):
-    """Retry transient failures (checkpoint I/O to network filesystems)."""
+          exceptions=(IOError, OSError), on_retry=None):
+    """Retry transient failures with exponential backoff.
+
+    Covers checkpoint I/O to network filesystems and the serving layer's
+    batch execution (``repro.serving.Server``).  ``on_retry(attempt,
+    exc)`` fires before each backoff sleep — the hook the serving loop
+    uses to count retries on the metrics registry; the final attempt's
+    exception propagates unchanged.
+    """
     for i in range(attempts):
         try:
             return fn()
-        except exceptions:
+        except exceptions as e:
             if i == attempts - 1:
                 raise
+            if on_retry is not None:
+                on_retry(i + 1, e)
             time.sleep(backoff * (2 ** i))

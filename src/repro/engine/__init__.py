@@ -15,7 +15,8 @@ that replaces the analytic heuristic with measurements.
 from .cache import (CacheStats, PlanCache, cache_stats, clear_cache,
                     current_tunedb, default_cache, get_plan, load_tunedb,
                     set_tunedb)
+from .programs import ProgramCache, ProgramStats
 
-__all__ = ["CacheStats", "PlanCache", "cache_stats", "clear_cache",
-           "current_tunedb", "default_cache", "get_plan", "load_tunedb",
-           "set_tunedb"]
+__all__ = ["CacheStats", "PlanCache", "ProgramCache", "ProgramStats",
+           "cache_stats", "clear_cache", "current_tunedb",
+           "default_cache", "get_plan", "load_tunedb", "set_tunedb"]

@@ -1,0 +1,112 @@
+"""Bucket-keyed compiled-program cache — the serving twin of PlanCache.
+
+The plan cache amortizes *pattern*-derived work (chunk layout, kernel
+choice); online serving adds a second static axis, the request shape.  A
+:class:`ProgramCache` pins each key — for the serving layer, a
+``(batch, length)`` shape bucket — to one AOT-compiled executable
+(``jax.jit(fn).lower(...).compile()``), with hit/miss/eviction counters
+on the global metrics registry (``program_cache_events_total{cache,
+event}`` / ``program_cache_size{cache}``), so a serving loop can assert
+"zero recompiles after warmup" the same way the engine asserts "zero
+replans in a jitted step" — against a counter, not a hope.
+
+The cache itself is compilation-agnostic: ``get(key, build)`` runs
+``build()`` on a miss outside the lock (compiles are long; concurrent
+misses on *different* keys must not serialize) and double-checks the
+entry before inserting, so two threads racing the same key do at most
+one redundant compile and share one stored program.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+from collections import OrderedDict
+from collections.abc import Callable, Hashable
+
+from repro import obs as _obs
+
+DEFAULT_MAXSIZE = 64
+
+_prog_events = _obs.registry.counter(
+    "program_cache_events_total",
+    "ProgramCache events by cache instance", labels=("cache", "event"))
+_prog_size = _obs.registry.gauge(
+    "program_cache_size", "live entries per ProgramCache",
+    labels=("cache",))
+
+_prog_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class ProgramStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    size: int = 0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class ProgramCache:
+    """Thread-safe LRU of compiled programs keyed on static shape keys."""
+
+    def __init__(self, maxsize: int = DEFAULT_MAXSIZE,
+                 name: str | None = None):
+        self.maxsize = maxsize
+        self.name = name if name is not None else \
+            f"programs{next(_prog_ids)}"
+        self._c_hit = _prog_events.labels(cache=self.name, event="hit")
+        self._c_miss = _prog_events.labels(cache=self.name, event="miss")
+        self._c_evict = _prog_events.labels(cache=self.name,
+                                            event="eviction")
+        self._g_size = _prog_size.labels(cache=self.name)
+        self._entries: OrderedDict[Hashable, object] = OrderedDict()
+        self._lock = threading.Lock()
+
+    def get(self, key: Hashable, build: Callable[[], object]):
+        """The program for ``key``; a miss runs ``build()`` (outside the
+        lock) and caches its result."""
+        with self._lock:
+            prog = self._entries.get(key)
+            if prog is not None:
+                self._entries.move_to_end(key)
+                self._c_hit.inc()
+                return prog
+        prog = build()
+        with self._lock:
+            raced = self._entries.get(key)
+            if raced is not None:
+                # Another thread built the same key first — count our
+                # build as the miss it was, serve the stored program.
+                self._entries.move_to_end(key)
+                self._c_miss.inc()
+                return raced
+            self._c_miss.inc()
+            self._entries[key] = prog
+            while len(self._entries) > self.maxsize:
+                self._entries.popitem(last=False)
+                self._c_evict.inc()
+            self._g_size.set(len(self._entries))
+        return prog
+
+    def keys(self) -> list:
+        with self._lock:
+            return list(self._entries)
+
+    def stats(self) -> ProgramStats:
+        return ProgramStats(
+            hits=self._c_hit.value, misses=self._c_miss.value,
+            evictions=self._c_evict.value, size=int(self._g_size.value))
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            for c in (self._c_hit, self._c_miss, self._c_evict,
+                      self._g_size):
+                c.reset()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)

@@ -27,6 +27,30 @@ from repro.runtime import steps as R
 # jitted forward, compile included), "warm" (steady state).
 _serve_latency = obs.registry.histogram(
     "serve_latency_us", "serve.py phase latency", labels=("phase",))
+_serve_replans = obs.registry.counter(
+    "serve_replans_total",
+    "plans built inside the jitted serving path (must stay 0)")
+
+
+def _check_replans(before, after) -> int:
+    """Count plan-cache misses between two ``engine.cache_stats()``
+    snapshots and fail loudly if the jitted serving path built any.
+
+    A real check, not an ``assert`` — ``python -O`` strips asserts, and
+    a replanning hot path is exactly the regression serving must never
+    ship with.  The count lands on ``serve_replans_total`` either way so
+    dashboards see the violation even if the exception is swallowed.
+    """
+    replans = after.misses - before.misses
+    if replans:
+        _serve_replans.inc(replans)
+        raise RuntimeError(
+            f"jitted serving replanned: {replans} plan(s) built during "
+            f"the warm forward (cache misses {before.misses} -> "
+            f"{after.misses}). Plans must be attached before jit — "
+            "rebuild the sparse params with ensure_spmm_plans/prune_mlp "
+            "outside the traced function.")
+    return replans
 
 
 def generate(cfg, params, prompt_tokens, gen_len: int, *, cache_extra=8):
@@ -137,12 +161,78 @@ def serve_pruned(cfg, params, prompt, keep: float, *, microbatch: int = 0,
     t_warm = time.perf_counter() - t1
     _serve_latency.labels(phase="warm").observe(t_warm * 1e6)
     after = engine.cache_stats()
-    assert after.misses == stats.misses, "jitted serving replanned!"
+    replans = _check_replans(stats, after)
     mb = f" (microbatch={microbatch})" if microbatch else ""
     print(f"[serve] warm pruned forward{mb} {t_warm * 1e3:.1f}ms "
           f"({prompt.size / t_warm:.0f} tok/s); plans built during "
-          f"serving: {after.misses - stats.misses}")
+          f"serving: {replans}")
     return logits
+
+
+def serve_online(cfg, params, keep: float, args, policy=None) -> int:
+    """``--serve``: online continuous batching over the pruned-FFN
+    forward.  Ragged Poisson arrivals pack into pre-compiled
+    ``(batch, length)`` bucket programs (``repro.serving``); after
+    warmup the run must neither replan nor recompile — both asserted.
+    """
+    from repro import engine, serving
+    from repro.serving import loadgen
+
+    check_prunable(cfg)
+    with obs.span("serve.plan", cat="serve", keep=keep):
+        blocks = prune_ffn_blocks(params, cfg, keep, policy=policy)
+    base = make_pruned_forward(cfg)
+
+    def forward(state, tokens):
+        p, blk = state
+        return base(p, blk, tokens)
+
+    ladder = serving.BucketLadder.from_max(
+        args.prompt_len, max(args.batch, 1),
+        min_len=min(8, args.prompt_len))
+    server = serving.Server(
+        forward, (params, blocks), ladder,
+        queue_depth=args.serve_queue_depth,
+        default_deadline_s=(args.serve_deadline_ms / 1e3
+                            if args.serve_deadline_ms else None),
+        name="serve.online")
+    t0 = time.perf_counter()
+    server.warmup()
+    shapes = ladder.shapes()
+    print(f"[serve] warmed {len(shapes)} bucket programs "
+          f"(lengths={ladder.lengths} batches={ladder.batches}) "
+          f"in {time.perf_counter() - t0:.2f}s")
+    plan_stats = engine.cache_stats()
+
+    rate = args.serve_rate
+    if rate <= 0:
+        # Auto-rate: drive at ~4x the solo warm-call capacity so the
+        # batcher actually batches.
+        solo = min(server.probe(ladder.batches[0], ladder.max_len)
+                   for _ in range(3))
+        rate = 4.0 / solo
+        print(f"[serve] auto rate: solo call {solo * 1e3:.1f}ms "
+              f"-> offered {rate:.1f} req/s")
+    sched = loadgen.poisson_schedule(
+        args.serve_requests, rate,
+        (max(1, args.prompt_len // 4), args.prompt_len), seed=args.seed)
+    server.start()
+    report = loadgen.run_load(server, sched, vocab=cfg.vocab_size,
+                              seed=args.seed)
+    server.stop()
+    _check_replans(plan_stats, engine.cache_stats())
+    rc = server.recompiles()
+    if rc:
+        raise RuntimeError(
+            f"online serving recompiled {rc} program(s) after warmup — "
+            "the bucket ladder must cover every served shape")
+    print(f"[serve] online: {report.ok}/{report.n} ok "
+          f"({report.shed} shed, {report.error} error) in "
+          f"{report.wall_s:.2f}s = {report.throughput_rps:.1f} req/s; "
+          f"p50 {report.p50_us / 1e3:.1f}ms p99 "
+          f"{report.p99_us / 1e3:.1f}ms; recompiles after warmup: {rc}")
+    _export_obs(args)
+    return 0
 
 
 def main(argv=None):
@@ -185,7 +275,37 @@ def main(argv=None):
                     help="force the SpMM kernel method for pruned-FFN "
                     "plans (any registered method; 'auto' resolves "
                     "through the TuneDB ladder + heuristic)")
+    ap.add_argument("--serve", action="store_true",
+                    help="online mode: continuous batching of ragged "
+                    "Poisson requests over pre-compiled shape-bucket "
+                    "programs (requires --prune-ffn); --batch and "
+                    "--prompt-len bound the bucket ladder")
+    ap.add_argument("--serve-requests", type=int, default=24,
+                    metavar="N", help="requests in the Poisson load")
+    ap.add_argument("--serve-rate", type=float, default=0.0,
+                    metavar="RPS", help="offered load (0 = auto: 4x the "
+                    "measured solo-call capacity)")
+    ap.add_argument("--serve-deadline-ms", type=float, default=0.0,
+                    metavar="MS", help="per-request deadline; expired "
+                    "requests are shed, not served (0 = none)")
+    ap.add_argument("--serve-queue-depth", type=int, default=64,
+                    metavar="N", help="admission queue bound; submits "
+                    "beyond it are shed immediately")
     args = ap.parse_args(argv)
+
+    if args.prune_ffn <= 0.0:
+        # These flags only shape the pruned-FFN path; silently ignoring
+        # them hides typos like a forgotten --prune-ffn.
+        dead = [fl for fl, on in (
+            ("--serve", args.serve),
+            ("--microbatch", args.microbatch != 0),
+            ("--mesh", args.mesh != 0),
+            ("--spmm-method", args.spmm_method != "auto"),
+        ) if on]
+        if dead:
+            ap.error(f"{', '.join(dead)}: no effect without "
+                     "--prune-ffn KEEP (the dense decode path ignores "
+                     "these flags); add --prune-ffn or drop them")
 
     if args.trace_out:
         obs.enable()
@@ -223,6 +343,9 @@ def main(argv=None):
                                          shards=ShardSpec(mesh=mesh))
             print(f"[serve] sharding pruned-FFN plans over {args.mesh} "
                   f"devices (nnz-balanced row shards)")
+        if args.serve:
+            return serve_online(cfg, params, args.prune_ffn, args,
+                                policy=policy)
         logits = serve_pruned(cfg, params, prompt, args.prune_ffn,
                               microbatch=args.microbatch, policy=policy)
         print(f"pruned-FFN logits {logits.shape}; "

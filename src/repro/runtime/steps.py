@@ -177,16 +177,21 @@ def make_sparse_train_step(sparse_p: dict, *, lr: float = 1e-2,
     return step, S.mlp_vals(sparse_p)
 
 
-def microbatched(fn, microbatch: int, *, argnums=(0,)):
+def microbatched(fn, microbatch: int, *, argnums=(0,), pad=True):
     """Run ``fn`` over fixed-size slices of the selected args' leading axis.
 
     ``fn`` (typically jitted) is called once per ``microbatch``-sized slice
     of every arg in ``argnums`` (other args pass through whole), and the
     per-slice outputs are concatenated along axis 0.  Because every slice
     has the same static shape, a single compiled program serves any request
-    batch that divides into microbatches — the serving loop's way to bound
-    peak memory while the batch axis inside each call still rides the
-    engine's batched SpMM execution.
+    batch — a ragged tail (``total % microbatch != 0``, or ``total``
+    smaller than one microbatch) is padded up to the microbatch shape by
+    repeating its last row and the padded rows are trimmed from the
+    concatenated outputs, so ``fn`` never sees a second shape and jit
+    never recompiles.  ``pad=False`` restores the strict behaviour:
+    ragged totals raise instead of padding (for callers whose ``fn``
+    mixes rows, e.g. a batch-mean loss, where silent padding would skew
+    the result).
     """
     if microbatch <= 0:
         raise ValueError(f"microbatch must be positive, got {microbatch}")
@@ -197,16 +202,31 @@ def microbatched(fn, microbatch: int, *, argnums=(0,)):
             raise ValueError(
                 f"microbatched args disagree on the leading axis: {sizes}")
         (total,) = sizes
-        if total % microbatch:
+        if total == 0:
+            raise ValueError("microbatched got an empty batch")
+        rem = total % microbatch
+        if rem and not pad:
             raise ValueError(
                 f"batch {total} does not divide into microbatches of "
                 f"{microbatch}; pad the batch or change --microbatch")
         outs = []
         for s in range(0, total, microbatch):
-            sliced = [a[s:s + microbatch] if i in argnums else a
+            n = min(microbatch, total - s)
+
+            def cut(a):
+                sl = a[s:s + n]
+                if n < microbatch:
+                    fill = jnp.repeat(sl[-1:], microbatch - n, axis=0)
+                    sl = jnp.concatenate([sl, fill], axis=0)
+                return sl
+
+            sliced = [cut(a) if i in argnums else a
                       for i, a in enumerate(args)]
             outs.append(fn(*sliced))
-        return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *outs)
+        out = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *outs)
+        if rem:
+            out = jax.tree.map(lambda x: x[:total], out)
+        return out
 
     return run
 

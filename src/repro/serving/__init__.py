@@ -1,0 +1,19 @@
+"""Online serving: continuous batching over pre-compiled shape buckets.
+
+    ladder = serving.BucketLadder.from_max(max_len=128, max_batch=8)
+    server = serving.Server(forward, params, ladder).start()
+    fut = server.submit(tokens)            # 1-D int array, any length
+    out = fut.result()                     # rows trimmed to true length
+    assert server.recompiles() == 0        # ladder covered the stream
+    server.stop()
+
+``buckets`` holds the pure ladder/packer core, ``server`` the queue +
+batcher + admission control + AOT program warmup, ``loadgen`` the
+deterministic Poisson driver used by ``benchmarks/bench_serving.py``.
+"""
+from . import loadgen
+from .buckets import BucketLadder, PackedBatch, pack
+from .server import RequestShed, Server, ServerClosed
+
+__all__ = ["BucketLadder", "PackedBatch", "RequestShed", "Server",
+           "ServerClosed", "loadgen", "pack"]

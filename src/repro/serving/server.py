@@ -1,0 +1,331 @@
+"""Continuous-batching server over pre-compiled shape buckets.
+
+The paper's core principle — split *total work*, not rows, into equal
+pieces so no execution unit idles — lifted to the request level: instead
+of one compiled program per caller-shaped batch (recompile on every
+ragged tail) or one request at a time (the dispatch amortizer idle), an
+open stream of ragged requests feeds a bounded queue, a batcher thread
+drains it continuously, and every drained group is packed into the
+smallest ``(batch, length)`` bucket of a pre-compiled ladder
+(:mod:`repro.serving.buckets`).  All bucket programs and every SpMM plan
+are warmed at startup (``warmup``: ``ensure_spmm_plans`` + one AOT
+compile per bucket through :class:`repro.engine.ProgramCache`), so the
+steady state replans nothing and recompiles nothing — both asserted
+against counters, not hoped for.
+
+Admission control keeps the system stable under overload: the queue is
+bounded (``submit`` sheds immediately when full), each request may carry
+a deadline (shed at dequeue when already expired — serving a dead
+request would only delay live ones), and transient execution failures
+retry with exponential backoff through ``repro.distributed.fault.retry``.
+
+Observability: ``serve_requests_total{outcome=ok|shed|error}``,
+``serve_request_latency_us{phase=queue_wait|assemble|execute|total}``,
+``serve_batch_occupancy`` (true requests / bucket batch), and
+``serve_retries_total`` on the global registry, plus trace spans
+``serve.enqueue`` / ``serve.batch`` / ``serve.execute`` when tracing is
+enabled.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import queue as _queue
+import threading
+import time
+from collections.abc import Callable
+from concurrent.futures import Future
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.distributed import fault
+from repro.engine.programs import ProgramCache
+from repro.obs import trace as _trace
+from repro.runtime.steps import ensure_spmm_plans
+
+from .buckets import BucketLadder, pack
+
+_requests_total = obs.registry.counter(
+    "serve_requests_total", "served requests by outcome",
+    labels=("outcome",))
+_latency = obs.registry.histogram(
+    "serve_request_latency_us", "per-request serving latency by phase",
+    labels=("phase",))
+_batch_occupancy = obs.registry.histogram(
+    "serve_batch_occupancy",
+    "true requests / bucket batch per executed batch")
+_retries_total = obs.registry.counter(
+    "serve_retries_total", "transient execution failures retried")
+
+_server_ids = itertools.count()
+
+
+class RequestShed(RuntimeError):
+    """Request dropped by admission control (queue full or deadline)."""
+
+
+class ServerClosed(RuntimeError):
+    """submit() after stop()."""
+
+
+@dataclasses.dataclass
+class _Pending:
+    tokens: np.ndarray
+    length: int
+    deadline: float | None          # absolute perf_counter time
+    future: Future
+    t_submit: float
+    t_dequeue: float = 0.0
+
+
+class Server:
+    """Async request queue + continuous batcher over bucket programs.
+
+    ``forward(state, tokens)`` is the jit-able request scorer: ``tokens``
+    is ``(batch, length) int32`` (right-padded with ``pad_id``), the
+    output's leading axes are ``(batch, length, ...)`` and each row must
+    depend only on its own tokens (true for causal models and for
+    row-independent SpMM scoring) — that independence is what makes a
+    packed request bit-identical to a solo forward at the same bucket
+    shape.  ``state`` is the parameter pytree; ``warmup`` re-attaches
+    engine-cached SpMM plans to every sparse leaf before compiling, so
+    plans are built once, outside every program.
+
+    ``submit`` is thread-safe and non-blocking: it returns a
+    ``concurrent.futures.Future`` resolving to the request's output rows
+    (trimmed to its true length) or raising :class:`RequestShed` /
+    the execution error.
+    """
+
+    def __init__(self, forward: Callable, state, ladder: BucketLadder, *,
+                 queue_depth: int = 256, batch_window_s: float = 0.002,
+                 default_deadline_s: float | None = None,
+                 retry_attempts: int = 3, retry_backoff_s: float = 0.05,
+                 transient: tuple = (OSError,), pad_id: int = 0,
+                 trim: bool = True, poll_s: float = 0.05,
+                 name: str | None = None):
+        self.ladder = ladder
+        self.state = state
+        self.queue_depth = queue_depth
+        self.batch_window_s = batch_window_s
+        self.default_deadline_s = default_deadline_s
+        self.retry_attempts = retry_attempts
+        self.retry_backoff_s = retry_backoff_s
+        self.transient = transient
+        self.pad_id = pad_id
+        self.trim = trim
+        self.name = name if name is not None else \
+            f"server{next(_server_ids)}"
+        self.programs = ProgramCache(name=f"{self.name}.programs")
+        self._jitted = jax.jit(forward)
+        self._q: _queue.Queue = _queue.Queue(maxsize=queue_depth)
+        self._poll_s = poll_s
+        self._stop = threading.Event()
+        self._closed = False
+        self._thread: threading.Thread | None = None
+        self._warm_misses: int | None = None
+
+    # ------------------------------------------------------------ warmup ---
+
+    def _program(self, batch: int, length: int):
+        def build():
+            tok = jax.ShapeDtypeStruct((batch, length), jnp.int32)
+            return self._jitted.lower(self.state, tok).compile()
+
+        return self.programs.get((batch, length), build)
+
+    def warmup(self) -> "Server":
+        """Build every SpMM plan and compile every bucket program.
+
+        Idempotent; records the post-warmup miss count so
+        :meth:`recompiles` can assert the steady state compiled nothing.
+        """
+        shapes = self.ladder.shapes()
+        with _trace.span("serve.warmup", cat="serve",
+                         buckets=len(shapes)):
+            self.state = ensure_spmm_plans(self.state)
+            for b, s in shapes:
+                self._program(b, s)
+        self._warm_misses = self.programs.stats().misses
+        return self
+
+    def recompiles(self) -> int:
+        """Program-cache misses since :meth:`warmup` (0 = the bucket
+        ladder covered every served shape)."""
+        warm = self._warm_misses if self._warm_misses is not None else 0
+        return self.programs.stats().misses - warm
+
+    def probe(self, batch: int, length: int) -> float:
+        """One warm call at a bucket shape; returns seconds (rate
+        calibration for load generators)."""
+        prog = self._program(batch, length)
+        tok = jnp.full((batch, length), self.pad_id, jnp.int32)
+        t0 = time.perf_counter()
+        jax.block_until_ready(self._call_program(prog, tok))
+        return time.perf_counter() - t0
+
+    # ------------------------------------------------------- client side ---
+
+    def submit(self, tokens, *, deadline_s: float | None = None) -> Future:
+        """Enqueue one request (a 1-D int token array) for batching.
+
+        Sheds immediately (future raises :class:`RequestShed`) when the
+        queue is at depth; ``deadline_s`` (default: the server's
+        ``default_deadline_s``) sheds at dequeue when already expired.
+        """
+        if self._closed:
+            raise ServerClosed(f"server {self.name} is stopped")
+        tokens = np.asarray(tokens)
+        if tokens.ndim != 1:
+            raise ValueError(
+                f"submit takes one request — a 1-D token array — got "
+                f"shape {tokens.shape}")
+        length = int(tokens.shape[0])
+        self.ladder.length_bucket(length)       # admission: length cap
+        now = time.perf_counter()
+        limit = deadline_s if deadline_s is not None \
+            else self.default_deadline_s
+        p = _Pending(tokens=tokens.astype(np.int32), length=length,
+                     deadline=None if limit is None else now + limit,
+                     future=Future(), t_submit=now)
+        try:
+            self._q.put_nowait(p)
+        except _queue.Full:
+            self._shed(p, f"queue full (depth {self.queue_depth})")
+            return p.future
+        if _trace._enabled:
+            _trace.event("serve.enqueue", cat="serve", length=length,
+                         depth=self._q.qsize())
+        return p.future
+
+    # ---------------------------------------------------------- batcher ---
+
+    def start(self) -> "Server":
+        """Warm up (if not yet) and launch the batcher thread."""
+        if self._thread is not None:
+            raise RuntimeError(f"server {self.name} already started")
+        if self._warm_misses is None:
+            self.warmup()
+        self._stop.clear()
+        self._thread = threading.Thread(
+            target=self._loop, name=f"{self.name}.batcher", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        """Stop accepting requests, drain the queue, join the batcher."""
+        self._closed = True
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _loop(self) -> None:
+        while True:
+            try:
+                first = self._q.get(timeout=self._poll_s)
+            except _queue.Empty:
+                if self._stop.is_set():
+                    return
+                continue
+            first.t_dequeue = time.perf_counter()
+            batch = [first]
+            # Continuous assembly: after the first request, keep
+            # draining until the window closes or the largest batch
+            # bucket fills — the window trades a bounded latency add
+            # for occupancy under bursty arrivals.
+            t_close = first.t_dequeue + self.batch_window_s
+            while len(batch) < self.ladder.max_batch:
+                left = t_close - time.perf_counter()
+                try:
+                    p = (self._q.get_nowait() if left <= 0
+                         else self._q.get(timeout=left))
+                except _queue.Empty:
+                    break
+                p.t_dequeue = time.perf_counter()
+                batch.append(p)
+            self._serve_batch(batch)
+
+    def _serve_batch(self, batch: list[_Pending]) -> None:
+        now = time.perf_counter()
+        live: list[_Pending] = []
+        for p in batch:
+            if p.deadline is not None and now > p.deadline:
+                self._shed(p, "deadline expired before execution")
+            else:
+                live.append(p)
+        if not live:
+            return
+        for pb in pack([p.length for p in live], self.ladder):
+            self._execute(pb.batch, pb.length,
+                          [live[i] for i in pb.indices])
+
+    def _execute(self, bb: int, lb: int, ps: list[_Pending]) -> None:
+        t_asm0 = time.perf_counter()
+        with _trace.span("serve.batch", cat="serve", batch=bb, length=lb,
+                         fill=len(ps)):
+            tok = np.full((bb, lb), self.pad_id, np.int32)
+            for i, p in enumerate(ps):
+                tok[i, :p.length] = p.tokens
+            tok = jnp.asarray(tok)
+            program = self._program(bb, lb)
+        _batch_occupancy.observe(len(ps) / bb)
+        t_exec0 = time.perf_counter()
+        try:
+            with _trace.span("serve.execute", cat="serve", batch=bb,
+                             length=lb):
+                out = fault.retry(
+                    lambda: jax.block_until_ready(
+                        self._call_program(program, tok)),
+                    attempts=self.retry_attempts,
+                    backoff=self.retry_backoff_s,
+                    exceptions=self.transient, on_retry=self._on_retry)
+        except Exception as e:
+            # Futures must never hang: the whole bucket batch fails
+            # together once retries are exhausted.
+            for p in ps:
+                _requests_total.labels(outcome="error").inc()
+                p.future.set_exception(e)
+            return
+        t_done = time.perf_counter()
+        for i, p in enumerate(ps):
+            _latency.labels(phase="queue_wait").observe(
+                (p.t_dequeue - p.t_submit) * 1e6)
+            _latency.labels(phase="assemble").observe(
+                (t_exec0 - t_asm0) * 1e6)
+            _latency.labels(phase="execute").observe(
+                (t_done - t_exec0) * 1e6)
+            _latency.labels(phase="total").observe(
+                (t_done - p.t_submit) * 1e6)
+            _requests_total.labels(outcome="ok").inc()
+            p.future.set_result(self._slice(out, i, p.length))
+
+    def _call_program(self, program, tokens):
+        """One compiled-program invocation (override point for fault
+        injection in tests)."""
+        return program(self.state, tokens)
+
+    def _slice(self, out, i: int, length: int):
+        def g(x):
+            x = x[i]
+            if self.trim and getattr(x, "ndim", 0) >= 1:
+                x = x[:length]
+            return x
+
+        return jax.tree.map(g, out)
+
+    def _on_retry(self, attempt: int, exc: Exception) -> None:
+        _retries_total.inc()
+        if _trace._enabled:
+            _trace.event("serve.retry", cat="serve", attempt=attempt,
+                         error=type(exc).__name__)
+
+    def _shed(self, p: _Pending, why: str) -> None:
+        _requests_total.labels(outcome="shed").inc()
+        if _trace._enabled:
+            _trace.event("serve.shed", cat="serve", length=p.length,
+                         why=why)
+        p.future.set_exception(RequestShed(why))

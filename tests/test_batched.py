@@ -382,7 +382,8 @@ def test_microbatched_runner():
     np.testing.assert_allclose(np.asarray(out["out"]),
                                np.asarray(x) * 2 + 1)
     assert calls == [(2, 2)] * 3
+    strict = R.microbatched(counted, 2, argnums=(0,), pad=False)
     with pytest.raises(ValueError, match="does not divide"):
-        run(jnp.ones((5, 2)), y)
+        strict(jnp.ones((5, 2)), y)
     with pytest.raises(ValueError, match="positive"):
         R.microbatched(fn, 0)

@@ -1,0 +1,76 @@
+"""Property tests for the serving bucket packer and load generator.
+
+Hypothesis-driven (skipped wholesale where hypothesis is absent, like
+the other *_property modules): over arbitrary ladders and request
+streams, ``pack`` serves every request exactly once in FIFO order
+within its length bucket, batch rounding is exactly the ladder's rung,
+padding waste stays < 2x per axis above the ladder floor, and Poisson
+schedules are bit-deterministic under their seed.  Fixed-seed twins of
+the core invariants run unconditionally in tests/test_serving.py.
+"""
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.serving import BucketLadder, loadgen, pack
+
+_ladders = st.builds(
+    BucketLadder.from_max,
+    st.integers(min_value=1, max_value=200),
+    st.integers(min_value=1, max_value=12),
+    min_len=st.integers(min_value=1, max_value=16))
+
+
+@settings(deadline=None, max_examples=60)
+@given(st.data(), _ladders)
+def test_pack_serves_every_request_exactly_once(data, lad):
+    lengths = data.draw(st.lists(
+        st.integers(min_value=1, max_value=lad.max_len), max_size=40))
+    pbs = pack(lengths, lad)
+    served = [i for pb in pbs for i in pb.indices]
+    assert sorted(served) == list(range(len(lengths)))
+
+
+@settings(deadline=None, max_examples=60)
+@given(st.data(), _ladders)
+def test_pack_fifo_within_length_bucket(data, lad):
+    lengths = data.draw(st.lists(
+        st.integers(min_value=1, max_value=lad.max_len),
+        min_size=1, max_size=40))
+    by_bucket = {}
+    for pb in pack(lengths, lad):
+        by_bucket.setdefault(pb.length, []).extend(pb.indices)
+    for lb, idxs in by_bucket.items():
+        assert idxs == sorted(idxs)
+        assert idxs == [i for i, n in enumerate(lengths)
+                        if lad.length_bucket(n) == lb]
+
+
+@settings(deadline=None, max_examples=60)
+@given(st.data(), _ladders)
+def test_pack_waste_bounded_by_ladder(data, lad):
+    lengths = data.draw(st.lists(
+        st.integers(min_value=1, max_value=lad.max_len),
+        min_size=1, max_size=40))
+    for pb in pack(lengths, lad):
+        assert len(pb.indices) <= pb.batch <= lad.max_batch
+        assert pb.batch == lad.batch_bucket(len(pb.indices))
+        for i in pb.indices:
+            assert pb.length == lad.length_bucket(lengths[i])
+            # pow-2 rungs: < 2x waste above the ladder floor
+            if lengths[i] >= lad.lengths[0]:
+                assert pb.length < 2 * lengths[i]
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.integers(min_value=0, max_value=2 ** 31))
+def test_poisson_schedule_deterministic(seed):
+    a = loadgen.poisson_schedule(12, 50.0, (1, 32), seed=seed)
+    b = loadgen.poisson_schedule(12, 50.0, (1, 32), seed=seed)
+    assert a == b
+    assert all(x.at_s <= y.at_s for x, y in zip(a, a[1:]))
+    assert all(1 <= x.length <= 32 for x in a)
